@@ -1,0 +1,65 @@
+"""Figures 15-18: deep-edge (OpenWrt-class) node and feature scalability.
+
+Uses the deep-edge cost profile (slow crypto, heavyweight per-request
+stack) with symmetric-key pre-negotiation (§5.8) exactly as the paper's
+busybox implementation does. SAF and INSEC are the ported baselines; BON
+was not implemented on this platform in the paper either.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.costs import DEEP_EDGE
+from repro.core.protocol import run_safe_round
+
+
+def run() -> dict:
+    out = {"series": {}}
+    # Figs. 15-16: node scalability at 1 and 20 features
+    for V in (1, 20):
+        per_mode = {}
+        for mode in ("insec", "saf", "safe"):
+            ts = []
+            for n in (3, 6, 9, 12):
+                vals = np.random.RandomState(n).uniform(-1, 1, (n, V)) \
+                    .astype(np.float32)
+                ts.append(run_safe_round(vals, mode=mode, cost=DEEP_EDGE,
+                                         symmetric_only=True).virtual_time)
+            per_mode[mode] = ts
+            emit(f"fig15-16/{mode}/f{V}/n12", ts[-1] * 1e6,
+                 f"virtual_s={ts[-1]:.2f}")
+        out["series"][f"nodes_f{V}"] = per_mode
+    # Figs. 17-18: feature scalability at 3 and 12 nodes
+    for n in (3, 12):
+        per_mode = {}
+        for mode in ("insec", "saf", "safe"):
+            ts = []
+            for V in (1, 5, 10, 20, 50):
+                vals = np.random.RandomState(V).uniform(-1, 1, (n, V)) \
+                    .astype(np.float32)
+                ts.append(run_safe_round(vals, mode=mode, cost=DEEP_EDGE,
+                                         symmetric_only=True).virtual_time)
+            per_mode[mode] = ts
+        out["series"][f"features_n{n}"] = per_mode
+        emit(f"fig17-18/n{n}", 0.0,
+             f"safe_f50={per_mode['safe'][-1]:.2f}s")
+    # paper headline: SAFE ~2x INSEC at 3 nodes, ~4.5x at 12 (1 feature)
+    s = out["series"]["nodes_f1"]
+    out["overhead_vs_insec"] = {
+        "n3": s["safe"][0] / s["insec"][0],
+        "n12": s["safe"][-1] / s["insec"][-1],
+    }
+    emit("fig15/overhead", 0.0,
+         f"n3={out['overhead_vs_insec']['n3']:.1f}x "
+         f"n12={out['overhead_vs_insec']['n12']:.1f}x")
+    save_json("constrained", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

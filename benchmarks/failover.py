@@ -1,0 +1,60 @@
+"""Figures 13-14: failover overhead, SAFE vs BON.
+
+Protocol: complete the key exchange, kill nodes 4-6, run the aggregation,
+and compare against a no-failure run with the same number of *completing*
+nodes (the paper's footnote-4 normalization). Failover overhead = total
+time − the failure-detection timeout (progress timeouts for SAFE, the
+global dropout wait for BON).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.bon_protocol import run_bon_round
+from repro.core.protocol import run_safe_round
+
+FAILED = (4, 5, 6)
+TIMEOUT = 1.0  # progress timeout per failed node (SAFE); summed for BON
+
+
+def run() -> dict:
+    node_counts = (9, 12, 18, 24, 30, 36)
+    out = {"nodes": list(node_counts), "failed": list(FAILED), "series": {}}
+    f = len(FAILED)
+    safe, safe_fo, bon, bon_fo = [], [], [], []
+    for n in node_counts:
+        rng = np.random.RandomState(n)
+        vals_ok = rng.uniform(-1, 1, (n - f, 1)).astype(np.float32)
+        vals_f = rng.uniform(-1, 1, (n, 1)).astype(np.float32)
+        safe.append(run_safe_round(vals_ok).virtual_time)
+        r = run_safe_round(vals_f, failed_nodes=FAILED,
+                           progress_timeout=TIMEOUT)
+        safe_fo.append(r.virtual_time - f * TIMEOUT)  # subtract timeouts
+        bon.append(run_bon_round(vals_ok).virtual_time)
+        rb = run_bon_round(vals_f, failed_nodes=FAILED,
+                           global_timeout=f * TIMEOUT)
+        bon_fo.append(rb.virtual_time - f * TIMEOUT)
+    out["series"] = {"safe": safe, "safe_failover": safe_fo,
+                     "bon": bon, "bon_failover": bon_fo}
+    for i, n in enumerate(node_counts):
+        emit(f"fig13/n{n}", safe_fo[i] * 1e6,
+             f"safe={safe[i]:.3f} safe_fo={safe_fo[i]:.3f} "
+             f"bon={bon[i]:.3f} bon_fo={bon_fo[i]:.3f}")
+    # headline ratios (paper @36: 56x no-failover, 70x with)
+    i36 = node_counts.index(36)
+    out["ratio_36"] = {"bon_over_safe": bon[i36] / safe[i36],
+                       "bon_fo_over_safe_fo": bon_fo[i36] / safe_fo[i36]}
+    emit("fig13/ratio36", 0.0,
+         f"bon/safe={out['ratio_36']['bon_over_safe']:.1f}x "
+         f"bon_fo/safe_fo={out['ratio_36']['bon_fo_over_safe_fo']:.1f}x")
+    save_json("failover", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Figures 10-12: aggregation time vs feature-vector size.
+
+Fixed node counts (3, 15 with BON; 100 SAFE-only), features 1..10000.
+Shows the paper's crossover: SAFE beats INSEC at large feature counts
+because the binary masked payload beats the raw-JSON baseline (modeled
+via the per-byte cost), and BON's pad expansion scales with n·V.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.bon_protocol import run_bon_round
+from repro.core.protocol import run_safe_round
+
+FEATURES = (1, 10, 100, 1000, 10000)
+
+
+def run(nodes: int, include_bon: bool) -> dict:
+    out = {"nodes": nodes, "features": list(FEATURES), "series": {}}
+    for mode in ("insec", "saf", "safe"):
+        ts = []
+        for V in FEATURES:
+            vals = np.random.RandomState(V).uniform(-1, 1, (nodes, V)) \
+                .astype(np.float32)
+            ts.append(run_safe_round(vals, mode=mode).virtual_time)
+        out["series"][mode] = ts
+        emit(f"fig10-12/{mode}/n{nodes}/f{FEATURES[-1]}", ts[-1] * 1e6,
+             f"virtual_s={ts[-1]:.4f}")
+    if include_bon:
+        ts = []
+        for V in FEATURES:
+            vals = np.random.RandomState(V).uniform(-1, 1, (nodes, V)) \
+                .astype(np.float32)
+            ts.append(run_bon_round(vals).virtual_time)
+        out["series"]["bon"] = ts
+        emit(f"fig10-12/bon/n{nodes}/f{FEATURES[-1]}", ts[-1] * 1e6,
+             f"virtual_s={ts[-1]:.4f}")
+    # crossover feature count between SAFE and INSEC (paper: ~2000 @15)
+    cross = None
+    for V, ti, ts_ in zip(FEATURES, out["series"]["insec"],
+                          out["series"]["safe"]):
+        if ts_ < ti:
+            cross = V
+            break
+    out["safe_beats_insec_at"] = cross
+    emit(f"fig10-12/crossover/n{nodes}", 0.0, f"features={cross}")
+    save_json(f"feature_scalability_n{nodes}", out)
+    return out
+
+
+def main():
+    run(3, include_bon=True)
+    run(15, include_bon=True)
+    run(100, include_bon=False)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""§5.10 hierarchical federation: child controllers post anonymized group
+averages to a parent.
+
+Compares one flat 24-learner chain against 2 child controllers × 12
+learners with a parent averaging the two (already anonymized) results —
+the paper's answer once subgrouping saturates a single coordinator.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.controller import Controller, HierarchicalController
+from repro.core.costs import EDGE
+from repro.core.protocol import run_safe_round
+
+
+def run() -> dict:
+    n, V = 24, 64
+    vals = np.random.RandomState(0).uniform(-1, 1, (n, V)).astype(np.float32)
+
+    flat = run_safe_round(vals, mode="safe")
+
+    # two independent child federations run in parallel (separate
+    # controllers — wall time is the max of the two)
+    left = run_safe_round(vals[:12], mode="safe")
+    right = run_safe_round(vals[12:], mode="safe")
+    parent_avg = np.mean([left.average, right.average], axis=0)
+    hier_time = max(left.virtual_time, right.virtual_time) + EDGE.message(4 * V)
+    hier_msgs = (left.stats.aggregation_total + right.stats.aggregation_total
+                 + 2)  # two child->parent posts
+
+    err_flat = float(np.max(np.abs(flat.average - vals.mean(0))))
+    err_hier = float(np.max(np.abs(parent_avg - vals.mean(0))))
+    out = {
+        "flat": {"virtual_s": flat.virtual_time,
+                 "messages": flat.stats.aggregation_total, "err": err_flat},
+        "hierarchical": {"virtual_s": hier_time, "messages": hier_msgs,
+                         "err": err_hier},
+        "speedup": flat.virtual_time / hier_time,
+    }
+    emit("hierarchical/flat_n24", flat.virtual_time * 1e6,
+         f"msgs={flat.stats.aggregation_total}")
+    emit("hierarchical/2x12", hier_time * 1e6,
+         f"msgs={hier_msgs} speedup={out['speedup']:.2f}x err={err_hier:.1e}")
+    save_json("hierarchical", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""§5.2-5.5 message-complexity table: measured counts vs closed forms.
+
+  basic:          4n
+  progress fail:  4(n−f) + 2f       (n−f completing nodes, f reposts)
+  subgroups:      4n + g
+  init failover:  ≤ (i+1)(4n + 2f + i·n)
+  BON:            O(n²) share relays
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.bon_protocol import run_bon_round
+from repro.core.protocol import run_safe_round
+
+
+def run() -> dict:
+    rows = []
+    for n in (3, 8, 16, 32, 64):
+        vals = np.random.RandomState(n).uniform(-1, 1, (n, 2)) \
+            .astype(np.float32)
+        got = run_safe_round(vals).stats.aggregation_total
+        rows.append({"case": f"basic n={n}", "measured": got,
+                     "formula": 4 * n, "match": got == 4 * n})
+    for n, f in ((10, 2), (16, 3)):
+        failed = list(range(4, 4 + f))
+        vals = np.random.RandomState(n).uniform(-1, 1, (n, 2)) \
+            .astype(np.float32)
+        got = run_safe_round(vals, failed_nodes=failed).stats.aggregation_total
+        want = 4 * (n - f) + 2 * f
+        rows.append({"case": f"failover n={n} f={f}", "measured": got,
+                     "formula": want, "match": got == want})
+    for n, g in ((12, 3), (16, 4)):
+        vals = np.random.RandomState(n).uniform(-1, 1, (n, 2)) \
+            .astype(np.float32)
+        got = run_safe_round(vals, subgroups=g).stats.aggregation_total
+        want = 4 * n + g
+        rows.append({"case": f"subgroups n={n} g={g}", "measured": got,
+                     "formula": want, "match": got == want})
+    n = 10
+    vals = np.random.RandomState(n).uniform(-1, 1, (n, 2)).astype(np.float32)
+    got = run_safe_round(vals, initiator_fails=True,
+                         aggregation_timeout=2.0).stats.aggregation_total
+    bound = 2 * (4 * n + n)
+    rows.append({"case": f"init-failover n={n} i=1", "measured": got,
+                 "formula": f"<= {bound}", "match": got <= bound})
+    for n in (8, 16, 32):
+        vals = np.random.RandomState(n).uniform(-1, 1, (n, 2)) \
+            .astype(np.float32)
+        got = run_bon_round(vals).messages
+        rows.append({"case": f"bon n={n}", "measured": got,
+                     "formula": "O(n^2)", "match": True})
+    for r in rows:
+        emit(f"messages/{r['case'].replace(' ', '_')}", float(r["measured"]),
+             f"formula={r['formula']} match={r['match']}")
+    ok = all(r["match"] for r in rows)
+    emit("messages/all_match", 0.0, str(ok))
+    save_json("messages", {"rows": rows, "all_match": ok})
+    return {"rows": rows}
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Figures 6-9: aggregation time vs number of nodes.
+
+INSEC / SAF / SAFE (+BON up to its practical limit) on the edge cost
+model; both 1 feature (Figs. 6-7) and 10000 features (Figs. 8-9).
+Reported: simulated protocol time (the paper's y-axis) and host wall
+time of the real masked arithmetic.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, wall
+from repro.core.bon_protocol import run_bon_round
+from repro.core.protocol import run_safe_round
+
+
+def run(features: int = 1, max_nodes: int = 100, bon_max: int = 15,
+        repeats: int = 3) -> dict:
+    nodes = [n for n in (3, 5, 8, 10, 15, 24, 36, 50, 75, 100)
+             if n <= max_nodes]
+    out = {"features": features, "nodes": nodes, "series": {}}
+    for mode in ("insec", "saf", "safe"):
+        vtimes, wtimes = [], []
+        for n in nodes:
+            vals = np.random.RandomState(n).uniform(-1, 1, (n, features)) \
+                .astype(np.float32)
+            res = run_safe_round(vals, mode=mode)
+            vtimes.append(res.virtual_time)
+            wtimes.append(wall(lambda: run_safe_round(vals, mode=mode),
+                               repeats))
+        out["series"][mode] = {"virtual_s": vtimes, "wall_s": wtimes}
+        emit(f"fig6-9/{mode}/n{nodes[-1]}/f{features}",
+             vtimes[-1] * 1e6, f"virtual_s={vtimes[-1]:.4f}")
+    bon_nodes = [n for n in nodes if n <= bon_max]
+    vtimes = []
+    for n in bon_nodes:
+        vals = np.random.RandomState(n).uniform(-1, 1, (n, features)) \
+            .astype(np.float32)
+        vtimes.append(run_bon_round(vals).virtual_time)
+    out["series"]["bon"] = {"nodes": bon_nodes, "virtual_s": vtimes}
+    emit(f"fig6-9/bon/n{bon_nodes[-1]}/f{features}", vtimes[-1] * 1e6,
+         f"virtual_s={vtimes[-1]:.4f}")
+    # headline ratios (paper: SAFE ~3x INSEC, BON ~40x INSEC @15 nodes/1f)
+    i15 = out["series"]["insec"]["virtual_s"][nodes.index(15)]
+    s15 = out["series"]["safe"]["virtual_s"][nodes.index(15)]
+    if 15 in bon_nodes:
+        b15 = vtimes[bon_nodes.index(15)]
+        out["ratios_at_15"] = {"safe_over_insec": s15 / i15,
+                               "bon_over_insec": b15 / i15}
+        emit(f"fig6/ratio15/f{features}", 0.0,
+             f"safe/insec={s15/i15:.1f}x bon/insec={b15/i15:.1f}x")
+    save_json(f"node_scalability_f{features}", out)
+    return out
+
+
+def main():
+    run(features=1)
+    run(features=10000, max_nodes=36, repeats=1)
+
+
+if __name__ == "__main__":
+    main()

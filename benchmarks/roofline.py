@@ -1,0 +1,136 @@
+"""§Roofline: derive the three roofline terms from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes / (chips × 819e9 B/s HBM)
+    collective term = collective_bytes / (chips × 50e9 B/s ICI link)
+
+cost_analysis() on the partitioned module is already per-device, so the
+per-chip division is implicit; collective bytes come from the HLO parse
+(dryrun.parse_collectives) which is also per-device.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens processed
+per step; the ratio MODEL/HLO exposes remat and redundant compute.
+
+Writes results/roofline.md (the EXPERIMENTS.md §Roofline table) and
+prints CSV rows.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json
+
+PEAK_FLOPS = 197e12  # TPU v5e bf16 / chip
+HBM_BW = 819e9       # B/s / chip
+ICI_BW = 50e9        # B/s / link
+
+TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,      # one token per sequence
+    "long_500k": 1,
+}
+TRAIN_MULT = {"train_4k": 3.0}  # fwd+bwd ≈ 3x forward flops
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "pod512" else 256
+    flops = rec["cost"]["flops"]                    # per device
+    bytes_ = rec["cost"]["bytes_accessed"]          # per device
+    coll = rec["collectives"]["total_bytes"]        # per device
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    n_params = rec["active_params"]
+    tokens = TOKENS[rec["shape"]]
+    mult = TRAIN_MULT.get(rec["shape"], 1.0)
+    model_flops_total = 2.0 * n_params * tokens * mult  # 2ND fwd (6ND train)
+    model_flops_dev = model_flops_total / chips
+    # CAVEAT: XLA cost_analysis counts while-loop (unit-scan) bodies ONCE,
+    # so hlo flops/bytes undercount by ~n_units for deep models. The
+    # compute term therefore uses max(HLO, analytic 6·N·D); the ratio
+    # column flags where the undercount (or remat/redundancy excess) is.
+    t_compute = max(flops, model_flops_dev) / PEAK_FLOPS
+    terms["compute"] = t_compute
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_dev / flops if flops else 0.0
+
+    moves = {
+        "compute": "increase arithmetic intensity: larger per-device batch "
+                   "or less remat recompute",
+        "memory": "fuse masking ops / cast gathers to bf16 / cut activation "
+                  "re-reads (remat policy)",
+        "collective": "pipeline the chain (rotated-initiator segments), "
+                      "shard the chain vector over 'model', or subgroup",
+    }[dominant]
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh")},
+        "aggregator": rec.get("aggregator"),
+        "description": rec.get("description", ""),
+        "mem_gib": rec["memory"]["total_per_device_bytes"] / 2**30,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": model_flops_dev,
+        "hlo_flops_per_dev": flops,
+        "useful_flops_ratio": useful,
+        "move": moves,
+    }
+
+
+def run(pattern: str = "*") -> list[dict]:
+    rows = []
+    skips = []
+    for path in sorted(glob.glob(f"results/dryrun/{pattern}.json")):
+        rec = json.load(open(path))
+        row = analyze_record(rec)
+        if row is None:
+            skips.append((rec.get("arch"), rec.get("shape"),
+                          rec.get("status"), rec.get("reason", rec.get("error", ""))[:60]))
+            continue
+        rows.append(row)
+        emit(f"roofline/{row['arch']}/{row['shape']}/{row['mesh']}",
+             max(row["t_compute_s"], row["t_memory_s"],
+                 row["t_collective_s"]) * 1e6,
+             f"dom={row['dominant']} comp={row['t_compute_s']:.3f}s "
+             f"mem={row['t_memory_s']:.3f}s coll={row['t_collective_s']:.3f}s "
+             f"useful={row['useful_flops_ratio']:.2f}")
+
+    lines = [
+        "| arch | shape | mesh | mem GiB/dev | compute s | memory s | "
+        "collective s | dominant | useful FLOPs | what moves it |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['mem_gib']:.1f} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['move']} |")
+    if skips:
+        lines.append("")
+        lines.append("Skipped/failed:")
+        for s in skips:
+            lines.append(f"- {s[0]} {s[1]}: {s[2]} {s[3]}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    save_json("roofline", rows)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

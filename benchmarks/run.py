@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+persists JSON to results/benchmarks/. See DESIGN.md §9 for the
+figure-to-module index.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (constrained, device_aggregation, failover,
+                            feature_scalability, hierarchical, kernel_bench,
+                            messages, node_scalability, subgrouping)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    mods = [
+        ("node_scalability (Figs 6-9)", node_scalability.main),
+        ("feature_scalability (Figs 10-12)", feature_scalability.main),
+        ("failover (Figs 13-14)", failover.main),
+        ("constrained deep-edge (Figs 15-18)", constrained.main),
+        ("subgrouping (Figs 19-20)", subgrouping.main),
+        ("hierarchical federation (§5.10)", hierarchical.main),
+        ("messages (§5 formulas)", messages.main),
+        ("device_aggregation", device_aggregation.main),
+        ("kernel_bench", kernel_bench.main),
+    ]
+    failures = 0
+    for name, fn in mods:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# FAILED {name}: {e!r}", flush=True)
+    print(f"# done in {time.time()-t0:.1f}s, failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Cross-organizational FedAvg with SAFE weighted delta aggregation.
+
+Four organizations with non-IID data and *different dataset sizes* train
+locally; model deltas are combined with the paper's §5.6 weighted
+averaging (dataset sizes stay private) over the SAFE chain. Midway, one
+organization drops out — the §5.3 failover path keeps training going on
+the survivors.
+
+Run:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/federated_training.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import make_aggregator
+from repro.data import make_federated_batches
+from repro.models import Model
+from repro.train import make_federated_round
+
+LOCAL_STEPS = 2
+ROUNDS = 12
+FAIL_AT = 6  # org #2 goes dark after this round
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_smoke_config("internlm2-1.8b")
+    model = Model(cfg)
+    agg = make_aggregator("safe", 4, axis="data", weighted=True)
+    bundle = make_federated_round(model, agg, mesh,
+                                  local_steps=LOCAL_STEPS, local_lr=2e-3)
+    stream = make_federated_batches(cfg, 4, 2, 128)
+    params = model.init(jax.random.key(0))
+
+    # per-org dataset sizes (the §5.6 weights — never revealed)
+    weights = jnp.array([4000.0, 1000.0, 2500.0, 500.0])
+    # each org's fixed local dataset (2 rounds' worth), revisited every round
+    local_data = [
+        np.stack([np.stack([stream.learner_batch(l, e * LOCAL_STEPS + k)
+                            ["tokens"] for k in range(LOCAL_STEPS)])
+                  for l in range(4)])
+        for e in range(2)]
+    for r in range(ROUNDS):
+        toks = local_data[r % 2]
+        alive = jnp.ones(4)
+        if r >= FAIL_AT:
+            alive = alive.at[2].set(0.0)  # org 2 dropped out
+        params, m = bundle.round_fn(params, jnp.asarray(toks),
+                                    weights=weights, counter=r * (1 << 22),
+                                    alive=alive)
+        tag = " (org 2 DOWN, failover active)" if r >= FAIL_AT else ""
+        print(f"round {r:2d}: local_loss={float(m['local_loss']):.4f} "
+              f"delta={float(m['delta_norm']):.3f}{tag}")
+
+
+if __name__ == "__main__":
+    main()

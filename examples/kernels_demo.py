@@ -1,0 +1,49 @@
+"""The Pallas masking kernels, end to end: a 4-learner chain computed
+entirely with the fused TPU kernels (interpret mode on CPU), verified
+against the clear-text mean.
+
+Run: PYTHONPATH=src python examples/kernels_demo.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.fixedpoint import FixedPointCodec
+from repro.crypto.prf import derive_pair_key, keystream_pair_lanes
+from repro.kernels import chain_combine, mask_add
+
+
+def main():
+    n, V = 4, 10_000
+    rng = np.random.RandomState(0)
+    vals = [jnp.asarray(rng.uniform(-3, 3, V).astype(np.float32))
+            for _ in range(n)]
+    codec = FixedPointCodec(16)
+
+    # Round 0 (out-of-band): pairwise hop keys + the initiator's secret
+    seed = jnp.array([2024, 8, 13][:2], jnp.uint32)
+    hop_keys = [derive_pair_key(seed, i, (i + 1) % n) for i in range(n)]
+    r_key = jnp.array([0xDEAD, 0xBEEF], jnp.uint32)
+    R = keystream_pair_lanes(r_key, V, 0)
+
+    # learner 1 (initiator): fused encode+mask kernel, then add R
+    cipher = mask_add(vals[0], hop_keys[0], 0) + R
+    print(f"initiator posts {cipher.nbytes/1e6:.1f} MB ciphertext")
+
+    # learners 2..n: ONE fused kernel per hop (decrypt+add+re-encrypt)
+    for i in range(1, n):
+        cipher = chain_combine(cipher, vals[i], hop_keys[i - 1], hop_keys[i], 0)
+        print(f"learner {i+1} combined (kernel hop)")
+
+    # back at the initiator: strip the last pad and R, divide
+    total = cipher - keystream_pair_lanes(hop_keys[-1], V, 0) - R
+    avg = codec.decode(total) / n
+
+    truth = np.mean([np.asarray(v) for v in vals], axis=0)
+    err = float(np.max(np.abs(np.asarray(avg) - truth)))
+    print(f"max error vs clear-text mean: {err:.2e} "
+          f"(fixed-point resolution {1/2**16:.1e})")
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro — SAFE secure aggregation (Sandholm et al. 2021) as a
+production-grade multi-pod JAX framework.
+
+Public API surface:
+  repro.core      — SecureAggregator (safe/saf/insec/bon), protocol sim
+  repro.crypto    — Threefry PRF, fixed-point ring codec
+  repro.kernels   — Pallas TPU masking kernels (+ jnp oracles)
+  repro.models    — the 10-architecture zoo
+  repro.configs   — get_config / get_smoke_config / all_arch_ids
+  repro.train     — make_train_step, make_federated_round
+  repro.serve     — ServeEngine, make_serve_step
+  repro.launch    — production meshes, multi-pod dry-run, CLIs
+"""
+
+__version__ = "1.0.0"

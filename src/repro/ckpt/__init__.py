@@ -1,0 +1,4 @@
+"""Checkpointing: msgpack + zstd pytree snapshots."""
+from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,28 @@
+"""SAFE secure aggregation core — the paper's contribution as composable JAX.
+
+Data plane: ``chain`` (SAFE/SAF), ``bon`` (Bonawitz baseline), ``insec``
+(plain mean), unified behind ``aggregators.SecureAggregator``.
+
+Control plane: ``controller`` + ``protocol`` (message-level broker,
+learners, progress monitor, failover) — the paper's actual REST system.
+"""
+from repro.core.types import ChainConfig, RoundKeys
+from repro.core.aggregators import SecureAggregator, make_aggregator, make_round_keys
+from repro.core.chain import (
+    chain_aggregate_sequential,
+    chain_aggregate_pipelined,
+)
+from repro.core.bon import bon_aggregate
+from repro.core.insec import insec_aggregate
+
+__all__ = [
+    "ChainConfig",
+    "RoundKeys",
+    "SecureAggregator",
+    "make_aggregator",
+    "make_round_keys",
+    "chain_aggregate_sequential",
+    "chain_aggregate_pipelined",
+    "bon_aggregate",
+    "insec_aggregate",
+]

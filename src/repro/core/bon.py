@@ -1,0 +1,110 @@
+"""BON baseline — Practical Secure Aggregation (Bonawitz et al., CCS'17).
+
+Device data plane of the pairwise-masking protocol the paper compares
+against. Each learner u masks its vector with
+
+    y_u = x_u + b_u + Σ_{v>u} PRF(s_uv) − Σ_{v<u} PRF(s_uv)   (mod 2^32)
+
+where s_uv is the pairwise seed (Diffie-Hellman in the real protocol; here
+derived from the provisioning seed — see DESIGN.md §6) and b_u is the
+per-learner self-mask guarding against false-dropout unmasking. The server
+sums all y_u — pairwise pads cancel — then removes Σ b_u, which survivors
+reveal via t-of-n Shamir shares (the share plumbing lives in the
+control-plane simulation, ``core/protocol.py``; here the surviving ranks
+simply contribute their b_u streams in the unmasking round, which is the
+arithmetic the shares reconstruct).
+
+Cost signature (why SAFE wins): every rank expands n−1 pairwise PRF
+streams over the full vector — O(n·V) PRF work per rank and O(n²·V) total,
+vs O(V) per rank for SAFE's two hop pads; plus the O(n²) share traffic in
+the control plane.
+
+Dropout (alive bitmap): for a dead learner v, every survivor u reveals its
+pairwise seed s_uv so the server can recompute and cancel v's pads that
+are baked into the survivors' y_u. Arithmetic below mirrors that: dead
+ranks contribute nothing, and survivors' pads referencing dead ranks are
+explicitly recomputed and subtracted (this is why BON failover touches all
+remaining nodes — paper §2 point 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto.fixedpoint import FixedPointCodec
+from repro.crypto.prf import derive_key, derive_pair_key, keystream_pair_lanes
+from repro.core.types import ChainConfig, RoundKeys
+
+_TAG_PAIRWISE = 0x42  # 'B'
+_TAG_SELFMASK = 0x62  # 'b'
+
+
+def bon_aggregate(
+    values: jax.Array,
+    keys: RoundKeys,
+    cfg: ChainConfig,
+    alive: jax.Array | None = None,
+) -> jax.Array:
+    """BON secure mean over the learner axis (per-rank, inside shard_map)."""
+    n = cfg.num_learners
+    axis = cfg.axis
+    rank = jax.lax.axis_index(axis)
+    codec = FixedPointCodec(cfg.scale_bits)
+
+    if alive is None:
+        alive = jnp.ones((n,), jnp.float32)
+    alive = jnp.asarray(alive, jnp.float32)
+    my_alive = alive[rank]
+
+    V = values.shape[0]
+    ev = codec.encode(values) * my_alive.astype(jnp.uint32)
+
+    pair_seed = derive_key(keys.provisioning_seed, _TAG_PAIRWISE)
+    base = jnp.asarray(keys.counter_base, jnp.uint32)
+
+    # Pairwise masks: O(n) keystreams of length V *per rank* — the
+    # quadratic total work that dominates BON's scaling (Figs. 6, 8).
+    masked = ev
+    for v in range(n):
+        # s_uv is symmetric: both ends derive the same key for the
+        # unordered pair (min, max); the sign depends on the order.
+        lo = jnp.minimum(rank, v)
+        hi = jnp.maximum(rank, v)
+        k_uv = derive_pair_key(pair_seed, lo, hi)
+        pad = keystream_pair_lanes(k_uv, V, base)
+        sign_pos = rank < v  # +pad if u < v else -pad
+        not_self = rank != v
+        # Pads involving a dead peer are still *applied* by survivors
+        # (they were applied before the dropout was known) …
+        contrib = jnp.where(sign_pos, pad, jnp.uint32(0) - pad)
+        masked = masked + jnp.where(not_self & (my_alive > 0), contrib, jnp.uint32(0))
+
+    # Self-mask b_u.
+    b_key = derive_key(keys.learner_seed, _TAG_SELFMASK)
+    b_u = keystream_pair_lanes(b_key, V, base)
+    masked = masked + jnp.where(my_alive > 0, b_u, jnp.uint32(0))
+
+    # Round 3: server sums the posted y_u. Pairwise pads between two
+    # *live* ranks cancel in the sum.
+    y_sum = jax.lax.psum(masked, axis)
+
+    # Round 4 (unmasking): survivors reveal Shamir shares of (a) b_u for
+    # every live u, (b) s_uv for every dead v. The reconstructed streams
+    # are subtracted server-side; arithmetically:
+    correction = jnp.where(my_alive > 0, b_u, jnp.uint32(0))
+    for v in range(n):
+        lo = jnp.minimum(rank, v)
+        hi = jnp.maximum(rank, v)
+        k_uv = derive_pair_key(pair_seed, lo, hi)
+        pad = keystream_pair_lanes(k_uv, V, base)
+        sign_pos = rank < v
+        dead_peer = (alive[v] <= 0) & (rank != v) & (my_alive > 0)
+        contrib = jnp.where(sign_pos, pad, jnp.uint32(0) - pad)
+        correction = correction + jnp.where(dead_peer, contrib, jnp.uint32(0))
+    total = y_sum - jax.lax.psum(correction, axis)
+
+    count = jnp.maximum(jnp.sum(alive), 1.0)
+    avg = codec.decode_mean(total, count)
+    if cfg.pod_axis is not None:
+        avg = jax.lax.pmean(avg, cfg.pod_axis)
+    return avg

@@ -1,0 +1,275 @@
+"""The SAFE controller — a message broker with progress monitoring.
+
+Faithful Python port of the paper's Flask controller (Appendix A): it
+stores opaque ciphertext messages until consumed, tracks per-group
+progress, orchestrates reposts after timeouts, re-elects initiators, and
+distributes the final average. It never decrypts, never aggregates
+(except averaging the already-anonymized subgroup averages, §5.5), and
+never holds key material — the paper's "mere message broker".
+
+Used by the discrete-event protocol simulation (``core/protocol.py``) and
+by the paper-figure benchmarks. Every client-visible operation increments
+the message counters that validate §5's closed-form counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MessageStats:
+    """Client->controller request counters, by operation."""
+
+    post_aggregate: int = 0
+    check_aggregate: int = 0
+    get_aggregate: int = 0
+    post_average: int = 0
+    get_average: int = 0
+    should_initiate: int = 0
+    register_key: int = 0
+    get_key: int = 0
+
+    @property
+    def aggregation_total(self) -> int:
+        """Messages in the aggregation itself (paper's 4n count excludes
+        the one-time Round-0 key exchange, §5.2)."""
+        return (
+            self.post_aggregate
+            + self.check_aggregate
+            + self.get_aggregate
+            + self.post_average
+            + self.get_average
+            + self.should_initiate
+        )
+
+    @property
+    def key_exchange_total(self) -> int:
+        return self.register_key + self.get_key
+
+
+@dataclasses.dataclass
+class _Posting:
+    """A stored ciphertext message (opaque to the controller)."""
+
+    payload: Any
+    from_node: int
+    time: float
+
+
+class Controller:
+    """In-process broker implementing the paper's six operations.
+
+    All state is per-group (paper §5.5); group 0 is the default. The
+    controller knows chain order only as an opaque node-id list per group
+    (it must, to pick repost targets — exactly as in the paper where it
+    "requests the sending node to re-encrypt and resend to a new target").
+    """
+
+    def __init__(self, groups: Dict[int, list[int]], aggregation_timeout: float = 30.0):
+        self.groups = {g: list(nodes) for g, nodes in groups.items()}
+        self.aggregation_timeout = aggregation_timeout
+        self.stats = MessageStats()
+        # group -> node -> _Posting
+        self._aggregates: Dict[int, Dict[int, _Posting]] = {g: {} for g in groups}
+        # group -> node -> {"status": ...} (repost/consumed signal per §A)
+        self._repost: Dict[int, Dict[int, dict]] = {g: {} for g in groups}
+        # group -> {"average": vec, "weight_avg": float, "posted": int}
+        self._average: Dict[int, Optional[dict]] = {g: None for g in groups}
+        # group -> count of learners that successfully posted (for §5.3's
+        # "initiator is informed how many nodes posted")
+        self._posted: Dict[int, int] = {g: 0 for g in groups}
+        self._skipped: Dict[int, set] = {g: set() for g in groups}
+        self._initiator: Dict[int, Optional[int]] = {g: None for g in groups}
+        self._round_start: Dict[int, float] = {g: 0.0 for g in groups}
+        self._keys: Dict[int, Any] = {}
+        # Registered public/symmetric keys: node -> key blob (opaque).
+        self._global_average: Optional[dict] = None
+
+    # ------------------------------------------------------------------
+    # Round 0: key exchange (2 messages per node: register + retrieve)
+    # ------------------------------------------------------------------
+    def register_key(self, node: int, key_blob: Any) -> None:
+        self.stats.register_key += 1
+        self._keys[node] = key_blob
+
+    def get_key(self, node: int) -> Any:
+        self.stats.get_key += 1
+        return self._keys.get(node)
+
+    # ------------------------------------------------------------------
+    # Round 1: chain aggregation
+    # ------------------------------------------------------------------
+    def post_aggregate(self, from_node: int, to_node: int, payload: Any,
+                       group: int = 0, now: float = 0.0) -> None:
+        self.stats.post_aggregate += 1
+        if self._initiator[group] is None:
+            self._initiator[group] = from_node
+            self._round_start[group] = now
+        self._aggregates[group][to_node] = _Posting(payload, from_node, now)
+        self._posted[group] += 1
+        # Poster will long-poll check_aggregate; target will long-poll
+        # get_aggregate — mark the poster's check as pending.
+        self._repost[group][from_node] = {"status": "pending"}
+
+    def try_get_aggregate(self, node: int, group: int = 0) -> Optional[dict]:
+        """Non-counting availability probe used by the event kernel; the
+        actual client call is get_aggregate()."""
+        posting = self._aggregates[group].get(node)
+        if posting is None:
+            return None
+        # _posted counts successful post_aggregate calls net of removed
+        # postings (order_repost decrements), i.e. the n-f contributors
+        # the initiator divides by (§5.3).
+        return {
+            "aggregate": posting.payload,
+            "from_node": posting.from_node,
+            "posted": self._posted[group],
+            "time": posting.time,
+        }
+
+    def get_aggregate(self, node: int, group: int = 0) -> dict:
+        """Consume the message addressed to ``node`` (long-poll resolved)."""
+        self.stats.get_aggregate += 1
+        result = self.try_get_aggregate(node, group)
+        assert result is not None, "kernel resolved a wait without data"
+        posting = self._aggregates[group].pop(node)
+        # Poster's check_aggregate resolves to consumed.
+        self._repost[group][posting.from_node] = {"status": "consumed"}
+        return result
+
+    def try_check_aggregate(self, node: int, group: int = 0) -> Optional[dict]:
+        st = self._repost[group].get(node)
+        if st is None or st.get("status") == "pending":
+            return None
+        return st
+
+    def check_aggregate(self, node: int, group: int = 0) -> dict:
+        self.stats.check_aggregate += 1
+        st = self.try_check_aggregate(node, group)
+        assert st is not None
+        if st.get("status") != "consumed":
+            # one-shot repost instruction
+            self._repost[group][node] = {"status": "pending"}
+        return st
+
+    # ------------------------------------------------------------------
+    # Progress failover (§5.3) — called by the external progress monitor.
+    # ------------------------------------------------------------------
+    def stuck_posting(self, group: int, now: float, timeout: float):
+        """Return (poster, failed_target) if a posting has been waiting
+        longer than ``timeout``, else None."""
+        for to_node, posting in self._aggregates[group].items():
+            if now - posting.time > timeout:
+                return posting.from_node, to_node
+        return None
+
+    def order_repost(self, group: int, poster: int, failed: int) -> int:
+        """Instruct ``poster`` (via its pending check_aggregate) to
+        re-encrypt for the node after ``failed`` on the chain."""
+        chain = self.groups[group]
+        idx = chain.index(failed)
+        new_target = chain[(idx + 1) % len(chain)]
+        self._skipped[group].add(failed)
+        # Remove the unconsumed posting and flag the poster.
+        self._aggregates[group].pop(failed, None)
+        self._posted[group] -= 1
+        self._repost[group][poster] = {"status": "repost", "to_node": new_target}
+        return new_target
+
+    # ------------------------------------------------------------------
+    # Round 2: average distribution
+    # ------------------------------------------------------------------
+    def post_average(self, node: int, average: np.ndarray, group: int = 0,
+                     weight_avg: Optional[float] = None, now: float = 0.0) -> None:
+        self.stats.post_average += 1
+        self._average[group] = {
+            "average": average,
+            "weight_avg": weight_avg,
+            "initiator": node,
+            "time": now,
+        }
+        self._maybe_publish_global()
+
+    def _maybe_publish_global(self) -> None:
+        """§5.5: once every group initiator posted, publish the average of
+        the group averages (the only arithmetic the controller ever does,
+        on already-anonymized values)."""
+        if any(self._average[g] is None for g in self.groups):
+            return
+        avgs = [self._average[g]["average"] for g in self.groups]
+        wavgs = [self._average[g]["weight_avg"] for g in self.groups]
+        glob = np.mean(np.stack(avgs), axis=0)
+        gw = None
+        if all(w is not None for w in wavgs):
+            gw = float(np.mean(wavgs))
+        self._global_average = {
+            "average": glob,
+            "weight_avg": gw,
+            "time": max(self._average[g].get("time", 0.0) for g in self.groups),
+        }
+
+    def try_get_average(self) -> Optional[dict]:
+        return self._global_average
+
+    def get_average(self) -> dict:
+        self.stats.get_average += 1
+        assert self._global_average is not None
+        return self._global_average
+
+    # ------------------------------------------------------------------
+    # Initiator failover (§5.4)
+    # ------------------------------------------------------------------
+    def should_initiate(self, node: int, group: int = 0, now: float = 0.0) -> bool:
+        """First asker after an aggregation timeout becomes initiator."""
+        self.stats.should_initiate += 1
+        if self._average[group] is not None:
+            return False
+        if now - self._round_start[group] <= self.aggregation_timeout:
+            return False
+        # reset group round state; first asker wins. Nodes still parked on
+        # a stale check_aggregate learn the round restarted ("reset") so
+        # they rejoin the new chain instead of hanging to their deadline.
+        self._aggregates[group].clear()
+        self._repost[group] = {
+            other: {"status": "reset"} for other in self.groups[group] if other != node
+        }
+        self._posted[group] = 0
+        self._skipped[group] = set()
+        self._initiator[group] = node
+        self._round_start[group] = now
+        return True
+
+    def reset_round(self) -> None:
+        """Start a fresh aggregation round (new FL iteration)."""
+        for g in self.groups:
+            self._aggregates[g].clear()
+            self._repost[g].clear()
+            self._average[g] = None
+            self._posted[g] = 0
+            self._skipped[g] = set()
+            self._initiator[g] = None
+        self._global_average = None
+
+
+class HierarchicalController:
+    """§5.10: child controllers post anonymized group averages upward.
+
+    The parent is itself a plain averaging point — no encryption needed
+    (the posted values are already averages over >= 3 learners).
+    """
+
+    def __init__(self, children: list[Controller]):
+        self.children = children
+        self.up_messages = 0
+
+    def collect(self) -> dict:
+        avgs = []
+        for child in self.children:
+            res = child.try_get_average()
+            assert res is not None, "child aggregation incomplete"
+            self.up_messages += 1  # child -> parent post
+            avgs.append(res["average"])
+        return {"average": np.mean(np.stack(avgs), axis=0)}

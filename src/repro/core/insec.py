@@ -1,0 +1,35 @@
+"""INSEC baseline — plain insecure aggregation (paper's control condition).
+
+Learners post raw parameters to the controller, which averages them: a
+plain psum/pmean over the learner axis. No masks, no privacy — the
+reference point for all of the paper's overhead figures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ChainConfig
+
+
+def insec_aggregate(
+    values: jax.Array,
+    cfg: ChainConfig,
+    alive: jax.Array | None = None,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Plain (weighted) mean over alive learners."""
+    axis = cfg.axis
+    rank = jax.lax.axis_index(axis)
+    if alive is None:
+        alive = jnp.ones((cfg.num_learners,), jnp.float32)
+    alive = jnp.asarray(alive, jnp.float32)
+    my_alive = alive[rank]
+
+    w = jnp.asarray(1.0 if weights is None else weights, jnp.float32) * my_alive
+    num = jax.lax.psum(values * w, axis)
+    den = jax.lax.psum(w, axis)
+    avg = num / jnp.maximum(den, 1e-12)
+    if cfg.pod_axis is not None:
+        avg = jax.lax.pmean(avg, cfg.pod_axis)
+    return avg

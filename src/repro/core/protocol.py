@@ -1,0 +1,589 @@
+"""Discrete-event simulation of the SAFE protocol (control plane).
+
+This is the paper's distributed system (Figures 3–5) as a deterministic
+discrete-event simulation: learner state machines (Python generators),
+the broker ``Controller``, and the external progress monitor, exchanging
+*real* masked fixed-point payloads (numpy Threefry pads — the data path
+the TPU plane also uses), while a :class:`~repro.core.costs.CostModel`
+accumulates virtual time for network / crypto / vector ops.
+
+Outputs per run: the published average (asserted against the clear-text
+mean in tests), per-op message counters (validating §5's closed forms),
+virtual completion time (the paper's "aggregation time" axis), and byte
+counters.
+
+Learner coroutine protocol — generators yield:
+  ("compute", seconds)                       local work
+  ("call",  op, kwargs, nbytes)              non-blocking controller op
+  ("wait",  kind, kwargs, nbytes, timeout)   long-poll; resumes with the
+                                             result or {"status":"timeout"}
+and return their final result via StopIteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Dict, Generator, Iterable, Optional
+
+import numpy as np
+
+from repro.core.controller import Controller
+from repro.core.costs import CostModel, EDGE
+from repro.crypto.np_impl import (
+    NpFixedPoint,
+    derive_key_np,
+    derive_pair_key_np,
+    keystream_pair_lanes_np,
+)
+
+_TAG_HOP_PAD = 0x50
+_TAG_INITIATOR_MASK = 0x52
+
+LearnerGen = Generator[tuple, Any, None]
+
+
+# ---------------------------------------------------------------------------
+# Crypto helpers (real arithmetic; costs accounted separately)
+# ---------------------------------------------------------------------------
+
+
+class LearnerCrypto:
+    """Hop encryption for one learner: Threefry one-time pads over Z/2^32Z.
+
+    ``symmetric_only`` models §5.8 pre-negotiation (deep-edge profile);
+    otherwise each hop additionally pays the RSA wrap/unwrap (§5.7 hybrid).
+    """
+
+    def __init__(self, node: int, provisioning_seed: int, learner_master: int,
+                 scale_bits: int = 16, encrypt: bool = True,
+                 symmetric_only: bool = False):
+        self.node = node
+        self.codec = NpFixedPoint(scale_bits)
+        self.encrypt_enabled = encrypt
+        self.symmetric_only = symmetric_only
+        prov = np.array([provisioning_seed & 0xFFFFFFFF,
+                         (provisioning_seed >> 32) & 0xFFFFFFFF], np.uint32)
+        self._pad_seed = derive_key_np(prov, _TAG_HOP_PAD)
+        master = np.array([learner_master & 0xFFFFFFFF,
+                           (learner_master >> 32) & 0xFFFFFFFF], np.uint32)
+        self._own = derive_key_np(derive_key_np(master, node), _TAG_INITIATOR_MASK)
+
+    def pad(self, src: int, dst: int, n: int, counter: int) -> np.ndarray:
+        k = derive_pair_key_np(self._pad_seed, src, dst)
+        return keystream_pair_lanes_np(k, n, counter)
+
+    def mask_r(self, n: int, counter: int) -> np.ndarray:
+        return keystream_pair_lanes_np(self._own, n, counter)
+
+    def hop_encrypt(self, plain_ring: np.ndarray, dst: int, counter: int) -> np.ndarray:
+        if not self.encrypt_enabled:
+            return plain_ring
+        return NpFixedPoint.add(plain_ring, self.pad(self.node, dst, plain_ring.size, counter))
+
+    def hop_decrypt(self, cipher: np.ndarray, src: int, counter: int) -> np.ndarray:
+        if not self.encrypt_enabled:
+            return cipher
+        return NpFixedPoint.sub(cipher, self.pad(src, self.node, cipher.size, counter))
+
+
+# ---------------------------------------------------------------------------
+# Learner state machines (paper §5.1.1 / §5.1.2, with §5.3–5.4 failover)
+# ---------------------------------------------------------------------------
+
+
+def safe_learner(
+    node: int,
+    chain: list[int],
+    value: np.ndarray,
+    crypto: LearnerCrypto,
+    cost: CostModel,
+    group: int = 0,
+    is_initiator: bool = False,
+    weight: Optional[float] = None,
+    counter: int = 0,
+    fail_mode: Optional[str] = None,
+    subgroups: int = 1,
+) -> LearnerGen:
+    """One SAFE learner for one aggregation round.
+
+    fail_mode: None | 'dead' (crashed before round — never spawned by the
+    runner, listed here for completeness) | 'after_post' (initiator crash
+    of Fig. 5: posts its first aggregate then stops responding).
+    """
+    codec = crypto.codec
+    n = len(chain)
+    my_pos = chain.index(node)
+    nxt = chain[(my_pos + 1) % n]
+    payload_f = value if weight is None else np.concatenate(
+        [value * weight, np.array([weight], value.dtype)])
+    V = payload_f.size
+    # base64-wrapped binary ciphertext: ~6 bytes/element on the wire —
+    # the "encryption helps with compression" effect of §6.2 (INSEC posts
+    # clear-text JSON floats at ~14 bytes/element)
+    nbytes = 6 * V
+
+    def enc_cost():
+        return crypto.codec.scale_bits * 0 + cost.encrypt(nbytes, crypto.symmetric_only)
+
+    def _election():
+        """§5.4 path after any aggregation timeout: probe the average,
+        else ask to become initiator. Returns 'done'|'initiator'|'rejoin'."""
+        res = yield ("wait", "get_average", dict(), nbytes, 0.01)
+        if res.get("status") != "timeout":
+            return "done"
+        won = yield ("call", "should_initiate", dict(node=node, group=group), 64)
+        if won:
+            return "initiator"
+        res = yield ("wait", "get_average", dict(), nbytes, 0.01)
+        if res.get("status") != "timeout":
+            return "done"
+        return "rejoin"
+
+    def _post_and_confirm(agg):
+        """post_aggregate + check_aggregate loop, handling §5.3 reposts and
+        round resets. Returns 'consumed'|'reset'|'timeout'."""
+        yield ("compute", enc_cost())
+        cipher = crypto.hop_encrypt(agg, nxt, counter)
+        yield ("call", "post_aggregate",
+               dict(from_node=node, to_node=nxt, payload=cipher, group=group), nbytes)
+        while True:
+            st = yield ("wait", "check_aggregate", dict(node=node, group=group),
+                        64, "aggregation")
+            status = st.get("status")
+            if status in ("consumed", "reset", "timeout"):
+                return status
+            assert status == "repost"
+            target = st["to_node"]
+            yield ("compute", enc_cost())
+            cipher = crypto.hop_encrypt(agg, target, counter)
+            yield ("call", "post_aggregate",
+                   dict(from_node=node, to_node=target, payload=cipher, group=group),
+                   nbytes)
+
+    initiator_now = is_initiator
+    while True:  # restarts on initiator failover (§5.4)
+        if initiator_now:
+            # -- §5.1.1 steps 1-2: mask with R, encrypt for next, post.
+            yield ("compute", cost.t_rng_word * V + cost.t_add_elem * V)
+            R = crypto.mask_r(V, counter)
+            agg = NpFixedPoint.add(codec.encode(payload_f), R)
+            if fail_mode == "after_post":
+                # Fig. 5 step 3: initiator posts once, then crashes.
+                yield ("compute", enc_cost())
+                cipher = crypto.hop_encrypt(agg, nxt, counter)
+                yield ("call", "post_aggregate",
+                       dict(from_node=node, to_node=nxt, payload=cipher, group=group),
+                       nbytes)
+                return
+
+            st = yield from _post_and_confirm(agg)
+            if st in ("reset", "timeout"):
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+
+            # -- §5.1.1 steps 3-4: receive final aggregate, unmask, publish.
+            res = yield ("wait", "get_aggregate", dict(node=node, group=group),
+                         nbytes, "aggregation")
+            if res.get("status") == "timeout":
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+            yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
+            total = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
+            yield ("compute", cost.t_add_elem * V * 2)
+            total = NpFixedPoint.sub(total, R)
+            posted = res["posted"]  # §5.3: controller reports contributor count
+            dec = codec.decode(total)
+            if weight is not None:
+                avg = dec[:-1] / max(dec[-1], 1e-12)
+                wavg = dec[-1] / posted
+            else:
+                avg = dec / posted
+                wavg = None
+            yield ("call", "post_average",
+                   dict(node=node, average=avg, group=group, weight_avg=wavg), nbytes)
+            if subgroups > 1:
+                # §5.5: group initiators must fetch the cross-group average.
+                yield ("wait", "get_average", dict(), nbytes, None)
+            return
+        else:
+            # -- §5.1.2 non-initiator.
+            res = yield ("wait", "get_aggregate", dict(node=node, group=group),
+                         nbytes, "aggregation")
+            if res.get("status") == "timeout":
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+            if fail_mode == "dead":
+                return
+            yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
+            agg = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
+            yield ("compute", cost.t_add_elem * V)
+            agg = NpFixedPoint.add(agg, codec.encode(payload_f))
+
+            st = yield from _post_and_confirm(agg)
+            if st == "reset":
+                continue  # round restarted — rejoin the new chain
+            # 'timeout' falls through to get_average, whose own timeout
+            # handles an aborted round.
+
+            res = yield ("wait", "get_average", dict(), nbytes, "aggregation")
+            if res.get("status") == "timeout":
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+            return
+
+
+def insec_learner(node: int, value: np.ndarray, cost: CostModel,
+                  group: int = 0, post_to: int = -1) -> LearnerGen:
+    """INSEC baseline: post raw parameters, read back the average."""
+    nbytes = 14 * value.size  # clear-text JSON floats
+    yield ("call", "post_aggregate",
+           dict(from_node=node, to_node=post_to, payload=value, group=group), nbytes)
+    yield ("wait", "get_average", dict(), nbytes, None)
+    return
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event kernel
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Task:
+    node: int
+    gen: LearnerGen
+    time: float = 0.0
+    waiting: Optional[tuple] = None  # (kind, kwargs, nbytes, deadline)
+    done: bool = False
+    result: Any = None
+
+
+@dataclasses.dataclass
+class SimResult:
+    average: Optional[np.ndarray]
+    weight_avg: Optional[float]
+    virtual_time: float
+    stats: Any
+    bytes_sent: int
+    monitor_reposts: int
+    initiator_elections: int
+
+
+class ProtocolSimulation:
+    """Event kernel driving learners + controller + progress monitor."""
+
+    def __init__(self, controller: Controller, cost: CostModel = EDGE,
+                 progress_timeout: float = 1.0, monitor_interval: float = 0.25,
+                 parse_payloads: bool = False):
+        self.ctrl = controller
+        self.cost = cost
+        # INSEC: the controller must parse (and average) the payloads;
+        # SAFE/SAF: opaque ciphertext relay (paper's broker-only role)
+        self.parse_payloads = parse_payloads
+        self.progress_timeout = progress_timeout
+        self.monitor_interval = monitor_interval
+        self.tasks: Dict[int, _Task] = {}
+        self.bytes_sent = 0
+        self.monitor_reposts = 0
+        self.initiator_elections = 0
+        # The controller is a shared resource: requests serialize on it
+        # (the reason even INSEC scales linearly in nodes, Fig. 7). The
+        # event loop feeds requests in chronological order — every
+        # controller interaction is its own event — so a simple busy-until
+        # ratchet is exact single-server FIFO queueing.
+        self._server_free_at = 0.0
+
+    def _server(self, t: float, nbytes: int = 64) -> float:
+        """FIFO single-server: request arriving at t completes at
+        max(free, t) + handling. Handling scales with payload size —
+        parsed JSON for INSEC, opaque relay for SAFE — and INSEC serving
+        additionally re-averages the n posted arrays (O(n·V)/request)."""
+        cost = self.cost.t_ctrl
+        if self.parse_payloads:
+            cost += self.cost.t_parse_byte * nbytes
+            n = len(self.tasks)
+            cost += self.cost.t_avg_elem * n * (nbytes // 14)
+        else:
+            cost += self.cost.t_relay_byte * nbytes
+        start = max(self._server_free_at, t)
+        self._server_free_at = start + cost
+        return self._server_free_at
+
+    def spawn(self, node: int, gen: LearnerGen, start: float = 0.0) -> None:
+        self.tasks[node] = _Task(node=node, gen=gen, time=start)
+
+    # -- controller op dispatch (counts messages + bytes) -----------------
+    def _dispatch(self, task: _Task, op: str, kwargs: dict, nbytes: int) -> Any:
+        self.bytes_sent += nbytes
+        task.time = self._server(task.time + self.cost.message(nbytes), nbytes)
+        now = task.time
+        if op == "post_aggregate":
+            return self.ctrl.post_aggregate(now=now, **kwargs)
+        if op == "post_average":
+            return self.ctrl.post_average(now=now, **kwargs)
+        if op == "should_initiate":
+            won = self.ctrl.should_initiate(now=now, **kwargs)
+            if won:
+                self.initiator_elections += 1
+            return won
+        raise ValueError(f"unknown call op {op}")
+
+    def _peek_wait(self, kind: str, kwargs: dict) -> Optional[Any]:
+        """Non-consuming availability probe (event-queue ordering)."""
+        if kind == "__call__":
+            return {}  # plain calls are always ready
+        if kind == "get_aggregate":
+            return self.ctrl.try_get_aggregate(**kwargs)
+        if kind == "check_aggregate":
+            return self.ctrl.try_check_aggregate(**kwargs)
+        if kind == "get_average":
+            return self.ctrl.try_get_average()
+        raise ValueError(f"unknown wait kind {kind}")
+
+    def _try_wait(self, task: _Task, kind: str, kwargs: dict) -> Optional[Any]:
+        if kind == "get_aggregate":
+            if self.ctrl.try_get_aggregate(**kwargs) is None:
+                return None
+            return self.ctrl.get_aggregate(**kwargs)
+        if kind == "check_aggregate":
+            if self.ctrl.try_check_aggregate(**kwargs) is None:
+                return None
+            return self.ctrl.check_aggregate(**kwargs)
+        if kind == "get_average":
+            if self.ctrl.try_get_average() is None:
+                return None
+            return self.ctrl.get_average()
+        raise ValueError(f"unknown wait kind {kind}")
+
+    def run(self, max_virtual_time: float = 3600.0) -> SimResult:
+        """Discrete-event loop: process exactly one event at a time in
+        global virtual-time order (so controller serialization sees
+        requests chronologically), with the progress monitor as a
+        recurring event source."""
+        next_monitor = self.monitor_interval
+        guard = 0
+        while not all(t.done for t in self.tasks.values()):
+            guard += 1
+            if guard > 2_000_000:
+                raise RuntimeError("simulation did not converge")
+
+            # gather candidate events: (time, priority, node, action, task)
+            events = []
+            for task in self.tasks.values():
+                if task.done:
+                    continue
+                if task.waiting is None:
+                    events.append((task.time, 0, task.node, "run", task))
+                    continue
+                kind, kwargs, nbytes, deadline = task.waiting
+                peek = self._peek_wait(kind, kwargs)
+                if peek is not None:
+                    avail = peek.get("time", 0.0) if isinstance(peek, dict) else 0.0
+                    events.append((max(task.time, avail), 1, task.node,
+                                   "resolve", task))
+                elif deadline is not None:
+                    events.append((deadline, 2, task.node, "timeout", task))
+
+            if not events:
+                # everything parked with no deadline: only the monitor can
+                # unstick the chain (ordering a repost, §5.3)
+                if next_monitor > max_virtual_time:
+                    raise RuntimeError("aggregation exceeded max virtual time")
+                self._monitor_tick(next_monitor)
+                next_monitor += self.monitor_interval
+                continue
+
+            events.sort(key=lambda e: e[:3])
+            etime, _, _, action, task = events[0]
+            if next_monitor <= etime:
+                # the monitor fires between events on its own schedule
+                if next_monitor > max_virtual_time:
+                    raise RuntimeError("aggregation exceeded max virtual time")
+                self._monitor_tick(next_monitor)
+                next_monitor += self.monitor_interval
+                continue  # a repost order may create an earlier event
+
+            if action == "run":
+                self._step(task, None)
+            elif action == "resolve":
+                kind, kwargs, nbytes, _ = task.waiting
+                if kind == "__call__":
+                    op, call_kwargs = kwargs
+                    task.waiting = None
+                    res = self._dispatch(task, op, call_kwargs, nbytes)
+                    self._step(task, res)
+                else:
+                    res = self._try_wait(task, kind, kwargs)
+                    assert res is not None
+                    self.bytes_sent += nbytes
+                    avail = res.get("time", 0.0) if isinstance(res, dict) else 0.0
+                    t = self._server(max(task.time, avail), nbytes)
+                    task.time = t + self.cost.message(nbytes)
+                    task.waiting = None
+                    self._step(task, res)
+            else:  # timeout
+                task.time = max(task.time, etime)
+                task.waiting = None
+                self._step(task, {"status": "timeout"})
+
+        avg = self.ctrl.try_get_average()
+        return SimResult(
+            average=None if avg is None else avg["average"],
+            weight_avg=None if avg is None else avg.get("weight_avg"),
+            virtual_time=max(t.time for t in self.tasks.values()),
+            stats=self.ctrl.stats,
+            bytes_sent=self.bytes_sent,
+            monitor_reposts=self.monitor_reposts,
+            initiator_elections=self.initiator_elections,
+        )
+
+    def _sim_now(self) -> float:
+        live = [t.time for t in self.tasks.values() if not t.done]
+        return max(live) if live else max(t.time for t in self.tasks.values())
+
+    def _monitor_tick(self, now: float) -> None:
+        """External progress monitor (§5.3): detect stuck postings and
+        order reposts; unstick aggregation-timeout waits (§5.4)."""
+        for task in self.tasks.values():
+            if not task.done:
+                task.time = max(task.time, now)
+        for group in self.ctrl.groups:
+            stuck = self.ctrl.stuck_posting(group, now, self.progress_timeout)
+            if stuck is not None:
+                poster, failed = stuck
+                if self.tasks.get(poster) is None or self.tasks[poster].done:
+                    continue  # poster itself gone — aggregation timeout path
+                self.ctrl.order_repost(group, poster, failed)
+                self.monitor_reposts += 1
+        # aggregation-timeout waits are handled in run() via deadlines; the
+        # tick just advanced the clock so those deadlines can fire.
+
+    def _step(self, task: _Task, send_value: Any) -> None:
+        """Advance one learner until it parks, finishes, or yields compute."""
+        try:
+            while True:
+                item = task.gen.send(send_value)  # send(None) primes/continues
+                kind = item[0]
+                if kind == "compute":
+                    task.time += item[1]
+                    send_value = None
+                    continue
+                if kind == "call":
+                    # park: every controller interaction is its own event,
+                    # so the FIFO server sees requests chronologically
+                    _, op, kwargs, nbytes = item
+                    task.waiting = ("__call__", (op, kwargs), nbytes, None)
+                    return
+                if kind == "wait":
+                    _, wkind, kwargs, nbytes, timeout = item
+                    deadline = None
+                    if timeout == "aggregation":
+                        deadline = task.time + self.ctrl.aggregation_timeout
+                    elif isinstance(timeout, (int, float)):
+                        deadline = task.time + timeout
+                    task.time += self.cost.message(64)  # long-poll request
+                    task.waiting = (wkind, kwargs, nbytes, deadline)
+                    return
+                raise ValueError(f"unknown yield {item!r}")
+        except StopIteration as stop:
+            task.done = True
+            task.result = stop.value
+
+
+# ---------------------------------------------------------------------------
+# Runner: build + run one aggregation round
+# ---------------------------------------------------------------------------
+
+
+def run_safe_round(
+    values: np.ndarray,
+    mode: str = "safe",
+    subgroups: int = 1,
+    failed_nodes: Iterable[int] = (),
+    initiator_fails: bool = False,
+    weights: Optional[np.ndarray] = None,
+    cost: CostModel = EDGE,
+    aggregation_timeout: float = 8.0,
+    progress_timeout: float = 1.0,
+    symmetric_only: bool = False,
+    scale_bits: int = 16,
+    provisioning_seed: int = 0xC0FFEE,
+    learner_master: int = 0x5EED,
+    counter: int = 0,
+) -> SimResult:
+    """Simulate one full aggregation round.
+
+    values: f32[n, V]; node ids are 1..n (paper numbering), chain order is
+    id order, split into ``subgroups`` contiguous groups (§5.5).
+    failed_nodes: 1-based ids of learners dead before the round (the
+    paper's failover experiment takes out nodes 4-6 after key exchange).
+    initiator_fails: group-0 initiator posts once then crashes (Fig. 5).
+    """
+    n, V = values.shape
+    assert mode in ("safe", "saf", "insec")
+    if mode in ("safe", "saf") and (n // subgroups) < 3:
+        raise ValueError(
+            "SAFE requires >= 3 learners per group: with 2, each learns the "
+            "other's value by subtracting its own (paper §5.3)")
+    m = n // subgroups
+    groups = {g: [g * m + i + 1 for i in range(m)] for g in range(subgroups)}
+    ctrl = Controller(groups, aggregation_timeout=aggregation_timeout)
+    sim = ProtocolSimulation(ctrl, cost, progress_timeout=progress_timeout,
+                             parse_payloads=(mode == "insec"))
+    failed = set(failed_nodes)
+
+    for g, chain in groups.items():
+        for pos, node in enumerate(chain):
+            if node in failed:
+                continue  # crashed before the aggregation started
+            val = values[node - 1]
+            w = None if weights is None else float(weights[node - 1])
+            if mode == "insec":
+                gen = insec_learner(node, val if w is None else val * w, cost, group=g)
+            else:
+                crypto = LearnerCrypto(
+                    node, provisioning_seed, learner_master, scale_bits,
+                    encrypt=(mode == "safe"), symmetric_only=symmetric_only)
+                fail_mode = "after_post" if (initiator_fails and g == 0 and pos == 0) else None
+                gen = safe_learner(
+                    node, chain, val, crypto, cost, group=g,
+                    is_initiator=(pos == 0), weight=w, counter=counter,
+                    fail_mode=fail_mode, subgroups=subgroups)
+            sim.spawn(node, gen)
+
+    if mode == "insec":
+        _drive_insec(ctrl, sim, groups, failed, weights)
+        return sim.run()
+    return sim.run()
+
+
+def _drive_insec(ctrl: Controller, sim: ProtocolSimulation, groups, failed, weights):
+    """INSEC controller-side averaging: once all live nodes posted, the
+    controller averages raw values (it sees everything — the point of the
+    baseline). Implemented as a zero-cost shim around the broker."""
+    import types
+
+    orig_post = ctrl.post_aggregate
+    expected = sum(len([x for x in chain if x not in failed]) for chain in groups.values())
+    posted_vals = []
+
+    def patched(from_node, to_node, payload, group=0, now=0.0):
+        orig_post(from_node, to_node, payload, group, now)
+        posted_vals.append(np.asarray(payload, np.float64))
+        if len(posted_vals) == expected:
+            avg = np.mean(np.stack(posted_vals), axis=0).astype(np.float32)
+            # controller publishes directly (not a client message)
+            ctrl._global_average = {"average": avg, "weight_avg": None}
+
+    ctrl.post_aggregate = patched

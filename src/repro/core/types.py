@@ -1,0 +1,83 @@
+"""Configuration types for the SAFE aggregation core."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.crypto.fixedpoint import DEFAULT_SCALE_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainConfig:
+    """Static configuration of a secure-aggregation chain.
+
+    Attributes:
+      axis: mesh axis name the learners live on (one learner per rank).
+      num_learners: chain length n (must equal the mesh axis size).
+      scale_bits: fixed-point fractional bits for the ring encoding.
+      mode: 'safe'  — chain with hop pads + initiator mask (paper SAFE);
+            'saf'   — chain with initiator mask only, no hop pads (paper SAF);
+            'insec' — plain psum of raw values (paper INSEC baseline);
+            'bon'   — pairwise-mask baseline (Bonawitz et al. CCS'17).
+      pipelined: False — paper-faithful sequential whole-vector chain
+                 (n-1 serial hops of the full vector);
+                 True  — beyond-paper rotated-initiator segment pipeline
+                 (ring-reduce schedule, ~2V bytes/link; DESIGN.md §8).
+      subgroups: number of parallel chains g (paper §5.5). Must divide
+                 num_learners; each subgroup needs >= 3 members for the
+                 paper's privacy guarantee (enforced at construction).
+      weighted: carry a per-learner weight through the aggregate so the
+                 published value is the weighted mean (paper §5.6).
+      pod_axis: optional mesh axis for hierarchical federation (§5.10):
+                 intra-pod chains then cross-pod average of group averages.
+      unroll: unroll the hop loop in HLO (preferred for n <= 64: exposes
+                 the collective schedule to the roofline parser and lets
+                 XLA overlap; fori_loop otherwise).
+    """
+
+    axis: str = "data"
+    num_learners: int = 16
+    scale_bits: int = DEFAULT_SCALE_BITS
+    mode: str = "safe"
+    pipelined: bool = False
+    subgroups: int = 1
+    weighted: bool = False
+    pod_axis: Optional[str] = None
+    unroll: bool = True
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("safe", "saf", "insec", "bon"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.num_learners < 3 and self.mode in ("safe", "saf"):
+            raise ValueError(
+                "SAFE requires >= 3 learners (with 2, each learns the other's "
+                "value by subtraction; paper §5.3)"
+            )
+        if self.subgroups < 1 or self.num_learners % self.subgroups != 0:
+            raise ValueError("subgroups must divide num_learners")
+        if self.subgroups > 1 and self.group_size < 3 and self.mode in ("safe", "saf"):
+            raise ValueError(
+                "each subgroup needs >= 3 members for the privacy guarantee "
+                "(paper §5.5)"
+            )
+
+    @property
+    def group_size(self) -> int:
+        return self.num_learners // self.subgroups
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundKeys:
+    """Per-round key material (host-provisioned, device-resident).
+
+    provisioning_seed: uint32[2] master seed from which pairwise hop keys
+      are derived (models the out-of-band Round-0 exchange; DESIGN.md §6).
+    learner_seed: uint32[2] per-learner private seed (initiator mask R and
+      BON self-mask b_i are keystreams from it).
+    counter_base: first fresh counter word for this round (host-allocated
+      via ``crypto.prf.RoundCounter`` so pads are never reused).
+    """
+
+    provisioning_seed: object  # jax.Array uint32[2]
+    learner_seed: object  # jax.Array uint32[2] (per-rank, distinct)
+    counter_base: object  # jax.Array uint32 scalar or int

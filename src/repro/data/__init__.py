@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic federated token streams."""
+from repro.data.synthetic import (
+    FederatedTokenStream,
+    SyntheticMixture,
+    make_federated_batches,
+)
+
+__all__ = ["FederatedTokenStream", "SyntheticMixture", "make_federated_batches"]

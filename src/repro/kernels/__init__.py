@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the SAFE masking hot spots.
+
+threefry_mask_add — fused keystream + fixed-point encode + masked add
+chain_combine     — fused SAFE non-initiator hop (decrypt+add+re-encrypt)
+bon_mask          — fused BON pairwise masking (baseline hot spot)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
+``ops.py`` (interpret=True automatically off-TPU).
+"""
+from repro.kernels.ops import mask_add, chain_combine, bon_mask
+
+__all__ = ["mask_add", "chain_combine", "bon_mask"]

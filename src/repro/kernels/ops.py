@@ -1,0 +1,57 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False on
+real TPU backends — callers never need to pass it. The chain data plane
+(`core/chain.py`) can route its mask arithmetic through these via
+``use_kernels=True`` in the high-level ops below.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.threefry_mask_add import mask_add as _mask_add
+from repro.kernels.chain_combine import chain_combine as _chain_combine
+from repro.kernels.bon_mask import bon_mask as _bon_mask
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _u32(counter_base):
+    """Python ints wrap into uint32 before crossing the jit boundary."""
+    if isinstance(counter_base, (int, np.integer)):
+        return np.uint32(int(counter_base) & 0xFFFFFFFF)
+    return counter_base
+
+
+def mask_add(x, key, counter_base=0, *, scale_bits: int = 16,
+             interpret: bool | None = None):
+    """Fused encode+mask (SAFE initiator step / encrypt half of a hop)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _mask_add(x, key, _u32(counter_base), scale_bits=scale_bits,
+                     interpret=interpret)
+
+
+def chain_combine(cipher, x, key_in, key_out, counter_base=0, *,
+                  scale_bits: int = 16, interpret: bool | None = None):
+    """Fused SAFE non-initiator hop (decrypt + add + re-encrypt)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _chain_combine(cipher, x, key_in, key_out, _u32(counter_base),
+                          scale_bits=scale_bits, interpret=interpret)
+
+
+def bon_mask(x, keys, signs, counter_base=0, *, scale_bits: int = 16,
+             interpret: bool | None = None):
+    """Fused BON pairwise masking (baseline hot spot)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _bon_mask(x, keys, signs, _u32(counter_base), scale_bits=scale_bits,
+                     interpret=interpret)
+
+
+__all__ = ["mask_add", "chain_combine", "bon_mask"]

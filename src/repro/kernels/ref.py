@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the bit-exact specification its kernel is validated
+against (tests/test_kernels.py sweeps shapes and dtypes with
+assert_array_equal — these are integer kernels, so *equality*, not
+allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto.fixedpoint import FixedPointCodec
+from repro.crypto.prf import keystream_pair_lanes
+
+
+def mask_add_ref(x: jax.Array, key: jax.Array, counter_base, scale_bits: int = 16) -> jax.Array:
+    """out = encode(x) + PRF(key, base..)  (mod 2^32).
+
+    The SAFE initiator step (§5.2 step 1: add R to the local vector) and,
+    with the hop key, the encrypt half of every chain hop.
+    """
+    codec = FixedPointCodec(scale_bits)
+    pad = keystream_pair_lanes(key, x.shape[0], counter_base)
+    return codec.encode(x) + pad
+
+
+def chain_combine_ref(
+    cipher: jax.Array,
+    x: jax.Array,
+    key_in: jax.Array,
+    key_out: jax.Array,
+    counter_base,
+    scale_bits: int = 16,
+) -> jax.Array:
+    """out = cipher − PRF(key_in) + encode(x) + PRF(key_out)  (mod 2^32).
+
+    The entire SAFE non-initiator hop (§5.1.2 step 2: decrypt, add local
+    vector, re-encrypt) in one pass.
+    """
+    codec = FixedPointCodec(scale_bits)
+    n = cipher.shape[0]
+    pad_in = keystream_pair_lanes(key_in, n, counter_base)
+    pad_out = keystream_pair_lanes(key_out, n, counter_base)
+    return cipher - pad_in + codec.encode(x) + pad_out
+
+
+def bon_mask_ref(
+    x: jax.Array,
+    keys: jax.Array,
+    signs: jax.Array,
+    counter_base,
+    scale_bits: int = 16,
+) -> jax.Array:
+    """out = encode(x) + Σ_j signs[j]·PRF(keys[j])  (mod 2^32).
+
+    The BON masking step: one self-mask plus n−1 pairwise pads per
+    learner — the quadratic-work baseline. keys: uint32[m, 2];
+    signs: int32[m] in {+1, −1}.
+    """
+    codec = FixedPointCodec(scale_bits)
+    n = x.shape[0]
+    acc = codec.encode(x)
+    for j in range(keys.shape[0]):
+        pad = keystream_pair_lanes(keys[j], n, counter_base)
+        acc = jnp.where(signs[j] > 0, acc + pad, acc - pad)
+    return acc

@@ -1,0 +1,130 @@
+"""Fused Threefry keystream + fixed-point encode + masked add (Pallas/TPU).
+
+The device hot spot of SAFE: every chain hop and the initiator step
+stream a large parameter vector through "generate pad, encode, add".
+Unfused, that is three HBM round trips (pad materialization, encode,
+add); this kernel does one read of ``x`` and one write of the masked
+ciphertext — the pad never touches HBM.
+
+TPU adaptation notes (DESIGN.md §4):
+  * masking is element-wise VPU work — the roofline is HBM bandwidth, so
+    fusion is the whole optimization;
+  * blocks are (block_rows, 128): lane-dim 128 matches the VPU/VREG lane
+    width, block_rows a multiple of 8 for f32 sublane packing;
+  * each element evaluates the full Threefry-2x32 block for its counter
+    and selects its lane — lane-redundant (2× VPU flops) but gather-free
+    and layout-preserving; the VPU has headroom at 0.36 B/flop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = np.uint32(0x1BD11BDA)  # np, not jnp: a jnp scalar would be a
+# captured constant inside the Pallas kernel body
+
+LANE = 128  # VPU lane width
+
+
+def as_u32_scalar(x):
+    """uint32 scalar from python int (wrapping) or traced value."""
+    if isinstance(x, (int, np.integer)):
+        return jnp.asarray(np.uint32(int(x) & 0xFFFFFFFF))
+    return jnp.asarray(x, jnp.uint32)
+DEFAULT_BLOCK_ROWS = 64  # 64×128 u32 = 32 KiB / block operand — fits VMEM easily
+
+
+def _rotl32(x, d: int):
+    return (x << d) | (x >> (32 - d))
+
+
+def threefry2x32_block(k0, k1, x0, x1):
+    """Threefry-2x32 (20 rounds) on uint32 blocks — VPU-only arithmetic."""
+    ks0, ks1 = k0, k1
+    ks2 = ks0 ^ ks1 ^ _PARITY
+    x0 = x0 + ks0
+    x1 = x1 + ks1
+    ks = (ks0, ks1, ks2)
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def pad_for_block(k0, k1, base, block_shape, row_offset):
+    """uint32 keystream for a (rows, LANE) tile starting at flat offset
+    ``row_offset*LANE``, matching crypto.prf.keystream_pair_lanes:
+    word i = lane (i & 1) of Threefry(key, base + i//2)."""
+    rows, lanes = block_shape
+    row = jax.lax.broadcasted_iota(jnp.uint32, block_shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, block_shape, 1)
+    linear = (row + row_offset) * jnp.uint32(lanes) + col
+    ctr = base + (linear >> 1)
+    lane_sel = (linear & jnp.uint32(1)).astype(jnp.bool_)
+    y0, y1 = threefry2x32_block(k0, k1, ctr, jnp.zeros_like(ctr))
+    return jnp.where(lane_sel, y1, y0)
+
+
+def encode_block(x, scale_bits: int):
+    """f32 -> uint32 ring element (round-to-nearest-even), matching
+    crypto.fixedpoint.FixedPointCodec.encode."""
+    scaled = jnp.round(x.astype(jnp.float32) * jnp.float32(2.0**scale_bits))
+    return scaled.astype(jnp.int32).view("uint32")
+
+
+def _mask_add_kernel(scalars, x_ref, o_ref, *, scale_bits: int, block_rows: int):
+    i = pl.program_id(0)
+    pad = pad_for_block(scalars[0], scalars[1], scalars[2], x_ref.shape,
+                        jnp.uint32(i * block_rows))
+    o_ref[...] = encode_block(x_ref[...], scale_bits) + pad
+
+
+@functools.partial(jax.jit, static_argnames=("scale_bits", "block_rows", "interpret"))
+def mask_add(
+    x: jax.Array,
+    key: jax.Array,
+    counter_base: jax.Array | int = 0,
+    *,
+    scale_bits: int = 16,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[i] = encode(x[i]) + PRF(key, base + i)  (mod 2^32), fused.
+
+    x: f32[V] (any V — padded internally to a whole tile grid).
+    key: uint32[2]. Returns uint32[V].
+    """
+    V = x.shape[0]
+    elems = block_rows * LANE
+    vpad = (-V) % elems
+    x2 = jnp.pad(x, (0, vpad)).reshape(-1, LANE)
+    nblocks = x2.shape[0] // block_rows
+
+    scalars = jnp.concatenate(
+        [jnp.asarray(key, jnp.uint32).reshape(2),
+         as_u32_scalar(counter_base).reshape(1)])
+
+    out = pl.pallas_call(
+        functools.partial(_mask_add_kernel, scale_bits=scale_bits,
+                          block_rows=block_rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nblocks,),
+            # index maps receive (grid_idx, scalar_ref) under scalar prefetch
+            in_specs=[pl.BlockSpec((block_rows, LANE), lambda i, s: (i, 0))],
+            out_specs=pl.BlockSpec((block_rows, LANE), lambda i, s: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.uint32),
+        interpret=interpret,
+    )(scalars, x2)
+    return out.reshape(-1)[:V]

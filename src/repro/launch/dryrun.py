@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-touching import: jax locks the device count on
+# first init. 512 placeholder host devices back both the 16×16 single-pod
+# mesh and the 2×16×16 multi-pod mesh. Never set this globally — smoke
+# tests and benches run on 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+Per combination this script:
+  1. builds the production mesh (launch/mesh.py),
+  2. builds abstract inputs with production shardings (launch/input_specs),
+  3. ``jit(...).lower(...).compile()`` — any sharding mismatch, OOM at
+     compile, or unsupported collective is a bug in the framework,
+  4. records memory_analysis() (proves the per-device footprint),
+     cost_analysis() (FLOPs/bytes for §Roofline), and the collective
+     schedule parsed from the partitioned HLO,
+  5. writes results/dryrun/<arch>__<shape>__<mesh>[__<agg>].json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all          # everything missing, serially
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of an HLO shape literal like 'bf16[16,1024]{1,0}' (tuples
+    summed)."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, loop_multiplier: int = 1) -> dict:
+    """Sum per-device collective bytes from partitioned HLO.
+
+    Collectives inside while-loop bodies (the unit scan) are multiplied by
+    ``loop_multiplier`` (= n_units): XLA's text shows the body once but it
+    executes once per unit. Heuristic documented in EXPERIMENTS.md §Dry-run.
+    """
+    per_op = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        comp_m = re.match(r"%?([\w.\-]+)\s*\([^)]*\)\s*->", stripped)
+        if comp_m and stripped.endswith("{"):
+            current_comp = comp_m.group(1)
+            continue
+        for coll in _COLLECTIVES:
+            # e.g.  %ag = bf16[8,128]{1,0} all-gather(...)
+            m = re.search(r"=\s*([^=]*?)\s*" + coll + r"(?:-start|-done)?\(",
+                          stripped)
+            if m:
+                nbytes = _shape_bytes(m.group(1))
+                mult = loop_multiplier if ("while" in current_comp
+                                           or "body" in current_comp) else 1
+                per_op[coll] += nbytes * mult
+                counts[coll] += mult
+                break
+    return {"bytes": per_op, "counts": counts,
+            "total_bytes": sum(per_op.values())}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            aggregator_mode: str = "safe", pipelined: bool = False,
+            subgroups: int = 1, tag: str = "",
+            chain_model_sharded: bool = False,
+            capacity: float = 0.0) -> dict:
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.input_specs import build_spec
+
+    mesh_name = "pod512" if multi_pod else "pod256"
+    cfg = get_config(arch)
+    if capacity and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=capacity))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "aggregator": aggregator_mode, "pipelined": pipelined,
+        "subgroups": subgroups,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "status": "pending",
+    }
+    spec = build_spec(cfg, mesh, shape_name, aggregator_mode=aggregator_mode,
+                      pipelined=pipelined, subgroups=subgroups,
+                      chain_model_sharded=chain_model_sharded) \
+        if shape_name == "train_4k" else build_spec(cfg, mesh, shape_name)
+    if spec is None:
+        record["status"] = "skipped"
+        record["reason"] = ("long_500k requires sub-quadratic attention; "
+                            f"{arch} is pure global attention (DESIGN.md §5)")
+        return record
+
+    record["description"] = spec.description
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = spec.fn.lower(*spec.args)
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+    ma = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "total_per_device_bytes": int(ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    record["cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    txt = compiled.as_text()
+    record["hlo_bytes"] = len(txt)
+    record["collectives"] = parse_collectives(txt, loop_multiplier=cfg.n_units)
+    record["status"] = "ok"
+    print(f"[dryrun] {arch} {shape_name} {mesh_name}: "
+          f"mem/device={record['memory']['total_per_device_bytes']/2**30:.2f}GiB "
+          f"flops/device={record['cost']['flops']:.3e} "
+          f"coll={record['collectives']['total_bytes']/2**20:.1f}MiB "
+          f"(lower {record['lower_s']}s compile {record['compile_s']}s)",
+          flush=True)
+    print(ma)
+    return record
+
+
+def result_path(arch, shape, multi_pod, tag=""):
+    mesh_name = "pod512" if multi_pod else "pod256"
+    suffix = f"__{tag}" if tag else ""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=["train_4k", "prefill_32k",
+                                        "decode_32k", "long_500k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--aggregator", default="safe",
+                    choices=["safe", "saf", "insec", "bon"])
+    ap.add_argument("--pipelined", action="store_true",
+                    help="beyond-paper segmented chain schedule")
+    ap.add_argument("--chain-model-sharded", action="store_true",
+                    help="beyond-paper: 16 parallel chains over 'model'")
+    ap.add_argument("--subgroups", type=int, default=1)
+    ap.add_argument("--capacity", type=float, default=0.0,
+                    help="override MoE capacity factor")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--all", action="store_true",
+                    help="run every missing (arch × shape) on this mesh")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import all_arch_ids
+
+    combos = []
+    if args.all:
+        for arch in all_arch_ids():
+            for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+                combos.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        combos.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in combos:
+        path = result_path(arch, shape, args.multi_pod, args.tag)
+        if os.path.exists(path) and not args.force:
+            print(f"[dryrun] cached: {path}")
+            continue
+        try:
+            rec = run_one(arch, shape, args.multi_pod, args.aggregator,
+                          args.pipelined, args.subgroups, args.tag,
+                          args.chain_model_sharded, args.capacity)
+        except Exception as e:  # noqa: BLE001 — record the failure
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "pod512" if args.multi_pod else "pod256",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+            print(f"[dryrun] FAILED {arch} {shape}: {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

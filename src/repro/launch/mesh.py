@@ -1,0 +1,46 @@
+"""Production meshes (TPU v5e).
+
+Single pod: 16×16 = 256 chips, axes (data, model) — 'data' is the
+learner/chain axis (one SAFE learner per data rank), 'model' the
+tensor-parallel axis.
+
+Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — 'pod' is the
+hierarchical-federation axis (paper §5.10): intra-pod SAFE chains, then a
+plain mean of the already-anonymized pod averages across pods.
+
+Defined as functions so importing this module never touches device state
+(dryrun.py must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(n, 512)} (dryrun.py sets this automatically)")
+    # more devices than needed (e.g. 512 placeholders, single-pod mesh):
+    # use the first n
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(data: int = 4, model: int = 2, pod: int = 1):
+    """Small host-device mesh for tests/examples."""
+    if pod > 1:
+        from jax.sharding import Mesh
+        devs = np.asarray(jax.devices()[: pod * data * model])
+        return Mesh(devs.reshape(pod, data, model), ("pod", "data", "model"))
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[: data * model])
+    return Mesh(devs.reshape(data, model), ("data", "model"))

@@ -1,0 +1,5 @@
+"""Model zoo: composable decoder substrate + the 10 assigned architectures."""
+from repro.models.config import ModelConfig, MoEConfig, reduced
+from repro.models.transformer import Model, block_init_cache
+
+__all__ = ["ModelConfig", "MoEConfig", "reduced", "Model", "block_init_cache"]

@@ -1,0 +1,317 @@
+"""Shared decoder substrate: norms, RoPE, GQA attention, gated MLP.
+
+Functional style: ``*_init(rng, ...) -> params`` (pytrees of jnp arrays)
+and ``*_apply(params, x, ...)``. Tensor-parallel sharding is GSPMD-auto
+over the 'model' axis; ``mshard`` drops activation anchors so the
+propagation picks head/ff sharding (Megatron layout) instead of
+replicating.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def mshard(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort sharding anchor (no-op outside a mesh context)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _dense_init(rng, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(rng, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # (1 + scale) gemma-style
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dt)
+
+
+def rmsnorm_head(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (qwen3): normalize the trailing head_dim."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, rotate-half convention.
+
+    x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+    params = {
+        "wq": _dense_init(ks[0], (d, nh * hd)),
+        "wk": _dense_init(ks[1], (d, nkv * hd)),
+        "wv": _dense_init(ks[2], (d, nkv * hd)),
+        "wo": _dense_init(ks[3], (nh * hd, d)),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        params["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return params
+
+
+def _attn_mask(q_pos: jax.Array, k_pos: jax.Array, kind: str, window: int,
+               chunk: int) -> jax.Array:
+    """[..., Sq, Sk] boolean mask. q_pos/k_pos: absolute positions."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    if kind == "local":
+        causal &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    elif kind == "chunked":
+        causal &= (q_pos[..., :, None] // chunk) == (k_pos[..., None, :] // chunk)
+    return causal
+
+
+def _dense_attention(qg, k_all, v_all, q_pos, k_pos, valid, cfg, base_kind):
+    """Unblocked attention (decode and short prefill).
+
+    qg: [B, Sq, nkv, g, hd]; k/v: [B, Sk, nkv, hd]."""
+    hd = qg.shape[-1]
+    scores = jnp.einsum("bsngh,btnh->bngst", qg, k_all,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd).astype(np.float32)
+    if cfg.attn_softcap is not None:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    mask = _attn_mask(q_pos, k_pos, base_kind, cfg.window, cfg.chunk)
+    mask = mask & valid[..., None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    return jnp.einsum("bngst,btnh->bsngh", probs, v_all)
+
+
+FLASH_THRESHOLD = 4096  # dense attention above this seq would blow HBM
+FLASH_QBLOCK = 2048
+FLASH_KBLOCK = 1024
+
+
+def _flash_attention(qg, k_all, v_all, q_pos, k_pos, cfg, base_kind):
+    """Blockwise (FlashAttention-style) online-softmax attention in pure
+    jnp — bounds the score matrix to [*, qb, kb] so prefill_32k fits HBM.
+    scan over q blocks (outer) and k blocks (inner)."""
+    B, Sq, nkv, g, hd = qg.shape
+    Sk = k_all.shape[1]
+
+    def _block(S, target):
+        # largest divisor of S not exceeding the target block size (VLM
+        # prefixes make S non-power-of-two, e.g. 4096+256)
+        for b in range(min(target, S), 0, -1):
+            if S % b == 0:
+                return b
+        return S
+
+    qb = _block(Sq, FLASH_QBLOCK)
+    kb = _block(Sk, FLASH_KBLOCK)
+    nq, nk = Sq // qb, Sk // kb
+    scale = 1.0 / np.sqrt(hd)
+
+    qs = qg.reshape(B, nq, qb, nkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(B, nq, qb).transpose(1, 0, 2)
+    ks = k_all.reshape(B, nk, kb, nkv, hd)
+    vs = v_all.reshape(B, nk, kb, nkv, hd)
+    kp = k_pos.reshape(B, nk, kb)
+
+    def q_step(_, qblk):
+        qi, qpi = qblk
+
+        def k_step(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_index_in_dim(ks, j, 1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vs, j, 1, keepdims=False)
+            kpj = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)
+            s = jnp.einsum("bsngh,btnh->bngst", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if cfg.attn_softcap is not None:
+                s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+            mask = _attn_mask(qpi, kpj, base_kind, cfg.window, cfg.chunk)
+            s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bngst,btnh->bngsh", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, nkv, g, qb), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, qb), jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(qg.dtype)  # [B,qb,nkv,g,hd]
+
+    _, outs = jax.lax.scan(q_step, None, (qs, qp))  # [nq, B, qb, nkv, g, hd]
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, nkv, g, hd)
+
+
+def attention_apply(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    kind: str = "global",
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    """GQA attention. x: [B, S, D].
+
+    Prefill/train: cache=None, S = sequence length.
+    Decode: cache={'k','v': [B, S_c, nkv, hd], 'pos': int32[B]}; S == 1.
+    Returns (y, new_cache).
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    groups = nh // nkv
+    base_kind = "local" if kind.startswith("local") else (
+        "chunked" if kind.startswith("chunked") else "global")
+
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, nh, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(B, S, nkv, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(B, S, nkv, hd)
+    q = mshard(q, None, None, "model", None)
+    k = mshard(k, None, None, "model", None)
+    v = mshard(v, None, None, "model", None)
+
+    if cfg.qk_norm:
+        q = rmsnorm_head(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_head(params["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None or S > 1:
+        # train / prefill: attend over the fresh k, v (cache assumed empty
+        # at prefill start); when a cache is supplied, fill it with the
+        # last S_c tokens so decode can continue from here.
+        k_all, v_all = k, v
+        k_pos = positions
+        q_pos = positions
+        valid = jnp.ones((B, S), bool)
+        if cache is not None:
+            S_c = cache["k"].shape[1]
+            S_w = min(S, S_c)
+            if base_kind in ("local", "chunked"):
+                slots = (jnp.arange(S_w) + (S - S_w)) % S_c
+            else:
+                slots = jnp.arange(S_w) + (S - S_w)
+            ck = cache["k"].at[:, slots].set(k[:, S - S_w:].astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(v[:, S - S_w:].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + S}
+    else:
+        S_c = cache["k"].shape[1]
+        pos = cache["pos"]  # int32[B] — tokens already in the cache
+        bidx = jnp.arange(B)
+        if base_kind in ("local", "chunked"):
+            # ring buffer: windowed/chunked layers keep S_c slots only —
+            # the sub-quadratic cache-memory path used by long_500k
+            slot = pos % S_c
+            abs_pos = (pos[:, None]
+                       - ((pos[:, None] - jnp.arange(S_c)[None, :]) % S_c))
+        else:
+            slot = jnp.minimum(pos, S_c - 1)
+            abs_pos = jnp.broadcast_to(
+                jnp.arange(S_c, dtype=jnp.int32)[None, :], (B, S_c))
+        k_all = cache["k"].astype(x.dtype).at[bidx, slot].set(k[:, 0])
+        v_all = cache["v"].astype(x.dtype).at[bidx, slot].set(v[:, 0])
+        new_cache = {"k": k_all, "v": v_all, "pos": pos + 1}
+        k_pos = abs_pos
+        q_pos = positions
+        # slot is valid if already written: 0 <= abs_pos <= pos (ring slots
+        # that were never written carry negative abs positions)
+        valid = (abs_pos <= pos[:, None]) & (abs_pos >= 0)
+
+    qg = q.reshape(B, S, nkv, groups, hd)
+    if cache is None and S > FLASH_THRESHOLD:
+        out = _flash_attention(qg, k_all, v_all, q_pos, k_pos, cfg, base_kind)
+    else:
+        out = _dense_attention(qg, k_all, v_all, q_pos, k_pos, valid, cfg,
+                               base_kind)
+    out = out.reshape(B, S, nh * hd)
+    y = out @ params["wo"].astype(x.dtype)
+    return mshard(y, None, None, None), new_cache
+
+
+def attention_init_cache(cfg, kind: str, batch: int, seq_len: int,
+                         dtype=jnp.bfloat16, prefilled: bool = True) -> dict:
+    """Decode cache for one attention layer. Windowed layers keep only
+    ``window`` slots — the sub-quadratic memory path for long_500k."""
+    base_kind = "local" if kind.startswith("local") else (
+        "chunked" if kind.startswith("chunked") else "global")
+    S_c = min(cfg.window, seq_len) if base_kind == "local" else seq_len
+    if base_kind == "chunked":
+        S_c = min(cfg.chunk, seq_len)
+    hd = cfg.resolved_head_dim
+    cache = {
+        "k": jnp.zeros((batch, S_c, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, S_c, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch,), seq_len if prefilled else 0, jnp.int32),
+    }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d: int, ff: int) -> dict:
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": _dense_init(ks[0], (d, ff)),
+        "wg": _dense_init(ks[1], (d, ff)),
+        "wo": _dense_init(ks[2], (ff, d)),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    h = (x @ params["wi"].astype(x.dtype)) * jax.nn.silu(
+        x @ params["wg"].astype(x.dtype))
+    h = mshard(h, None, None, "model")
+    return h @ params["wo"].astype(x.dtype)

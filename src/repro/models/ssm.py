@@ -1,0 +1,248 @@
+"""Recurrent token mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are linear-recurrence blocks with O(1) decode state — the
+sub-quadratic families that carry the long_500k shape. Prefill uses the
+chunked (matrix) form: a ``lax.scan`` over chunks with intra-chunk
+einsums, which keeps the score tensors bounded ([L, L] per chunk) and
+maps onto the MXU; decode is the single-step recurrence.
+
+Simplifications vs the source models (documented in DESIGN.md §5):
+  * Mamba2: no depthwise conv1d prefix, single B/C group.
+  * RWKV6: learned-constant token-shift lerp (not the LoRA-MLP shift);
+    data-dependent decay kept (the defining Finch feature).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, mshard
+
+CHUNK = 64  # prefill chunk length (bounds the [L, L, H, hd] decay tensors)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD): S_t = a_t·S_{t-1} + dt_t·(B_t ⊗ x_t),  y_t = S_t·C_t + D·x_t
+#   a_t = exp(dt_t * A_h)   (A_h < 0 per head; dt via softplus)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(rng, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.ssm_heads or (d // 64)
+    hd = 64
+    N = cfg.ssm_state
+    inner = H * hd
+    ks = jax.random.split(rng, 4)
+    return {
+        # fused input projection: [z (gate), x_inner, B, C, dt]
+        "in_proj": _dense_init(ks[0], (d, 2 * inner + 2 * N + H)),
+        "out_proj": _dense_init(ks[1], (inner, d)),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.zeros((inner,), jnp.float32),
+    }
+
+
+def _mamba2_split(params, x, cfg):
+    d = cfg.d_model
+    H = cfg.ssm_heads or (d // 64)
+    hd, N = 64, cfg.ssm_state
+    inner = H * hd
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xi, Bm, Cm, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + N, 2 * inner + 2 * N], axis=-1)
+    B_, S_ = x.shape[0], x.shape[1]
+    xi = xi.reshape(B_, S_, H, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dt)  # decay in (0,1)
+    return z, xi, Bm.astype(jnp.float32), Cm.astype(jnp.float32), dt, a
+
+
+def mamba2_apply(params, x, cfg, cache: Optional[dict] = None):
+    """x: [B, S, d]. cache: {'state': f32[B,H,hd,N], 'pos'} for decode."""
+    B_, S_, d = x.shape
+    H = cfg.ssm_heads or (d // 64)
+    hd, N = 64, cfg.ssm_state
+    z, xi, Bm, Cm, dt, a = _mamba2_split(params, x, cfg)
+    xif = xi.astype(jnp.float32)
+
+    if cache is not None and S_ == 1:  # single-step decode
+        st = cache["state"]  # [B,H,hd,N]
+        st = st * a[:, 0, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xif[:, 0], Bm[:, 0])
+        y = jnp.einsum("bhpn,bn->bhp", st, Cm[:, 0])[:, None]  # [B,1,H,hd]
+        new_cache = {"state": st, "pos": cache["pos"] + 1}
+    else:
+        L = min(CHUNK, S_)
+        assert S_ % L == 0, "sequence must be divisible by the scan chunk"
+        nc = S_ // L
+
+        def chunk_step(st, inp):
+            xc, Bc, Cc, dtc, ac = inp  # [B,L,...]
+            clog = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-20)), axis=1)  # [B,L,H]
+            # carry-in: y_state[t] = exp(clog_t)·C_t·S_prev
+            y_in = jnp.einsum("blh,bhpn,bln->blhp", jnp.exp(clog), st, Cc)
+            # intra-chunk: M[t,s] = exp(clog_t - clog_s)·dt_s  (s <= t)
+            rel = jnp.exp(clog[:, :, None, :] - clog[:, None, :, :])  # [B,L,L,H]
+            causal = jnp.tril(jnp.ones((L, L), bool))
+            M = jnp.where(causal[None, :, :, None], rel, 0.0) * dtc[:, None, :, :]
+            ctb = jnp.einsum("bln,bsn->bls", Cc, Bc)  # [B,L,L]
+            y_intra = jnp.einsum("blsh,bls,bshp->blhp", M, ctb, xc)
+            # state update
+            decay_to_end = jnp.exp(clog[:, -1:, :] - clog)  # [B,L,H]
+            st_new = st * jnp.exp(clog[:, -1])[:, :, None, None] + jnp.einsum(
+                "blh,blh,blhp,bln->bhpn", decay_to_end, dtc, xc, Bc)
+            return st_new, y_in + y_intra
+
+        st0 = cache["state"] if cache is not None else \
+            jnp.zeros((B_, H, hd, N), jnp.float32)
+        inps = (
+            xif.reshape(B_, nc, L, H, hd).transpose(1, 0, 2, 3, 4),
+            Bm.reshape(B_, nc, L, N).transpose(1, 0, 2, 3),
+            Cm.reshape(B_, nc, L, N).transpose(1, 0, 2, 3),
+            dt.reshape(B_, nc, L, H).transpose(1, 0, 2, 3),
+            a.reshape(B_, nc, L, H).transpose(1, 0, 2, 3),
+        )
+        st, ys = jax.lax.scan(chunk_step, st0, inps)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S_, H, hd)
+        new_cache = None if cache is None else \
+            {"state": st, "pos": cache["pos"] + S_}
+
+    y = y + params["D"][None, None, :, None] * xif
+    y = y.reshape(B_, S_, H * hd).astype(x.dtype)
+    # gated RMSNorm (mamba2's norm-before-out)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_scale"])
+    out = yf.astype(x.dtype) @ params["out_proj"].astype(x.dtype)
+    return mshard(out, None, None, None), new_cache
+
+
+def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    H = cfg.ssm_heads or (cfg.d_model // 64)
+    return {"state": jnp.zeros((batch, H, 64, cfg.ssm_state), jnp.float32),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): S_t = diag(w_t)·S_{t-1} + k_t ⊗ v_t
+#   y_t = r_t · (diag(u)·k_t ⊗ v_t + S_{t-1}),  w_t data-dependent
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_init(rng, cfg) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    ks = jax.random.split(rng, 8)
+    return {
+        "wr": _dense_init(ks[0], (d, d)),
+        "wk": _dense_init(ks[1], (d, d)),
+        "wv": _dense_init(ks[2], (d, d)),
+        "wg": _dense_init(ks[3], (d, d)),
+        "wo": _dense_init(ks[4], (d, d)),
+        # data-dependent decay: w = exp(-exp(w0 + x @ w_proj))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_proj": _dense_init(ks[5], (d, d), scale=0.01),
+        "u": jnp.zeros((H, hd), jnp.float32),  # per-head bonus
+        # token-shift lerp coefficients per projection
+        "mu": jnp.full((5, d), 0.5, jnp.float32),
+        "ln_scale": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _rwkv_shift(x, prev):
+    """Token shift: x_{t-1} per position (prev carries the last token)."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def rwkv6_apply(params, x, cfg, cache: Optional[dict] = None):
+    """x: [B, S, d]. cache: {'state': f32[B,H,hd,hd], 'prev': [B,d], 'pos'}."""
+    B_, S_, d = x.shape
+    hd = cfg.rwkv_head_size
+    H = d // hd
+
+    prev = cache["prev"].astype(x.dtype) if cache is not None else \
+        jnp.zeros((B_, d), x.dtype)
+    xs = _rwkv_shift(x, prev)
+    mu = params["mu"].astype(x.dtype)
+    xr = x + mu[0] * (xs - x)
+    xk = x + mu[1] * (xs - x)
+    xv = x + mu[2] * (xs - x)
+    xw = x + mu[3] * (xs - x)
+    xg = x + mu[4] * (xs - x)
+
+    r = (xr @ params["wr"].astype(x.dtype)).reshape(B_, S_, H, hd)
+    k = (xk @ params["wk"].astype(x.dtype)).reshape(B_, S_, H, hd)
+    v = (xv @ params["wv"].astype(x.dtype)).reshape(B_, S_, H, hd)
+    g = xg @ params["wg"].astype(x.dtype)
+    # data-dependent decay (the Finch contribution, arXiv:2404.05892)
+    logw = -jnp.exp(params["w0"] + (xw @ params["w_proj"].astype(x.dtype))
+                    .astype(jnp.float32))  # [B,S,d] in (-inf, 0)
+    logw = logw.reshape(B_, S_, H, hd)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = params["u"]
+
+    if cache is not None and S_ == 1:  # decode
+        st = cache["state"]  # [B,H,hd(key),hd(value)]
+        kv = jnp.einsum("bhc,bhw->bhcw", kf[:, 0], vf[:, 0])
+        y = jnp.einsum("bhc,bhcw->bhw", rf[:, 0], st + u[None, :, :, None] * kv)
+        st = jnp.exp(logw[:, 0])[..., None] * st + kv
+        y = y[:, None]  # [B,1,H,hd]
+        new_cache = {"state": st, "prev": x[:, -1, :], "pos": cache["pos"] + 1}
+    else:
+        L = min(CHUNK, S_)
+        assert S_ % L == 0
+        nc = S_ // L
+
+        def chunk_step(st, inp):
+            rc, kc, vc, lwc = inp  # [B,L,H,*]
+            clog = jnp.cumsum(lwc, axis=1)  # [B,L,H,hd] inclusive
+            # carry-in uses state BEFORE this step: decay exp(clog_{t-1})
+            clog_prev = clog - lwc  # exclusive cumsum
+            y_in = jnp.einsum("blhc,bhcw->blhw", rc * jnp.exp(clog_prev), st)
+            # intra: s < t strictly; decay exp(clog_{t-1} - clog_s)
+            Dm = jnp.exp(clog_prev[:, :, None] - clog[:, None, :])  # [B,L,L,H,hd]
+            strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+            Dm = jnp.where(strict[None, :, :, None, None], Dm, 0.0)
+            att = jnp.einsum("blhc,blshc,bshc->blsh", rc, Dm, kc)
+            y_intra = jnp.einsum("blsh,bshw->blhw", att, vc)
+            # bonus (current token)
+            y_bonus = jnp.einsum("blhc,hc,blhc,blhw->blhw",
+                                 rc, u, kc, vc)
+            # state update: S_new = diag(exp(clog_L)) S + Σ_s exp(clog_L-clog_s) k_s⊗v_s
+            dte = jnp.exp(clog[:, -1:, :] - clog)  # [B,L,H,hd]
+            st_new = jnp.exp(clog[:, -1])[..., None] * st + jnp.einsum(
+                "blhc,blhc,blhw->bhcw", dte, kc, vc)
+            return st_new, y_in + y_intra + y_bonus
+
+        st0 = cache["state"] if cache is not None else \
+            jnp.zeros((B_, H, hd, hd), jnp.float32)
+        inps = tuple(t.reshape(B_, nc, L, H, hd).transpose(1, 0, 2, 3, 4)
+                     for t in (rf, kf, vf, logw))
+        st, ys = jax.lax.scan(chunk_step, st0, inps)
+        y = ys.transpose(1, 0, 2, 3, 4)  # [B,nc,L,H,hd]
+        y = y.reshape(B_, S_, H, hd)
+        new_cache = None if cache is None else \
+            {"state": st, "prev": x[:, -1, :], "pos": cache["pos"] + S_}
+
+    # per-head groupnorm, then output gate
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6)
+    y = y.reshape(B_, S_, d) * (1.0 + params["ln_scale"])
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = y @ params["wo"].astype(x.dtype)
+    return mshard(out, None, None, None), new_cache
+
+
+def rwkv6_init_cache(cfg, batch: int, d: int) -> dict:
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    return {"state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "prev": jnp.zeros((batch, d), jnp.bfloat16),
+            "pos": jnp.zeros((batch,), jnp.int32)}

@@ -1,0 +1,5 @@
+"""Optimizers and schedules (built from scratch — no optax)."""
+from repro.optim.adamw import AdamW, FlatAdamW
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+__all__ = ["AdamW", "FlatAdamW", "cosine_schedule", "linear_warmup_cosine"]

@@ -1,0 +1,97 @@
+"""AdamW — tree form and flat-sharded (ZeRO-1) form.
+
+``AdamW`` is the standard pytree optimizer (used by the federated local
+steps and the smoke tests).
+
+``FlatAdamW`` operates on a *flat f32 vector shard*: since SAFE publishes
+the aggregated gradient as a public flat vector anyway (the chain output,
+DESIGN.md §3), each learner rank can own 1/n of the optimizer state and
+update only its slice — ZeRO-1 over the learner axis at zero privacy
+cost (the aggregated average is public by protocol). The updated shards
+are all-gathered back into the parameter tree by the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params) -> AdamState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), zeros,
+                         jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamState(step, m, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatAdamW:
+    """AdamW on a flat f32 shard (elementwise — safe to shard anyhow)."""
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, nelem: int) -> AdamState:
+        z = jnp.zeros((nelem,), jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32), z, jnp.zeros_like(z))
+
+    def update(self, grad_shard: jax.Array, state: AdamState,
+               param_shard: jax.Array):
+        step = state.step + 1
+        g = grad_shard.astype(jnp.float32)
+        m = self.b1 * state.m + (1 - self.b1) * g
+        v = self.b2 * state.v + (1 - self.b2) * jnp.square(g)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+        u = u + self.weight_decay * param_shard.astype(jnp.float32)
+        new_shard = param_shard.astype(jnp.float32) - self._lr(step) * u
+        return new_shard, AdamState(step, m, v)

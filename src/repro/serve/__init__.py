@@ -1,0 +1,4 @@
+"""Serving: prefill/decode engine with batched requests."""
+from repro.serve.engine import ServeEngine, make_serve_step
+
+__all__ = ["ServeEngine", "make_serve_step"]

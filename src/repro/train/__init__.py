@@ -1,0 +1,11 @@
+"""Training: SAFE-integrated distributed step, FedAvg rounds, metrics."""
+from repro.train.train_step import make_train_step, TrainStepBundle
+from repro.train.federated import make_federated_round, FederatedBundle
+from repro.train.loss import next_token_loss
+from repro.train.metrics import MetricsLogger
+
+__all__ = [
+    "make_train_step", "TrainStepBundle",
+    "make_federated_round", "FederatedBundle",
+    "next_token_loss", "MetricsLogger",
+]

@@ -1,0 +1,25 @@
+"""Next-token cross-entropy over the zoo's output conventions."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array,
+                    prefix_len: int = 0) -> jax.Array:
+    """Mean next-token CE.
+
+    logits: [B, S(+P), V] or [B, S(+P), nc, V] (multi-codebook);
+    tokens:  [B, S] or [B, S, nc]. ``prefix_len`` positions at the front
+    of the logits (modality-frontend embeddings) carry no loss.
+    """
+    if prefix_len:
+        logits = logits[:, prefix_len:]
+    # predict token t+1 from position t
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# make `from helpers import run_multidevice` work regardless of rootdir
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+# Do NOT set XLA device-count flags here: the main test process must see
+# exactly one device (multi-device tests spawn subprocesses — helpers.py).

@@ -1,0 +1,97 @@
+"""Dry-run tooling: HLO collective parser, shape-bytes, spec sanitizer,
+hierarchical controller — pure-host units."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.dryrun import _shape_bytes, parse_collectives
+from repro.models.sharding import sanitize_spec
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("bf16[16,1024]{1,0}") == 16 * 1024 * 2
+        assert _shape_bytes("f32[8]{0}") == 32
+        assert _shape_bytes("u32[2,2]{1,0}") == 16
+
+    def test_tuple_sums(self):
+        assert _shape_bytes("(bf16[4]{0}, f32[4]{0})") == 8 + 16
+
+    def test_unknown_dtype_ignored(self):
+        assert _shape_bytes("token[]") == 0
+
+
+SAMPLE_HLO = """
+HloModule test
+
+%main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %cp = f32[64]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %ag = f32[128]{0} all-gather(%cp), dimensions={0}
+  ROOT %ar = f32[64]{0} all-reduce(%p0), to_apply=%add
+}
+
+%while_body.1 (p: f32[32]) -> f32[32] {
+  %p = f32[32]{0} parameter(0)
+  ROOT %a2a = f32[32]{0} all-to-all(%p), dimensions={0}
+}
+"""
+
+
+class TestParseCollectives:
+    def test_counts_and_bytes(self):
+        res = parse_collectives(SAMPLE_HLO, loop_multiplier=1)
+        assert res["bytes"]["collective-permute"] == 64 * 4
+        assert res["bytes"]["all-gather"] == 128 * 4
+        assert res["bytes"]["all-reduce"] == 64 * 4
+        assert res["bytes"]["all-to-all"] == 32 * 4
+
+    def test_loop_multiplier_applies_to_while_bodies(self):
+        r1 = parse_collectives(SAMPLE_HLO, loop_multiplier=1)
+        r10 = parse_collectives(SAMPLE_HLO, loop_multiplier=10)
+        # only the all-to-all inside %while_body scales
+        assert r10["bytes"]["all-to-all"] == 10 * r1["bytes"]["all-to-all"]
+        assert r10["bytes"]["all-gather"] == r1["bytes"]["all-gather"]
+
+
+class TestSanitizeSpec:
+    def test_drops_non_divisible(self):
+        spec = sanitize_spec(P("model", None), (151655, 896), {"model": 16})
+        assert spec == P(None, None)
+
+    def test_keeps_divisible(self):
+        spec = sanitize_spec(P("model", None), (256, 8), {"model": 16})
+        assert spec == P("model", None)
+
+    def test_tuple_axes(self):
+        spec = sanitize_spec(P(("pod", "data"), None), (64, 8),
+                             {"pod": 2, "data": 16})
+        assert spec == P(("pod", "data"), None)
+        spec = sanitize_spec(P(("pod", "data"), None), (33, 8),
+                             {"pod": 2, "data": 16})
+        assert spec == P(None, None)
+
+    def test_pads_short_spec(self):
+        spec = sanitize_spec(P("model"), (32, 4, 4), {"model": 16})
+        assert spec == P("model", None, None)
+
+
+class TestHierarchicalController:
+    def test_parent_averages_children(self):
+        from repro.core.controller import Controller, HierarchicalController
+        import numpy as np
+        kids = []
+        for base in (0.0, 2.0):
+            c = Controller({0: [1, 2, 3]})
+            c.post_average(1, np.full(4, base + 1.0), group=0)
+            kids.append(c)
+        parent = HierarchicalController(kids)
+        res = parent.collect()
+        np.testing.assert_allclose(res["average"], np.full(4, 2.0))
+        assert parent.up_messages == 2
+
+    def test_incomplete_child_rejected(self):
+        from repro.core.controller import Controller, HierarchicalController
+        parent = HierarchicalController([Controller({0: [1, 2, 3]})])
+        with pytest.raises(AssertionError):
+            parent.collect()
