@@ -30,6 +30,30 @@ def save_json(name: str, payload) -> str:
     return path
 
 
+#: stable machine-readable schema version for BENCH_<name>.json files —
+#: bump only on breaking layout changes so perf-trajectory tooling can
+#: parse every historical run.
+BENCH_SCHEMA = "safe-bench/v1"
+
+
+def save_bench_json(name: str, bench_rows: list, status: str,
+                    wall_s: float) -> str:
+    """Write results/benchmarks/BENCH_<name>.json with the stable schema:
+
+    {"schema": "safe-bench/v1", "name": ..., "status": "ok"|"failed",
+     "wall_s": ..., "rows": [{"name", "us_per_call", "derived"}, ...]}
+    """
+    payload = {
+        "schema": BENCH_SCHEMA,
+        "name": name,
+        "status": status,
+        "wall_s": wall_s,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for (n, us, d) in bench_rows],
+    }
+    return save_json(f"BENCH_{name}", payload)
+
+
 def wall(fn: Callable, repeats: int = 3) -> float:
     """Median wall time of fn() in seconds."""
     ts = []

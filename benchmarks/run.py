@@ -1,40 +1,70 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
-persists JSON to results/benchmarks/. See DESIGN.md §9 for the
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit)
+and persists JSON to results/benchmarks/. With ``--bench-json`` each
+module additionally writes a stable ``BENCH_<module>.json``
+(schema ``safe-bench/v1`` — see common.save_bench_json) so the perf
+trajectory is machine-readable across runs. ``--only NAME`` restricts to
+modules whose key contains NAME. See DESIGN.md §9 for the
 figure-to-module index.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
 def main() -> None:
-    from benchmarks import (constrained, device_aggregation, failover,
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--bench-json", action="store_true",
+                        help="emit stable BENCH_<module>.json per module")
+    parser.add_argument("--only", default=None,
+                        help="run only modules whose key contains this")
+    args = parser.parse_args()
+
+    from benchmarks import (common, constrained, device_aggregation, failover,
                             feature_scalability, hierarchical, kernel_bench,
-                            messages, node_scalability, subgrouping)
+                            messages, multi_session, node_scalability,
+                            subgrouping)
     print("name,us_per_call,derived")
     t0 = time.time()
     mods = [
-        ("node_scalability (Figs 6-9)", node_scalability.main),
-        ("feature_scalability (Figs 10-12)", feature_scalability.main),
-        ("failover (Figs 13-14)", failover.main),
-        ("constrained deep-edge (Figs 15-18)", constrained.main),
-        ("subgrouping (Figs 19-20)", subgrouping.main),
-        ("hierarchical federation (§5.10)", hierarchical.main),
-        ("messages (§5 formulas)", messages.main),
-        ("device_aggregation", device_aggregation.main),
-        ("kernel_bench", kernel_bench.main),
+        ("node_scalability", "node_scalability (Figs 6-9)", node_scalability.main),
+        ("feature_scalability", "feature_scalability (Figs 10-12)", feature_scalability.main),
+        ("failover", "failover (Figs 13-14)", failover.main),
+        ("constrained", "constrained deep-edge (Figs 15-18)", constrained.main),
+        ("subgrouping", "subgrouping (Figs 19-20)", subgrouping.main),
+        ("hierarchical", "hierarchical federation (§5.10)", hierarchical.main),
+        ("messages", "messages (§5 formulas)", messages.main),
+        ("device_aggregation", "device_aggregation", device_aggregation.main),
+        ("kernel_bench", "kernel_bench", kernel_bench.main),
+        ("multi_session", "multi_session engine (ARCHITECTURE.md)", multi_session.main),
     ]
     failures = 0
-    for name, fn in mods:
+    matched = 0
+    for key, name, fn in mods:
+        if args.only and args.only not in key:
+            continue
+        matched += 1
         print(f"# --- {name} ---", flush=True)
+        before = len(common.rows())
+        mod_t0 = time.time()
+        status = "ok"
         try:
             fn()
         except Exception as e:  # noqa: BLE001
             failures += 1
+            status = "failed"
             print(f"# FAILED {name}: {e!r}", flush=True)
+        if args.bench_json:
+            common.save_bench_json(key, common.rows()[before:], status,
+                                   time.time() - mod_t0)
+    if args.only and matched == 0:
+        keys = ", ".join(k for k, _, _ in mods)
+        print(f"# ERROR: --only {args.only!r} matched no module "
+              f"(available: {keys})", file=sys.stderr)
+        sys.exit(2)
     print(f"# done in {time.time()-t0:.1f}s, failures={failures}")
     sys.exit(1 if failures else 0)
 

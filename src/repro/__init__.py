@@ -2,14 +2,20 @@
 production-grade multi-pod JAX framework.
 
 Public API surface:
-  repro.core      — SecureAggregator (safe/saf/insec/bon), protocol sim
+  repro.topology  — shared ring/subgroup/hierarchical topology layer
+  repro.core      — SecureAggregator (safe/saf/insec/bon), protocol sim,
+                    AggSession
   repro.crypto    — Threefry PRF, fixed-point ring codec
   repro.kernels   — Pallas TPU masking kernels (+ jnp oracles)
   repro.models    — the 10-architecture zoo
   repro.configs   — get_config / get_smoke_config / all_arch_ids
   repro.train     — make_train_step, make_federated_round
-  repro.serve     — ServeEngine, make_serve_step
+  repro.serve     — ServeEngine, AggregationEngine
   repro.launch    — production meshes, multi-pod dry-run, CLIs
+
+See ARCHITECTURE.md for the two-plane + topology-layer picture.
 """
+
+from repro import compat  # noqa: F401  (installs jax API shims on old jax)
 
 __version__ = "1.0.0"

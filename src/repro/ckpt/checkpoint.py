@@ -1,11 +1,17 @@
-"""Sharding-aware pytree checkpointing (msgpack + zstd).
+"""Sharding-aware pytree checkpointing (msgpack + zstd/gzip).
 
-Layout: ``<dir>/step_<N>/manifest.msgpack.zst`` holding the tree
+Layout: ``<dir>/step_<N>/manifest.msgpack.<ext>`` holding the tree
 structure, dtypes, shapes and (for sharded arrays) the PartitionSpec that
 produced them, plus one raw buffer blob. Arrays are gathered to host
 before writing (fine at the model sizes the examples train; a real
 multi-host deployment would write per-shard files — the manifest format
 already carries what that needs).
+
+Compression: zstd when the ``zstandard`` package is available, otherwise
+stdlib gzip. The codec is the format tag — it is recorded both in the
+file extension (``.zst`` / ``.gz``) and in the blob's magic bytes, and
+restores auto-detect it, so checkpoints written under either codec read
+back on any host.
 
 Restores are exact (bit-level) and include the optimizer state and the
 data-pipeline step, so training resumes deterministically — property-
@@ -13,6 +19,7 @@ tested in tests/test_checkpoint.py.
 """
 from __future__ import annotations
 
+import gzip
 import os
 import re
 from typing import Any, Optional
@@ -21,7 +28,59 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional dependency — gzip fallback below covers its absence
+    import zstandard as zstd
+except ModuleNotFoundError:
+    zstd = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+_GZIP_MAGIC = b"\x1f\x8b"
+
+
+def _compress(data: bytes) -> tuple[bytes, str]:
+    """Compress with the best available codec; returns (blob, extension)."""
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(data), "zst"
+    return gzip.compress(data, compresslevel=6), "gz"
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Codec auto-detection by magic bytes (the on-disk format tag)."""
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but the zstandard package is "
+                "not installed on this host")
+        return zstd.ZstdDecompressor().decompress(blob)
+    if blob[:2] == _GZIP_MAGIC:
+        return gzip.decompress(blob)
+    return blob  # raw (uncompressed legacy blob)
+
+
+def _write_tagged(path_base: str, data: bytes) -> None:
+    """Write ``<path_base>.<ext>`` for the active codec, removing any
+    stale sibling written under the other codec — re-saving a step on a
+    host with different compression must not leave an old blob that a
+    later restore would silently prefer."""
+    blob, ext = _compress(data)
+    with open(f"{path_base}.{ext}", "wb") as f:
+        f.write(blob)
+    for other in ("zst", "gz", ""):
+        if other != ext:
+            stale = f"{path_base}.{other}" if other else path_base
+            if os.path.exists(stale):
+                os.remove(stale)
+
+
+def _read_tagged(path_base: str) -> bytes:
+    """Read ``<path_base>.{zst,gz}`` (or bare), whichever exists."""
+    for ext in ("zst", "gz", ""):
+        p = f"{path_base}.{ext}" if ext else path_base
+        if os.path.exists(p):
+            with open(p, "rb") as f:
+                return _decompress(f.read())
+    raise FileNotFoundError(f"no checkpoint blob at {path_base}.(zst|gz)")
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -59,22 +118,17 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         "leaves": metas,
         "extra": extra or {},
     }
-    cctx = zstd.ZstdCompressor(level=3)
-    with open(os.path.join(path, "manifest.msgpack.zst"), "wb") as f:
-        f.write(cctx.compress(msgpack.packb(manifest)))
-    with open(os.path.join(path, "buffers.bin.zst"), "wb") as f:
-        f.write(cctx.compress(b"".join(blobs)))
+    _write_tagged(os.path.join(path, "manifest.msgpack"),
+                  msgpack.packb(manifest))
+    _write_tagged(os.path.join(path, "buffers.bin"), b"".join(blobs))
     return path
 
 
 def restore_checkpoint(directory: str, step: int, skeleton: Any) -> tuple[Any, dict]:
     """Restore into the structure of ``skeleton`` (shapes/dtypes checked)."""
     path = os.path.join(directory, f"step_{step:08d}")
-    dctx = zstd.ZstdDecompressor()
-    with open(os.path.join(path, "manifest.msgpack.zst"), "rb") as f:
-        manifest = msgpack.unpackb(dctx.decompress(f.read()))
-    with open(os.path.join(path, "buffers.bin.zst"), "rb") as f:
-        raw = dctx.decompress(f.read())
+    manifest = msgpack.unpackb(_read_tagged(os.path.join(path, "manifest.msgpack")))
+    raw = _read_tagged(os.path.join(path, "buffers.bin"))
     leaves, treedef = jax.tree.flatten(skeleton)
     assert len(leaves) == len(manifest["leaves"]), (
         f"checkpoint has {len(manifest['leaves'])} leaves, skeleton "

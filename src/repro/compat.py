@@ -1,0 +1,57 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the modern jax API (``jax.shard_map``,
+``jax.set_mesh``, ``jax.make_mesh``). Older jax releases (< 0.6) ship the
+same functionality under ``jax.experimental.shard_map`` and the ``Mesh``
+context manager; this module installs thin aliases onto the ``jax``
+module so every call site — src, tests, benchmarks, examples — runs
+unmodified on both. Imported for its side effects from ``repro/__init__``
+(and therefore by every entry point that touches repro).
+
+The shims are strictly additive: on a modern jax none of the branches
+fire and jax is untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  axis_names=None, check_vma=None, **_ignored):
+        """Modern-signature wrapper over jax.experimental.shard_map.
+
+        ``axis_names`` maps onto the old ``auto`` parameter (auto = mesh
+        axes not named manual); ``check_vma`` has no pre-0.6 equivalent,
+        so replication checking is disabled (the repo's out_specs already
+        encode replication intent).
+        """
+        auto = frozenset()
+        if axis_names is not None and hasattr(mesh, "axis_names"):
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False, auto=auto)
+
+    jax.shard_map = shard_map
+
+if not hasattr(jax, "set_mesh"):
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = set_mesh
+
+if not hasattr(jax, "make_mesh"):
+    import numpy as _np
+    from jax.sharding import Mesh as _Mesh
+
+    def make_mesh(axis_shapes, axis_names):
+        devs = _np.asarray(jax.devices()[: int(_np.prod(axis_shapes))])
+        return _Mesh(devs.reshape(axis_shapes), axis_names)
+
+    jax.make_mesh = make_mesh

@@ -11,9 +11,11 @@ from repro.core.aggregators import SecureAggregator, make_aggregator, make_round
 from repro.core.chain import (
     chain_aggregate_sequential,
     chain_aggregate_pipelined,
+    chain_aggregate_batched,
 )
 from repro.core.bon import bon_aggregate
 from repro.core.insec import insec_aggregate
+from repro.core.session import AggSession
 
 __all__ = [
     "ChainConfig",
@@ -23,6 +25,8 @@ __all__ = [
     "make_round_keys",
     "chain_aggregate_sequential",
     "chain_aggregate_pipelined",
+    "chain_aggregate_batched",
     "bon_aggregate",
     "insec_aggregate",
+    "AggSession",
 ]

@@ -17,10 +17,19 @@ Two schedules are provided:
     ~2V bytes/link instead of (n-1)·V.
 
 Failover: an ``alive`` bitmap (decided *between* rounds by the host
-control plane — see ``core/failover.py``) compacts the chain: dead ranks
-forward-and-repad without contributing, and the published mean divides by
-``popcount(alive)``, matching §5.3's "average over n-f survivors". The
-initiator is the first alive rank (§5.4 re-election semantics).
+control plane — ``repro.topology.failover.AliveTracker``) compacts the
+chain: dead ranks forward-and-repad without contributing, and the
+published mean divides by ``popcount(alive)``, matching §5.3's "average
+over n-f survivors". The initiator is the first alive rank (§5.4
+re-election semantics).
+
+All ring geometry — ppermute pairs, neighbours, initiator election —
+comes from ``repro.topology`` (the same objects the discrete-event sim
+consumes), so the two planes cannot diverge on topology semantics.
+
+``chain_aggregate_batched`` runs S independent sessions — each with its
+own keys, counters, alive bitmap and rotation — through one program; it
+is the device substrate of ``serve/agg_engine.AggregationEngine``.
 """
 from __future__ import annotations
 
@@ -30,33 +39,14 @@ import jax.numpy as jnp
 from repro.crypto.fixedpoint import FixedPointCodec
 from repro.crypto.prf import derive_key, derive_pair_key, keystream_pair_lanes
 from repro.core.types import ChainConfig, RoundKeys
+from repro.topology import elect_initiator_local
 
 # Domain-separation tags for derive_key.
 _TAG_INITIATOR_MASK = 0x52  # 'R'
 _TAG_HOP_PAD = 0x50  # 'P'
 
 
-def _ring_perm(n: int, group_size: int):
-    """Permutation pairs for a +1 shift on each subgroup ring.
-
-    With g = n / group_size subgroups, rank r belongs to group r // m
-    (m = group_size) and its successor is the next local index, wrapping
-    within the group — g disjoint rings over one mesh axis (paper §5.5).
-    """
-    m = group_size
-    return [(r, (r // m) * m + (r % m + 1) % m) for r in range(n)]
-
-
-def _neighbours(rank, n: int, group_size: int):
-    """(prev, next) rank ids on this rank's subgroup ring."""
-    m = group_size
-    g0 = (rank // m) * m
-    nxt = g0 + (rank - g0 + 1) % m
-    prv = g0 + (rank - g0 + m - 1) % m
-    return prv, nxt
-
-
-def _hop_pads(keys: RoundKeys, rank, n: int, group_size: int, nwords: int, use_pads: bool):
+def _hop_pads(keys: RoundKeys, rank, topo, nwords: int, use_pads: bool):
     """Outgoing/incoming one-time pads for this rank's ring edges.
 
     pad_out is keyed on (rank -> next), pad_in on (prev -> rank); the same
@@ -68,7 +58,7 @@ def _hop_pads(keys: RoundKeys, rank, n: int, group_size: int, nwords: int, use_p
     if not use_pads:
         z = jnp.zeros((nwords,), jnp.uint32)
         return z, z
-    prv, nxt = _neighbours(rank, n, group_size)
+    prv, nxt = topo.neighbors(rank)
     seed = derive_key(keys.provisioning_seed, _TAG_HOP_PAD)
     k_out = derive_pair_key(seed, rank, nxt)
     k_in = derive_pair_key(seed, prv, rank)
@@ -116,6 +106,7 @@ def chain_aggregate_sequential(
       rank (the paper's post_average/get_average distribution).
     """
     assert cfg.mode in ("safe", "saf"), cfg.mode
+    topo = cfg.topology
     n, m = cfg.num_learners, cfg.group_size
     axis = cfg.axis
     rank = jax.lax.axis_index(axis)
@@ -134,24 +125,21 @@ def chain_aggregate_sequential(
     nwords = payload.shape[0]
 
     ev = codec.encode(payload) * my_alive.astype(jnp.uint32)
-    pad_out, pad_in = _hop_pads(keys, rank, n, m, nwords, cfg.mode == "safe")
+    pad_out, pad_in = _hop_pads(keys, rank, topo, nwords, cfg.mode == "safe")
     R = _initiator_mask(keys, nwords, keys.counter_base)
 
-    # Initiator of each subgroup ring = first alive local index starting
-    # from the per-round rotation offset (§5.4 re-election semantics +
-    # §8 round-order randomization).
-    g0 = (rank // m) * m
+    # Initiator of each subgroup ring: shared election formula from the
+    # topology layer (§5.4 re-election + §8 round-order randomization).
+    g0 = topo.group_start(rank)
     group_alive = jax.lax.dynamic_slice(alive, (g0,), (m,))
-    rot = jnp.asarray(rotate, jnp.int32) % m
-    rolled = jnp.roll(group_alive, -rot)
-    init_local = (jnp.argmax(rolled > 0).astype(jnp.int32) + rot) % m
+    init_local = elect_initiator_local(group_alive, rotate, xp=jnp)
     init_rank = g0 + init_local
     is_init = rank == init_rank
 
     # Hop 0: the initiator posts enc<x_init + R> to its successor.
     x = jnp.where(is_init, ev + R + pad_out, jnp.zeros_like(ev))
 
-    perm = _ring_perm(n, m)
+    perm = topo.ring_permutation()
 
     def hop(t, x):
         x = jax.lax.ppermute(x, axis, perm)
@@ -199,6 +187,7 @@ def chain_aggregate_pipelined(
     non-owner sees is offset by another rank's private mask.
     """
     assert cfg.mode in ("safe", "saf"), cfg.mode
+    topo = cfg.topology
     n, m = cfg.num_learners, cfg.group_size
     axis = cfg.axis
     rank = jax.lax.axis_index(axis)
@@ -221,12 +210,12 @@ def chain_aggregate_pipelined(
 
     ev = (codec.encode(payload) * my_alive.astype(jnp.uint32)).reshape(m, seg)
 
-    g0 = (rank // m) * m
-    lrank = rank - g0
+    g0 = topo.group_start(rank)
+    lrank = topo.local_index(rank)
     group_alive = jax.lax.dynamic_slice(alive, (g0,), (m,))
 
     # Per-(edge, segment) pads: counter offset s*seg keeps streams disjoint.
-    prv, nxt = _neighbours(rank, n, m)
+    prv, nxt = topo.neighbors(rank)
     use_pads = cfg.mode == "safe"
     base = jnp.asarray(keys.counter_base, jnp.uint32)
     if use_pads:
@@ -242,7 +231,7 @@ def chain_aggregate_pipelined(
     # lrank on its subgroup ring).
     R_own = _initiator_mask(keys, seg, base)
 
-    perm = _ring_perm(n, m)
+    perm = topo.ring_permutation()
 
     # Step 0: every rank starts its own segment's chain.
     s = lrank
@@ -309,3 +298,60 @@ def _publish(group_avg: jax.Array, is_init, cfg: ChainConfig, *, broadcast: bool
     if cfg.pod_axis is not None:
         avg = jax.lax.pmean(avg, cfg.pod_axis)
     return avg
+
+
+def chain_aggregate_batched(
+    values: jax.Array,
+    prov_seeds: jax.Array,
+    learner_seeds: jax.Array,
+    counter_bases: jax.Array,
+    cfg: ChainConfig,
+    alive: jax.Array,
+    weights: jax.Array | None = None,
+    rotate: jax.Array | None = None,
+) -> jax.Array:
+    """S independent SAFE rounds through one program (per-rank view).
+
+    Each session s runs the exact arithmetic of
+    ``chain_aggregate_sequential`` — its own derived keys, counter space,
+    alive bitmap and initiator rotation — so session s's published mean
+    is bit-identical to a standalone single-session run with the same
+    inputs (asserted by tests/test_session_engine.py). The batch is a
+    ``vmap`` over the session dim: the hop structure (ppermute schedule)
+    is shared, so S rounds cost one collective per hop instead of S.
+
+    Args:
+      values: f32[S, V] — this rank's vector for each session.
+      prov_seeds: uint32[S, 2] — per-session *derived* provisioning key
+        (the output of ``derive_key(seed_words, domain)``, i.e. exactly
+        what ``make_round_keys`` puts in ``RoundKeys.provisioning_seed``).
+      learner_seeds: uint32[S, 2] — per-session per-rank private seed
+        (``RoundKeys.learner_seed``).
+      counter_bases: uint32[S] — per-session fresh counter base.
+      cfg: shared ChainConfig (one topology/mode for the whole batch —
+        the engine's slots are homogeneous, like ServeEngine's).
+      alive: f32[S, n] per-session liveness bitmaps.
+      weights: optional f32[S] per-session weight of this rank.
+      rotate: optional i32[S] per-session initiator rotation.
+
+    Returns:
+      f32[S, V] published (weighted) means, identical on every rank.
+    """
+    S = values.shape[0]
+    if rotate is None:
+        rotate = jnp.zeros((S,), jnp.int32)
+    if weights is None and cfg.weighted:
+        weights = jnp.ones((S,), jnp.float32)
+
+    def one(v, prov, learner, ctr, al, rot, w):
+        keys = RoundKeys(provisioning_seed=prov, learner_seed=learner,
+                         counter_base=ctr)
+        return chain_aggregate_sequential(v, keys, cfg, alive=al,
+                                          weights=w, rotate=rot)
+
+    if cfg.weighted:
+        return jax.vmap(one)(values, prov_seeds, learner_seeds,
+                             counter_bases, alive, rotate, weights)
+    return jax.vmap(
+        lambda v, p, l, c, a, r: one(v, p, l, c, a, r, None)
+    )(values, prov_seeds, learner_seeds, counter_bases, alive, rotate)

@@ -176,6 +176,15 @@ class Controller:
         # Remove the unconsumed posting and flag the poster.
         self._aggregates[group].pop(failed, None)
         self._posted[group] -= 1
+        if new_target == poster:
+            # The repost target wrapped all the way around: every other
+            # group member is dead (§5.3 degenerate case). The poster's
+            # own aggregate IS the final one — signal that instead of
+            # bouncing the posting through dead nodes forever.
+            self._posted[group] += 1  # the poster remains a contributor
+            self._repost[group][poster] = {"status": "self",
+                                           "posted": self._posted[group]}
+            return poster
         self._repost[group][poster] = {"status": "repost", "to_node": new_target}
         return new_target
 

@@ -35,6 +35,7 @@ from repro.crypto.np_impl import (
     derive_pair_key_np,
     keystream_pair_lanes_np,
 )
+from repro.topology import RingTopology
 
 _TAG_HOP_PAD = 0x50
 _TAG_INITIATOR_MASK = 0x52
@@ -93,7 +94,7 @@ class LearnerCrypto:
 
 def safe_learner(
     node: int,
-    chain: list[int],
+    topology: RingTopology,
     value: np.ndarray,
     crypto: LearnerCrypto,
     cost: CostModel,
@@ -103,17 +104,20 @@ def safe_learner(
     counter: int = 0,
     fail_mode: Optional[str] = None,
     subgroups: int = 1,
+    node_base: int = 1,
 ) -> LearnerGen:
     """One SAFE learner for one aggregation round.
+
+    Successor targeting comes from the shared ``topology`` object (the
+    same one the device plane's ppermute schedule is built from);
+    ``node_base`` maps 0-based topology ranks onto the sim's node ids.
 
     fail_mode: None | 'dead' (crashed before round — never spawned by the
     runner, listed here for completeness) | 'after_post' (initiator crash
     of Fig. 5: posts its first aggregate then stops responding).
     """
     codec = crypto.codec
-    n = len(chain)
-    my_pos = chain.index(node)
-    nxt = chain[(my_pos + 1) % n]
+    nxt = topology.successor(node - node_base) + node_base
     payload_f = value if weight is None else np.concatenate(
         [value * weight, np.array([weight], value.dtype)])
     V = payload_f.size
@@ -141,7 +145,9 @@ def safe_learner(
 
     def _post_and_confirm(agg):
         """post_aggregate + check_aggregate loop, handling §5.3 reposts and
-        round resets. Returns 'consumed'|'reset'|'timeout'."""
+        round resets. Returns the terminal status dict (status is
+        'consumed'|'reset'|'timeout'|'self' — 'self' means every repost
+        target was dead and the poster's own aggregate is final)."""
         yield ("compute", enc_cost())
         cipher = crypto.hop_encrypt(agg, nxt, counter)
         yield ("call", "post_aggregate",
@@ -150,8 +156,8 @@ def safe_learner(
             st = yield ("wait", "check_aggregate", dict(node=node, group=group),
                         64, "aggregation")
             status = st.get("status")
-            if status in ("consumed", "reset", "timeout"):
-                return status
+            if status in ("consumed", "reset", "timeout", "self"):
+                return st
             assert status == "repost"
             target = st["to_node"]
             yield ("compute", enc_cost())
@@ -177,27 +183,34 @@ def safe_learner(
                 return
 
             st = yield from _post_and_confirm(agg)
-            if st in ("reset", "timeout"):
+            if st["status"] in ("reset", "timeout"):
                 verdict = yield from _election()
                 if verdict == "done":
                     return
                 initiator_now = verdict == "initiator"
                 continue
 
-            # -- §5.1.1 steps 3-4: receive final aggregate, unmask, publish.
-            res = yield ("wait", "get_aggregate", dict(node=node, group=group),
-                         nbytes, "aggregation")
-            if res.get("status") == "timeout":
-                verdict = yield from _election()
-                if verdict == "done":
-                    return
-                initiator_now = verdict == "initiator"
-                continue
-            yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
-            total = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
+            if st["status"] == "self":
+                # Lone survivor (§5.3 degenerate case): every repost
+                # target was dead, the aggregate never left this node —
+                # unmask the local copy, no decrypt hop.
+                total = agg
+                posted = st["posted"]
+            else:
+                # -- §5.1.1 steps 3-4: receive final aggregate, unmask.
+                res = yield ("wait", "get_aggregate", dict(node=node, group=group),
+                             nbytes, "aggregation")
+                if res.get("status") == "timeout":
+                    verdict = yield from _election()
+                    if verdict == "done":
+                        return
+                    initiator_now = verdict == "initiator"
+                    continue
+                yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
+                total = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
+                posted = res["posted"]  # §5.3: contributor count from controller
             yield ("compute", cost.t_add_elem * V * 2)
             total = NpFixedPoint.sub(total, R)
-            posted = res["posted"]  # §5.3: controller reports contributor count
             dec = codec.decode(total)
             if weight is not None:
                 avg = dec[:-1] / max(dec[-1], 1e-12)
@@ -229,7 +242,7 @@ def safe_learner(
             agg = NpFixedPoint.add(agg, codec.encode(payload_f))
 
             st = yield from _post_and_confirm(agg)
-            if st == "reset":
+            if st["status"] == "reset":
                 continue  # round restarted — rejoin the new chain
             # 'timeout' falls through to get_average, whose own timeout
             # handles an aborted round.
@@ -532,19 +545,23 @@ def run_safe_round(
     """
     n, V = values.shape
     assert mode in ("safe", "saf", "insec")
-    if mode in ("safe", "saf") and (n // subgroups) < 3:
-        raise ValueError(
-            "SAFE requires >= 3 learners per group: with 2, each learns the "
-            "other's value by subtracting its own (paper §5.3)")
-    m = n // subgroups
-    groups = {g: [g * m + i + 1 for i in range(m)] for g in range(subgroups)}
+    # Shared topology layer: the SAME object family the device plane's
+    # ppermute schedule and initiator election are built from.
+    topo = RingTopology(n, subgroups)
+    if mode in ("safe", "saf"):
+        topo.validate_privacy()
+    groups = topo.group_chains(node_base=1)
     ctrl = Controller(groups, aggregation_timeout=aggregation_timeout)
     sim = ProtocolSimulation(ctrl, cost, progress_timeout=progress_timeout,
                              parse_payloads=(mode == "insec"))
     failed = set(failed_nodes)
+    # Round-start initiators: elected over the all-alive bitmap (a node
+    # dead before the round is *discovered* by timeout, §5.4 — the
+    # control plane does not know it up front).
+    initiators = {r + 1 for r in topo.elect_initiators()}
 
     for g, chain in groups.items():
-        for pos, node in enumerate(chain):
+        for node in chain:
             if node in failed:
                 continue  # crashed before the aggregation started
             val = values[node - 1]
@@ -555,10 +572,11 @@ def run_safe_round(
                 crypto = LearnerCrypto(
                     node, provisioning_seed, learner_master, scale_bits,
                     encrypt=(mode == "safe"), symmetric_only=symmetric_only)
-                fail_mode = "after_post" if (initiator_fails and g == 0 and pos == 0) else None
+                is_init = node in initiators
+                fail_mode = "after_post" if (initiator_fails and g == 0 and is_init) else None
                 gen = safe_learner(
-                    node, chain, val, crypto, cost, group=g,
-                    is_initiator=(pos == 0), weight=w, counter=counter,
+                    node, topo, val, crypto, cost, group=g,
+                    is_initiator=is_init, weight=w, counter=counter,
                     fail_mode=fail_mode, subgroups=subgroups)
             sim.spawn(node, gen)
 

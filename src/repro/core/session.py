@@ -1,0 +1,90 @@
+"""Aggregation sessions — per-tenant state for the multi-session engine.
+
+One :class:`AggSession` is one tenant's aggregation stream: its own key
+material (provisioning seed + learner master), its own monotone counter
+space (pads are never reused across that session's rounds), its own
+alive bitmap / weights, and its own initiator-rotation schedule (§8).
+Sessions are host-side control-plane objects; the device plane only ever
+sees the uint32 key/counter arrays the engine batches out of them.
+
+The session is deliberately the same shape as a single-session run:
+round r of a session uses counter_base = r * words_per_round and
+rotate = rotate0 + r, exactly what ``SecureAggregator`` + ``RoundCounter``
+produce for a standalone loop — which is what makes the engine's batched
+output bit-identical to S independent runs (the acceptance property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.crypto.prf import RoundCounter
+
+
+def seed_words(seed: int) -> np.ndarray:
+    """uint32[2] little-endian words of a 64-bit seed — the exact host
+    conversion ``make_round_keys`` applies before key derivation."""
+    return np.array([seed & 0xFFFFFFFF, (seed >> 32) & 0xFFFFFFFF], np.uint32)
+
+
+@dataclasses.dataclass
+class AggSession:
+    """One tenant's aggregation stream (host control-plane state).
+
+    Attributes:
+      sid: engine-assigned session id.
+      values: f32[n, V] — the learner-major contribution matrix for the
+        next round (the engine re-reads it each round, so a trainer can
+        update it between rounds).
+      provisioning_seed / learner_master: this session's Round-0 key
+        material (independent per tenant).
+      rounds: how many aggregation rounds the session requests.
+      alive: f32[n] liveness bitmap (None = all alive).
+      weights: f32[n] per-learner weights (only read by weighted configs).
+      rotate0: initiator rotation of round 0; round r uses rotate0 + r.
+    """
+
+    sid: int
+    values: np.ndarray
+    provisioning_seed: int = 0xC0FFEE
+    learner_master: int = 0x5EED
+    rounds: int = 1
+    alive: Optional[np.ndarray] = None
+    weights: Optional[np.ndarray] = None
+    rotate0: int = 0
+
+    def __post_init__(self) -> None:
+        self.values = np.asarray(self.values, np.float32)
+        if self.alive is None:
+            self.alive = np.ones((self.values.shape[0],), np.float32)
+        self.alive = np.asarray(self.alive, np.float32)
+        if self.weights is None:
+            self.weights = np.ones((self.values.shape[0],), np.float32)
+        self.weights = np.asarray(self.weights, np.float32)
+        self.results: List[np.ndarray] = []
+        self.rounds_done: int = 0
+        self._counters = RoundCounter()
+
+    # ---- engine interface ------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self.rounds_done >= self.rounds
+
+    @property
+    def rotate(self) -> int:
+        """Initiator rotation for the upcoming round (§8)."""
+        return self.rotate0 + self.rounds_done
+
+    def reserve_counter(self, nwords: int) -> int:
+        """Fresh counter base for the upcoming round (no pad reuse)."""
+        return self._counters.reserve(nwords)
+
+    def record_result(self, published: np.ndarray) -> None:
+        self.results.append(np.asarray(published))
+        self.rounds_done += 1
+
+    def key_words(self) -> tuple[np.ndarray, np.ndarray]:
+        """(provisioning, master) uint32[2] word pairs for the device."""
+        return seed_words(self.provisioning_seed), seed_words(self.learner_master)

@@ -5,6 +5,7 @@ import dataclasses
 from typing import Optional
 
 from repro.crypto.fixedpoint import DEFAULT_SCALE_BITS
+from repro.topology import RingTopology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,18 +49,17 @@ class ChainConfig:
     def __post_init__(self) -> None:
         if self.mode not in ("safe", "saf", "insec", "bon"):
             raise ValueError(f"unknown mode {self.mode!r}")
-        if self.num_learners < 3 and self.mode in ("safe", "saf"):
-            raise ValueError(
-                "SAFE requires >= 3 learners (with 2, each learns the other's "
-                "value by subtraction; paper §5.3)"
-            )
-        if self.subgroups < 1 or self.num_learners % self.subgroups != 0:
-            raise ValueError("subgroups must divide num_learners")
-        if self.subgroups > 1 and self.group_size < 3 and self.mode in ("safe", "saf"):
-            raise ValueError(
-                "each subgroup needs >= 3 members for the privacy guarantee "
-                "(paper §5.5)"
-            )
+        # topology construction checks divisibility; the privacy bound
+        # (>= 3 members per ring, paper §5.3/§5.5) applies to the masked
+        # chain modes only
+        topo = RingTopology(self.num_learners, self.subgroups)
+        if self.mode in ("safe", "saf"):
+            topo.validate_privacy()
+
+    @property
+    def topology(self) -> RingTopology:
+        """Ring geometry shared with the sim plane (repro.topology)."""
+        return RingTopology(self.num_learners, self.subgroups)
 
     @property
     def group_size(self) -> int:

@@ -9,6 +9,13 @@ kernel reads ``cipher`` and ``x`` once and writes ``out`` once — 12 bytes
 of HBM traffic per element instead of 28+ for the unfused sequence
 (pad_in read+write, decrypt read+write, encode, pad_out read+write, add).
 Roofline: memory-bound; see benchmarks/kernel_bench.py.
+
+``chain_combine_batched`` is the multi-session form backing
+``serve/agg_engine.py``: a leading session dim S with *per-session* key
+and counter scalars delivered via scalar prefetch — the grid walks
+(session, block) and each session's keys are read from SMEM at
+``program_id(0)``, so S tenants' hops stream through one kernel launch
+with zero per-session dispatch overhead.
 """
 from __future__ import annotations
 
@@ -80,3 +87,80 @@ def chain_combine(
         interpret=interpret,
     )(scalars, c2, x2)
     return out.reshape(-1)[:V]
+
+
+def _chain_combine_batched_kernel(scalars, cipher_ref, x_ref, o_ref, *,
+                                  scale_bits: int, block_rows: int):
+    s = pl.program_id(0)  # session
+    i = pl.program_id(1)  # block within the session's vector
+    off = jnp.uint32(i * block_rows)
+    # per-session scalars at s*5: [kin0, kin1, kout0, kout1, base]
+    b = s * 5
+    shape = (block_rows, LANE)
+    pad_in = pad_for_block(scalars[b], scalars[b + 1], scalars[b + 4],
+                           shape, off)
+    pad_out = pad_for_block(scalars[b + 2], scalars[b + 3], scalars[b + 4],
+                            shape, off)
+    o_ref[0] = (cipher_ref[0] - pad_in
+                + encode_block(x_ref[0], scale_bits) + pad_out)
+
+
+@functools.partial(jax.jit, static_argnames=("scale_bits", "block_rows",
+                                             "interpret"))
+def chain_combine_batched(
+    cipher: jax.Array,
+    x: jax.Array,
+    keys_in: jax.Array,
+    keys_out: jax.Array,
+    counter_bases: jax.Array,
+    *,
+    scale_bits: int = 16,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """S fused chain hops, one per session, in one kernel launch.
+
+    Per session s the arithmetic is exactly ``chain_combine`` under that
+    session's keys/counter — bit-identical to S separate calls (asserted
+    in tests/test_kernels.py).
+
+    Args:
+      cipher: uint32[S, V] incoming hop ciphertexts.
+      x: f32[S, V] local vectors.
+      keys_in / keys_out: uint32[S, 2] per-session edge keys.
+      counter_bases: uint32[S] per-session counter bases.
+
+    Returns:
+      uint32[S, V] outgoing ciphertexts.
+    """
+    S, V = cipher.shape
+    elems = block_rows * LANE
+    vpad = (-V) % elems
+    c3 = jnp.pad(cipher, ((0, 0), (0, vpad))).reshape(S, -1, LANE)
+    x3 = jnp.pad(x, ((0, 0), (0, vpad))).reshape(S, -1, LANE)
+    nblocks = c3.shape[1] // block_rows
+
+    # flat SMEM table [S*5]: rows of (kin0, kin1, kout0, kout1, base)
+    scalars = jnp.concatenate([
+        jnp.asarray(keys_in, jnp.uint32).reshape(S, 2),
+        jnp.asarray(keys_out, jnp.uint32).reshape(S, 2),
+        jnp.asarray(counter_bases, jnp.uint32).reshape(S, 1),
+    ], axis=1).reshape(-1)
+
+    out = pl.pallas_call(
+        functools.partial(_chain_combine_batched_kernel,
+                          scale_bits=scale_bits, block_rows=block_rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(S, nblocks),
+            in_specs=[
+                pl.BlockSpec((1, block_rows, LANE), lambda s, i, ref: (s, i, 0)),
+                pl.BlockSpec((1, block_rows, LANE), lambda s, i, ref: (s, i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_rows, LANE),
+                                   lambda s, i, ref: (s, i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(c3.shape, jnp.uint32),
+        interpret=interpret,
+    )(scalars, c3, x3)
+    return out.reshape(S, -1)[:, :V]

@@ -12,7 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.threefry_mask_add import mask_add as _mask_add
-from repro.kernels.chain_combine import chain_combine as _chain_combine
+from repro.kernels.chain_combine import (
+    chain_combine as _chain_combine,
+    chain_combine_batched as _chain_combine_batched,
+)
 from repro.kernels.bon_mask import bon_mask as _bon_mask
 
 
@@ -45,6 +48,18 @@ def chain_combine(cipher, x, key_in, key_out, counter_base=0, *,
                           scale_bits=scale_bits, interpret=interpret)
 
 
+def chain_combine_batched(cipher, x, keys_in, keys_out, counter_bases, *,
+                          scale_bits: int = 16,
+                          interpret: bool | None = None):
+    """Fused multi-session chain hop (one launch for S sessions' hops;
+    per-session keys via scalar prefetch — serve/agg_engine substrate)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _chain_combine_batched(cipher, x, keys_in, keys_out,
+                                  counter_bases, scale_bits=scale_bits,
+                                  interpret=interpret)
+
+
 def bon_mask(x, keys, signs, counter_base=0, *, scale_bits: int = 16,
              interpret: bool | None = None):
     """Fused BON pairwise masking (baseline hot spot)."""
@@ -54,4 +69,4 @@ def bon_mask(x, keys, signs, counter_base=0, *, scale_bits: int = 16,
                      interpret=interpret)
 
 
-__all__ = ["mask_add", "chain_combine", "bon_mask"]
+__all__ = ["mask_add", "chain_combine", "chain_combine_batched", "bon_mask"]

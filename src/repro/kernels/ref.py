@@ -45,6 +45,23 @@ def chain_combine_ref(
     return cipher - pad_in + codec.encode(x) + pad_out
 
 
+def chain_combine_batched_ref(
+    cipher: jax.Array,
+    x: jax.Array,
+    keys_in: jax.Array,
+    keys_out: jax.Array,
+    counter_bases: jax.Array,
+    scale_bits: int = 16,
+) -> jax.Array:
+    """Session-batched chain hop: row s is ``chain_combine_ref`` under
+    session s's keys/counter. Oracle for ``chain_combine_batched``."""
+    return jnp.stack([
+        chain_combine_ref(cipher[s], x[s], keys_in[s], keys_out[s],
+                          counter_bases[s], scale_bits)
+        for s in range(cipher.shape[0])
+    ])
+
+
 def bon_mask_ref(
     x: jax.Array,
     keys: jax.Array,

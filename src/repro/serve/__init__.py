@@ -1,4 +1,5 @@
-"""Serving: prefill/decode engine with batched requests."""
+"""Serving: prefill/decode engine + multi-session aggregation engine."""
 from repro.serve.engine import ServeEngine, make_serve_step
+from repro.serve.agg_engine import AggregationEngine
 
-__all__ = ["ServeEngine", "make_serve_step"]
+__all__ = ["ServeEngine", "make_serve_step", "AggregationEngine"]

@@ -1,0 +1,30 @@
+"""Shared topology layer — ring/subgroup/hierarchical chain geometry.
+
+Single source of truth for successor maps, ppermute schedules, initiator
+election and alive-bitmap compaction, consumed by BOTH planes:
+
+  * device data plane — ``core/chain.py`` builds its ppermute pairs,
+    neighbour keys and initiator election from these objects inside
+    shard_map;
+  * discrete-event control plane — ``core/protocol.py`` derives learner
+    successor/initiator decisions from the same objects.
+
+See ARCHITECTURE.md for the two-plane picture.
+"""
+from repro.topology.base import (
+    MIN_PRIVACY_GROUP,
+    RingTopology,
+    elect_initiator_local,
+    make_topology,
+)
+from repro.topology.hierarchy import HierarchicalTopology
+from repro.topology.failover import AliveTracker
+
+__all__ = [
+    "MIN_PRIVACY_GROUP",
+    "RingTopology",
+    "HierarchicalTopology",
+    "AliveTracker",
+    "elect_initiator_local",
+    "make_topology",
+]

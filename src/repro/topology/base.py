@@ -1,0 +1,182 @@
+"""Ring topologies — the single source of truth for SAFE chain shape.
+
+One ``RingTopology`` object answers every structural question both planes
+ask: successor/predecessor on the (sub)group ring (paper §5.5), the
+``ppermute`` pair list for the device plane, per-group chain orders for
+the discrete-event sim, and initiator election over an alive bitmap
+(§5.4 re-election + §8 per-round rotation). The arithmetic is written
+with plain operators so the *same* methods work on python ints (the sim,
+host control plane) and on traced jax values (inside shard_map) — sim
+and device cannot diverge on topology semantics because they execute the
+same code.
+
+Ranks are 0-based and contiguous: group g owns ranks
+[g·m, (g+1)·m) where m = group_size. The sim's 1-based paper numbering
+is a ``node_base`` offset applied at the edge (``group_chains``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: minimum learners per ring for the paper's privacy argument (§5.3/§5.5):
+#: with 2, each member recovers the other's value by subtracting its own.
+MIN_PRIVACY_GROUP = 3
+
+
+def elect_initiator_local(group_alive, rotate, xp=np):
+    """Local index of the elected initiator on one subgroup ring.
+
+    The initiator is the first *alive* local index scanning cyclically
+    from the per-round rotation offset (§5.4 re-election semantics + §8
+    round-order randomization). ``xp`` is the array namespace — numpy for
+    the host/sim plane, jax.numpy for the device plane — so both planes
+    run the identical formula.
+
+    Args:
+      group_alive: float/bool[m] liveness of this ring's members, local
+        order.
+      rotate: int — per-round rotation offset (taken mod m).
+      xp: numpy or jax.numpy.
+
+    Returns:
+      int (or traced scalar) local index in [0, m).
+    """
+    m = group_alive.shape[-1]
+    rot = xp.asarray(rotate, xp.int32) % m
+    rolled = xp.roll(group_alive, -rot)
+    return (xp.argmax(rolled > 0).astype(xp.int32) + rot) % m
+
+
+@dataclasses.dataclass(frozen=True)
+class RingTopology:
+    """g disjoint rings over one learner axis (g = 1 is the flat chain).
+
+    Attributes:
+      num_learners: chain length n (== mesh axis size on device).
+      subgroups: number of parallel rings g (paper §5.5). Must divide
+        num_learners.
+    """
+
+    num_learners: int
+    subgroups: int = 1
+
+    def __post_init__(self) -> None:
+        if self.subgroups < 1 or self.num_learners % self.subgroups != 0:
+            raise ValueError(
+                f"subgroups ({self.subgroups}) must divide num_learners "
+                f"({self.num_learners})")
+
+    # ---- structure -------------------------------------------------------
+    @property
+    def group_size(self) -> int:
+        return self.num_learners // self.subgroups
+
+    def validate_privacy(self) -> None:
+        """Raise unless every ring meets the >= 3-member privacy bound."""
+        if self.group_size < MIN_PRIVACY_GROUP:
+            raise ValueError(
+                f"each ring needs >= {MIN_PRIVACY_GROUP} members for the "
+                f"privacy guarantee (got group_size={self.group_size}; "
+                "paper §5.3/§5.5)")
+
+    # ---- per-rank ring geometry (int or traced) --------------------------
+    def group_of(self, rank):
+        return rank // self.group_size
+
+    def group_start(self, rank):
+        m = self.group_size
+        return (rank // m) * m
+
+    def local_index(self, rank):
+        return rank % self.group_size
+
+    def successor(self, rank):
+        """Next rank on this rank's ring (the node it posts aggregates to)."""
+        m = self.group_size
+        g0 = self.group_start(rank)
+        return g0 + (rank - g0 + 1) % m
+
+    def predecessor(self, rank):
+        m = self.group_size
+        g0 = self.group_start(rank)
+        return g0 + (rank - g0 + m - 1) % m
+
+    def neighbors(self, rank):
+        """(predecessor, successor) on this rank's ring."""
+        return self.predecessor(rank), self.successor(rank)
+
+    # ---- whole-topology views -------------------------------------------
+    def ring_permutation(self) -> List[Tuple[int, int]]:
+        """(src, dst) pairs for a +1 ring shift — the device plane's
+        ``jax.lax.ppermute`` schedule."""
+        return [(r, self.successor(r)) for r in range(self.num_learners)]
+
+    def successor_map(self) -> np.ndarray:
+        """int32[n] — successor_map[r] is r's ring successor."""
+        return np.array([self.successor(r) for r in range(self.num_learners)],
+                        np.int32)
+
+    def group_chains(self, node_base: int = 0) -> Dict[int, List[int]]:
+        """Chain (ring) order per group, as node ids offset by
+        ``node_base`` (the sim uses the paper's 1-based numbering)."""
+        m = self.group_size
+        return {
+            g: [g * m + i + node_base for i in range(m)]
+            for g in range(self.subgroups)
+        }
+
+    # ---- liveness / election --------------------------------------------
+    def group_alive(self, alive, group: int):
+        """Slice of the full alive bitmap covering ``group`` (host path;
+        the device plane uses a dynamic_slice at the traced rank — see
+        core/chain.py)."""
+        m = self.group_size
+        return alive[group * m:(group + 1) * m]
+
+    def elect_initiators(self, alive: Optional[Sequence] = None,
+                         rotate: int = 0) -> List[int]:
+        """Elected initiator *rank* of every group (host plane).
+
+        With all members alive and rotate=0 this is each group's first
+        rank — the sim's round-start initiator. After failures it is the
+        §5.4 re-elected initiator the device plane also converges on.
+        """
+        if alive is None:
+            alive = np.ones((self.num_learners,), np.float32)
+        alive = np.asarray(alive, np.float32)
+        out = []
+        for g in range(self.subgroups):
+            ga = self.group_alive(alive, g)
+            loc = int(elect_initiator_local(ga, rotate, xp=np))
+            out.append(g * self.group_size + loc)
+        return out
+
+    def compact(self, alive: Optional[Sequence] = None,
+                node_base: int = 0) -> Dict[int, List[int]]:
+        """Alive-bitmap compaction: per-group chain order with dead
+        members removed (dead ranks forward-and-repad on device; in the
+        control plane the monitor's repost orders skip them — §5.3)."""
+        if alive is None:
+            alive = np.ones((self.num_learners,), np.float32)
+        alive = np.asarray(alive, np.float32)
+        chains = {}
+        for g, chain in self.group_chains(node_base).items():
+            chains[g] = [node for node in chain
+                         if alive[node - node_base] > 0]
+        return chains
+
+
+def make_topology(num_learners: int, subgroups: int = 1,
+                  pods: int = 1) -> "RingTopology":
+    """Factory: flat chain, subgroup rings, or hierarchical pods.
+
+    Returns a RingTopology for pods == 1, else a HierarchicalTopology
+    (imported lazily to avoid a module cycle).
+    """
+    if pods <= 1:
+        return RingTopology(num_learners, subgroups)
+    from repro.topology.hierarchy import HierarchicalTopology
+    return HierarchicalTopology(pods, RingTopology(num_learners, subgroups))

@@ -1,0 +1,120 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` package.
+
+The container this repo tests on does not ship hypothesis and installing
+packages is off-limits, so conftest.py registers this module under
+``sys.modules['hypothesis']`` when the real package is missing. It
+implements exactly the surface the test-suite uses — ``given``,
+``settings``, ``assume`` and the ``integers`` / ``floats`` / ``lists``
+strategies — as seeded random sampling: each decorated test runs
+``max_examples`` times with examples drawn from a RNG seeded by the test
+name, so failures reproduce across runs. It does none of hypothesis's
+shrinking or database work; with the real package installed this module
+is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.RandomState):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    span = int(max_value) - int(min_value)
+
+    def draw(rng):
+        # randint caps at int64 ranges; compose for the full-u64 strategies
+        if span >= 2**62:
+            lo = rng.randint(0, 2**31)
+            hi = rng.randint(0, span // 2**31 + 1)
+            return int(min_value) + min(lo + hi * 2**31, span)
+        return int(min_value) + int(rng.randint(0, span + 1))
+
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float, allow_nan: bool = False,
+           width: int = 64) -> _Strategy:
+    def draw(rng):
+        x = rng.uniform(min_value, max_value)
+        return float(np.float32(x)) if width == 32 else float(x)
+
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        k = int(rng.randint(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(k)]
+
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):  # args = (self,) for method tests
+            rng = np.random.RandomState(zlib.adler32(fn.__qualname__.encode()))
+            ran = 0
+            attempts = 0
+            while ran < n_examples and attempts < n_examples * 50:
+                attempts += 1
+                drawn = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise RuntimeError(
+                    f"{fn.__qualname__}: every generated example was "
+                    "rejected by assume()")
+
+        # pytest must not see the drawn parameters as fixtures: expose only
+        # the leading params given does not supply (i.e. ``self``).
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[: len(params) - len(strats)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__  # wraps() sets it; it re-exposes fn's sig
+        return wrapper
+
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.lists = lists

@@ -10,8 +10,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.ops import bon_mask, chain_combine, mask_add
-from repro.kernels.ref import bon_mask_ref, chain_combine_ref, mask_add_ref
+from repro.kernels.ops import (bon_mask, chain_combine,
+                               chain_combine_batched, mask_add)
+from repro.kernels.ref import (bon_mask_ref, chain_combine_batched_ref,
+                               chain_combine_ref, mask_add_ref)
 from repro.kernels.threefry_mask_add import mask_add as raw_mask_add
 
 SHAPES = [1, 5, 127, 128, 129, 1000, 8192, 100_001]
@@ -67,6 +69,47 @@ def test_chain_combine(V):
     np.testing.assert_array_equal(
         np.asarray(chain_combine(cipher, x, kin, kout, 9)),
         np.asarray(chain_combine_ref(cipher, x, kin, kout, 9)))
+
+
+@pytest.mark.parametrize("S,V", [(1, 128), (3, 1000), (8, 257)])
+def test_chain_combine_batched(S, V):
+    """Session-batched kernel == oracle (exact, per-session keys/counters
+    delivered via scalar prefetch)."""
+    rng = np.random.RandomState(S * 1000 + V)
+    cipher = jnp.asarray(rng.randint(0, 2**32, (S, V), dtype=np.uint64)
+                         .astype(np.uint32))
+    x = jnp.asarray(rng.uniform(-50, 50, (S, V)).astype(np.float32))
+    kin = jnp.asarray(rng.randint(0, 2**32, (S, 2), dtype=np.uint64)
+                      .astype(np.uint32))
+    kout = jnp.asarray(rng.randint(0, 2**32, (S, 2), dtype=np.uint64)
+                       .astype(np.uint32))
+    bases = jnp.asarray(rng.randint(0, 2**32, (S,), dtype=np.uint64)
+                        .astype(np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(chain_combine_batched(cipher, x, kin, kout, bases)),
+        np.asarray(chain_combine_batched_ref(cipher, x, kin, kout, bases)))
+
+
+def test_chain_combine_batched_matches_single_calls():
+    """Row s of the batched kernel is bit-identical to a standalone
+    chain_combine under session s's keys — the engine's independence
+    invariant at the kernel level."""
+    rng = np.random.RandomState(42)
+    S, V = 4, 513
+    cipher = jnp.asarray(rng.randint(0, 2**32, (S, V), dtype=np.uint64)
+                         .astype(np.uint32))
+    x = jnp.asarray(rng.uniform(-5, 5, (S, V)).astype(np.float32))
+    kin = jnp.asarray(rng.randint(0, 2**32, (S, 2), dtype=np.uint64)
+                      .astype(np.uint32))
+    kout = jnp.asarray(rng.randint(0, 2**32, (S, 2), dtype=np.uint64)
+                       .astype(np.uint32))
+    bases = jnp.asarray(np.arange(S).astype(np.uint32) * 1000)
+    batched = np.asarray(chain_combine_batched(cipher, x, kin, kout, bases))
+    for s in range(S):
+        np.testing.assert_array_equal(
+            batched[s],
+            np.asarray(chain_combine(cipher[s], x[s], kin[s], kout[s],
+                                     bases[s])))
 
 
 def test_chain_combine_roundtrip_semantics():

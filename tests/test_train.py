@@ -3,9 +3,14 @@
 Checks (in a subprocess): loss decreases, SAFE == INSEC within fixed-point
 tolerance, failover mid-training, FedAvg weighted rounds, and the manual
 expert-parallel MoE path vs the dense MoE path."""
-from helpers import run_multidevice
+import pytest
+
+from helpers import partial_manual_supported, run_multidevice
 
 
+@pytest.mark.skipif(not partial_manual_supported(), reason=
+    "partial-manual shard_map (manual data + auto model) unsupported "
+    "by this jax/XLA SPMD partitioner — see ARCHITECTURE.md")
 def test_safe_training_matches_insec():
     out = run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
@@ -38,6 +43,9 @@ print("SAFE_TRAIN_OK")
     assert "SAFE_TRAIN_OK" in out
 
 
+@pytest.mark.skipif(not partial_manual_supported(), reason=
+    "partial-manual shard_map (manual data + auto model) unsupported "
+    "by this jax/XLA SPMD partitioner — see ARCHITECTURE.md")
 def test_training_with_learner_failure():
     out = run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
@@ -70,6 +78,9 @@ print("FAILOVER_TRAIN_OK")
     assert "FAILOVER_TRAIN_OK" in out
 
 
+@pytest.mark.skipif(not partial_manual_supported(), reason=
+    "partial-manual shard_map (manual data + auto model) unsupported "
+    "by this jax/XLA SPMD partitioner — see ARCHITECTURE.md")
 def test_federated_weighted_rounds():
     out = run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
@@ -97,6 +108,9 @@ print("FED_OK")
     assert "FED_OK" in out
 
 
+@pytest.mark.skipif(not partial_manual_supported(), reason=
+    "partial-manual shard_map (manual data + auto model) unsupported "
+    "by this jax/XLA SPMD partitioner — see ARCHITECTURE.md")
 def test_expert_parallel_moe_matches_dense():
     # f32: in bf16 a freshly-initialized router has near-uniform probs, so
     # 1-ulp accumulation differences between batch tilings legitimately
