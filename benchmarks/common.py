@@ -54,6 +54,49 @@ def save_bench_json(name: str, bench_rows: list, status: str,
     return save_json(f"BENCH_{name}", payload)
 
 
+def standalone_bench(key: str, fn: Callable) -> None:
+    """Run one benchmark module standalone (``python -m benchmarks.X``)
+    with the same stable ``BENCH_<key>.json`` emission the ``run.py``
+    harness performs — so a module run on its own still feeds the
+    machine-readable perf trajectory instead of only its legacy JSON."""
+    before = len(rows())
+    t0 = time.time()
+    status = "ok"
+    try:
+        fn()
+    except Exception as e:  # noqa: BLE001
+        status = "failed"
+        print(f"# FAILED {key}: {e!r}", flush=True)
+        raise
+    finally:
+        save_bench_json(key, rows()[before:], status, time.time() - t0)
+
+
+def run_device_subprocess(code: str, devices: int = 8,
+                          timeout: int = 1800) -> dict:
+    """Run benchmark ``code`` in a child python with N host devices and
+    parse its ``print("JSON" + json.dumps(payload))`` sentinel line.
+
+    jax locks the host device count at first init, so anything needing a
+    mesh runs in a subprocess with XLA_FLAGS set before jax imports —
+    the shared boilerplate of multi_session / net_load style benches.
+    """
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    return json.loads(proc.stdout.split("JSON", 1)[1])
+
+
 def wall(fn: Callable, repeats: int = 3) -> float:
     """Median wall time of fn() in seconds."""
     ts = []

@@ -9,13 +9,8 @@ shares one ppermute schedule across sessions; the acceptance bar is
 """
 from __future__ import annotations
 
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-from benchmarks.common import emit, save_json
+from benchmarks.common import (emit, run_device_subprocess, save_json,
+                               standalone_bench)
 
 _CODE = """
 import json, time
@@ -82,16 +77,7 @@ print("JSON" + json.dumps(out))
 
 
 def run() -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env["PYTHONPATH"] = os.path.join(repo, "src")
-    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(_CODE)],
-                          capture_output=True, text=True, timeout=1800,
-                          env=env)
-    if proc.returncode != 0:
-        raise RuntimeError(proc.stderr[-2000:])
-    payload = json.loads(proc.stdout.split("JSON", 1)[1])
+    payload = run_device_subprocess(_CODE)
     for S, row in payload.items():
         emit(f"multi_session/S{S}_batched", row["batched_wall_s"] * 1e6,
              f"rps={row['batched_rounds_per_s']:.1f} "
@@ -107,4 +93,6 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    # standalone runs also emit BENCH_multi_session.json (stable
+    # safe-bench/v1 schema), not just the legacy multi_session.json
+    standalone_bench("multi_session", run)

@@ -1,0 +1,94 @@
+"""Wire-plane load: S concurrent tenant sessions against one broker.
+
+Two measurements over real localhost TCP (in an 8-host-device
+subprocess, like the other mesh benchmarks):
+
+  * engine plane — tenants submit whole sessions through
+    ``submit_session``/``wait_session``; the broker batches them into
+    one ``AggregationEngine`` compiled program per step. Reported:
+    rounds/sec + p50/p99 submit→published latency at S ∈ {4, 16}.
+  * protocol plane — each tenant runs full 8-learner SAFE rounds (one
+    TCP connection per learner, 4n RPCs + long-polls per round)
+    concurrently, at S ∈ {1, 4}; also once under a lossy/slow transport
+    (latency + drop interceptors) to price fault handling.
+
+Rows land in the standard CSV/JSON harness; `python -m benchmarks.run
+--bench-json` (or a standalone run) also writes BENCH_net_load.json.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (emit, run_device_subprocess, save_json,
+                               standalone_bench)
+
+_CODE = """
+import asyncio, json, time
+import numpy as np, jax
+from repro.core.types import ChainConfig
+from repro.serve import AggregationEngine
+from repro.net import SafeBroker, LatencyInterceptor, DropInterceptor, Chain
+from repro.net.loadgen import run_engine_load, run_protocol_load
+
+out = {}
+
+async def engine_plane():
+    mesh = jax.make_mesh((8,), ("data",))
+    n, V = 8, 1024
+    for S in (4, 16):
+        cfg = ChainConfig(num_learners=n, mode="safe")
+        engine = AggregationEngine(mesh, cfg, slots=S, payload_words=V)
+        broker = SafeBroker(engine=engine)
+        addr = await broker.start()
+        try:
+            rep = await run_engine_load(addr, tenants=S,
+                                        rounds_per_tenant=8, n=n, V=V)
+        finally:
+            await broker.stop()
+        out[f"engine_S{S}"] = rep.row()
+
+async def protocol_plane():
+    for S in (1, 4):
+        broker = SafeBroker(progress_timeout=0.5, monitor_interval=0.1,
+                            aggregation_timeout=60.0)
+        addr = await broker.start()
+        try:
+            rep = await run_protocol_load(addr, tenants=S,
+                                          rounds_per_tenant=3, n=8, V=256)
+        finally:
+            await broker.stop()
+        out[f"protocol_S{S}"] = rep.row()
+    # lossy/slow transport: what §5.3-ready transport handling costs
+    broker = SafeBroker(progress_timeout=0.5, monitor_interval=0.1,
+                        aggregation_timeout=60.0)
+    addr = await broker.start()
+    try:
+        # factory form: per-tenant interceptors, reproducible fault plans
+        ic = lambda t: Chain(LatencyInterceptor(mean=0.002, seed=1 + 2 * t),
+                             DropInterceptor(p=0.02, seed=2 + 2 * t))
+        rep = await run_protocol_load(addr, tenants=2, rounds_per_tenant=2,
+                                      n=8, V=256, interceptor=ic)
+    finally:
+        await broker.stop()
+    out["protocol_S2_faulty"] = rep.row()
+
+asyncio.run(engine_plane())
+asyncio.run(protocol_plane())
+print("JSON" + json.dumps(out))
+"""
+
+
+def run() -> dict:
+    payload = run_device_subprocess(_CODE)
+    for key, row in payload.items():
+        emit(f"net_load/{key}", row["p50_s"] * 1e6,
+             f"rps={row['rounds_per_s']:.1f} "
+             f"p99={row['p99_s']*1e3:.1f}ms tenants={row['tenants']}")
+    save_json("net_load", payload)
+    return payload
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    standalone_bench("net_load", run)

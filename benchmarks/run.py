@@ -25,8 +25,8 @@ def main() -> None:
 
     from benchmarks import (common, constrained, device_aggregation, failover,
                             feature_scalability, hierarchical, kernel_bench,
-                            messages, multi_session, node_scalability,
-                            subgrouping)
+                            messages, multi_session, net_load,
+                            node_scalability, subgrouping)
     print("name,us_per_call,derived")
     t0 = time.time()
     mods = [
@@ -40,6 +40,7 @@ def main() -> None:
         ("device_aggregation", "device_aggregation", device_aggregation.main),
         ("kernel_bench", "kernel_bench", kernel_bench.main),
         ("multi_session", "multi_session engine (ARCHITECTURE.md)", multi_session.main),
+        ("net_load", "net_load wire-plane broker (repro/net)", net_load.main),
     ]
     failures = 0
     matched = 0

@@ -18,6 +18,21 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+#: Shared op registry — the single source of truth for what a client can
+#: ask the broker. ``CALL_OPS`` are fire-and-forget requests (the state
+#: machines' ``("call", …)`` yields); ``WAIT_KINDS`` are long-polls
+#: (``("wait", …)`` yields) with a non-counting ``try_*`` probe and a
+#: counting consumer. Both the discrete-event kernel
+#: (``core/protocol.py``) and the wire broker (``net/broker.py``)
+#: dispatch through this table, so the two planes cannot drift.
+CALL_OPS = frozenset({
+    "post_aggregate", "post_average", "should_initiate",
+    "register_key", "get_key",
+})
+#: call ops that take the broker clock (``now=``); key-exchange ops do not.
+TIMED_OPS = frozenset({"post_aggregate", "post_average", "should_initiate"})
+WAIT_KINDS = frozenset({"get_aggregate", "check_aggregate", "get_average"})
+
 
 @dataclasses.dataclass
 class MessageStats:
@@ -87,6 +102,28 @@ class Controller:
         self._keys: Dict[int, Any] = {}
         # Registered public/symmetric keys: node -> key blob (opaque).
         self._global_average: Optional[dict] = None
+
+    # ------------------------------------------------------------------
+    # Uniform op dispatch (shared by the sim kernel and the wire broker)
+    # ------------------------------------------------------------------
+    def call(self, op: str, **kwargs) -> Any:
+        """Invoke a fire-and-forget client op by name (see ``CALL_OPS``)."""
+        if op not in CALL_OPS:
+            raise ValueError(f"unknown call op {op!r}")
+        return getattr(self, op)(**kwargs)
+
+    def probe(self, kind: str, **kwargs) -> Optional[Any]:
+        """Non-counting availability probe for a long-poll kind."""
+        if kind not in WAIT_KINDS:
+            raise ValueError(f"unknown wait kind {kind!r}")
+        return getattr(self, f"try_{kind}")(**kwargs)
+
+    def consume(self, kind: str, **kwargs) -> Any:
+        """Counting resolution of a long-poll kind; the caller must have
+        seen a non-None ``probe`` first."""
+        if kind not in WAIT_KINDS:
+            raise ValueError(f"unknown wait kind {kind!r}")
+        return getattr(self, kind)(**kwargs)
 
     # ------------------------------------------------------------------
     # Round 0: key exchange (2 messages per node: register + retrieve)

@@ -1,0 +1,328 @@
+"""SAFE learner state machines — runtime-agnostic protocol coroutines.
+
+The paper's learners (§5.1.1 initiator / §5.1.2 non-initiator, with the
+§5.3–5.4 failover paths) as Python generators. They do *real* masking
+arithmetic on numpy arrays but never touch a clock, a socket, or the
+broker directly: every externally-visible action is a yield,
+
+  ("compute", seconds)                       local work
+  ("call",  op, kwargs, nbytes)              non-blocking controller op
+  ("wait",  kind, kwargs, nbytes, timeout)   long-poll; resumes with the
+                                             result or {"status":"timeout"}
+
+and the final result is returned via StopIteration. Two runtimes drive
+the identical coroutines:
+
+  * the discrete-event kernel (``core/protocol.py``) — virtual time,
+    closed-form message-count validation;
+  * the wire runtime (``net/client.py``) — real asyncio transport to the
+    ``net/broker.py`` server, wall-clock timeouts, injected faults.
+
+That both planes share these generators (and the same ``Controller``) is
+what makes the wire plane's published average bit-identical to the sim's
+for the same seeds and topology.
+
+``timeout`` in a ``wait`` yield is ``None`` (wait forever), a float in
+*virtual seconds* (the sim uses it directly; the wire runtime scales it
+to wall seconds), or the string ``"aggregation"`` (the broker's
+aggregation timeout, §5.4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Generator, Iterable, Optional
+
+import numpy as np
+
+from repro.core.costs import CostModel, EDGE
+from repro.crypto.np_impl import (
+    NpFixedPoint,
+    derive_key_np,
+    derive_pair_key_np,
+    keystream_pair_lanes_np,
+)
+from repro.topology import RingTopology
+
+_TAG_HOP_PAD = 0x50
+_TAG_INITIATOR_MASK = 0x52
+
+LearnerGen = Generator[tuple, Any, None]
+
+
+# ---------------------------------------------------------------------------
+# Crypto helpers (real arithmetic; costs accounted separately)
+# ---------------------------------------------------------------------------
+
+
+class LearnerCrypto:
+    """Hop encryption for one learner: Threefry one-time pads over Z/2^32Z.
+
+    ``symmetric_only`` models §5.8 pre-negotiation (deep-edge profile);
+    otherwise each hop additionally pays the RSA wrap/unwrap (§5.7 hybrid).
+    """
+
+    def __init__(self, node: int, provisioning_seed: int, learner_master: int,
+                 scale_bits: int = 16, encrypt: bool = True,
+                 symmetric_only: bool = False):
+        self.node = node
+        self.codec = NpFixedPoint(scale_bits)
+        self.encrypt_enabled = encrypt
+        self.symmetric_only = symmetric_only
+        prov = np.array([provisioning_seed & 0xFFFFFFFF,
+                         (provisioning_seed >> 32) & 0xFFFFFFFF], np.uint32)
+        self._pad_seed = derive_key_np(prov, _TAG_HOP_PAD)
+        master = np.array([learner_master & 0xFFFFFFFF,
+                           (learner_master >> 32) & 0xFFFFFFFF], np.uint32)
+        self._own = derive_key_np(derive_key_np(master, node), _TAG_INITIATOR_MASK)
+
+    def pad(self, src: int, dst: int, n: int, counter: int) -> np.ndarray:
+        k = derive_pair_key_np(self._pad_seed, src, dst)
+        return keystream_pair_lanes_np(k, n, counter)
+
+    def mask_r(self, n: int, counter: int) -> np.ndarray:
+        return keystream_pair_lanes_np(self._own, n, counter)
+
+    def hop_encrypt(self, plain_ring: np.ndarray, dst: int, counter: int) -> np.ndarray:
+        if not self.encrypt_enabled:
+            return plain_ring
+        return NpFixedPoint.add(plain_ring, self.pad(self.node, dst, plain_ring.size, counter))
+
+    def hop_decrypt(self, cipher: np.ndarray, src: int, counter: int) -> np.ndarray:
+        if not self.encrypt_enabled:
+            return cipher
+        return NpFixedPoint.sub(cipher, self.pad(src, self.node, cipher.size, counter))
+
+
+# ---------------------------------------------------------------------------
+# Learner state machines (paper §5.1.1 / §5.1.2, with §5.3–5.4 failover)
+# ---------------------------------------------------------------------------
+
+
+def safe_learner(
+    node: int,
+    topology: RingTopology,
+    value: np.ndarray,
+    crypto: LearnerCrypto,
+    cost: CostModel,
+    group: int = 0,
+    is_initiator: bool = False,
+    weight: Optional[float] = None,
+    counter: int = 0,
+    fail_mode: Optional[str] = None,
+    subgroups: int = 1,
+    node_base: int = 1,
+) -> LearnerGen:
+    """One SAFE learner for one aggregation round.
+
+    Successor targeting comes from the shared ``topology`` object (the
+    same one the device plane's ppermute schedule is built from);
+    ``node_base`` maps 0-based topology ranks onto the sim's node ids.
+
+    fail_mode: None | 'dead' (crashed before round — never spawned by the
+    runner, listed here for completeness) | 'after_post' (initiator crash
+    of Fig. 5: posts its first aggregate then stops responding).
+    """
+    codec = crypto.codec
+    nxt = topology.successor(node - node_base) + node_base
+    payload_f = value if weight is None else np.concatenate(
+        [value * weight, np.array([weight], value.dtype)])
+    V = payload_f.size
+    # base64-wrapped binary ciphertext: ~6 bytes/element on the wire —
+    # the "encryption helps with compression" effect of §6.2 (INSEC posts
+    # clear-text JSON floats at ~14 bytes/element)
+    nbytes = 6 * V
+
+    def enc_cost():
+        return cost.encrypt(nbytes, crypto.symmetric_only)
+
+    def _election():
+        """§5.4 path after any aggregation timeout: probe the average,
+        else ask to become initiator. Returns 'done'|'initiator'|'rejoin'."""
+        res = yield ("wait", "get_average", dict(), nbytes, 0.01)
+        if res.get("status") != "timeout":
+            return "done"
+        won = yield ("call", "should_initiate", dict(node=node, group=group), 64)
+        if won:
+            return "initiator"
+        res = yield ("wait", "get_average", dict(), nbytes, 0.01)
+        if res.get("status") != "timeout":
+            return "done"
+        return "rejoin"
+
+    def _post_and_confirm(agg):
+        """post_aggregate + check_aggregate loop, handling §5.3 reposts and
+        round resets. Returns the terminal status dict (status is
+        'consumed'|'reset'|'timeout'|'self' — 'self' means every repost
+        target was dead and the poster's own aggregate is final)."""
+        yield ("compute", enc_cost())
+        cipher = crypto.hop_encrypt(agg, nxt, counter)
+        yield ("call", "post_aggregate",
+               dict(from_node=node, to_node=nxt, payload=cipher, group=group), nbytes)
+        while True:
+            st = yield ("wait", "check_aggregate", dict(node=node, group=group),
+                        64, "aggregation")
+            status = st.get("status")
+            if status in ("consumed", "reset", "timeout", "self"):
+                return st
+            assert status == "repost"
+            target = st["to_node"]
+            yield ("compute", enc_cost())
+            cipher = crypto.hop_encrypt(agg, target, counter)
+            yield ("call", "post_aggregate",
+                   dict(from_node=node, to_node=target, payload=cipher, group=group),
+                   nbytes)
+
+    initiator_now = is_initiator
+    while True:  # restarts on initiator failover (§5.4)
+        if initiator_now:
+            # -- §5.1.1 steps 1-2: mask with R, encrypt for next, post.
+            yield ("compute", cost.t_rng_word * V + cost.t_add_elem * V)
+            R = crypto.mask_r(V, counter)
+            agg = NpFixedPoint.add(codec.encode(payload_f), R)
+            if fail_mode == "after_post":
+                # Fig. 5 step 3: initiator posts once, then crashes.
+                yield ("compute", enc_cost())
+                cipher = crypto.hop_encrypt(agg, nxt, counter)
+                yield ("call", "post_aggregate",
+                       dict(from_node=node, to_node=nxt, payload=cipher, group=group),
+                       nbytes)
+                return
+
+            st = yield from _post_and_confirm(agg)
+            if st["status"] in ("reset", "timeout"):
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+
+            if st["status"] == "self":
+                # Lone survivor (§5.3 degenerate case): every repost
+                # target was dead, the aggregate never left this node —
+                # unmask the local copy, no decrypt hop.
+                total = agg
+                posted = st["posted"]
+            else:
+                # -- §5.1.1 steps 3-4: receive final aggregate, unmask.
+                res = yield ("wait", "get_aggregate", dict(node=node, group=group),
+                             nbytes, "aggregation")
+                if res.get("status") == "timeout":
+                    verdict = yield from _election()
+                    if verdict == "done":
+                        return
+                    initiator_now = verdict == "initiator"
+                    continue
+                yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
+                total = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
+                posted = res["posted"]  # §5.3: contributor count from controller
+            yield ("compute", cost.t_add_elem * V * 2)
+            total = NpFixedPoint.sub(total, R)
+            dec = codec.decode(total)
+            if weight is not None:
+                avg = dec[:-1] / max(dec[-1], 1e-12)
+                wavg = dec[-1] / posted
+            else:
+                avg = dec / posted
+                wavg = None
+            yield ("call", "post_average",
+                   dict(node=node, average=avg, group=group, weight_avg=wavg), nbytes)
+            if subgroups > 1:
+                # §5.5: group initiators must fetch the cross-group average.
+                yield ("wait", "get_average", dict(), nbytes, None)
+            return
+        else:
+            # -- §5.1.2 non-initiator.
+            res = yield ("wait", "get_aggregate", dict(node=node, group=group),
+                         nbytes, "aggregation")
+            if res.get("status") == "timeout":
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+            if fail_mode == "dead":
+                return
+            yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
+            agg = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
+            yield ("compute", cost.t_add_elem * V)
+            agg = NpFixedPoint.add(agg, codec.encode(payload_f))
+
+            st = yield from _post_and_confirm(agg)
+            if st["status"] == "reset":
+                continue  # round restarted — rejoin the new chain
+            # 'timeout' falls through to get_average, whose own timeout
+            # handles an aborted round.
+
+            res = yield ("wait", "get_average", dict(), nbytes, "aggregation")
+            if res.get("status") == "timeout":
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+            return
+
+
+def insec_learner(node: int, value: np.ndarray, cost: CostModel,
+                  group: int = 0, post_to: int = -1) -> LearnerGen:
+    """INSEC baseline: post raw parameters, read back the average."""
+    nbytes = 14 * value.size  # clear-text JSON floats
+    yield ("call", "post_aggregate",
+           dict(from_node=node, to_node=post_to, payload=value, group=group), nbytes)
+    yield ("wait", "get_average", dict(), nbytes, None)
+    return
+
+
+# ---------------------------------------------------------------------------
+# Round construction shared by both runtimes
+# ---------------------------------------------------------------------------
+
+
+def build_round_machines(
+    values: np.ndarray,
+    topo: RingTopology,
+    groups: Dict[int, list],
+    initiators: set,
+    *,
+    mode: str = "safe",
+    weights: Optional[np.ndarray] = None,
+    cost: CostModel = EDGE,
+    symmetric_only: bool = False,
+    scale_bits: int = 16,
+    provisioning_seed: int = 0xC0FFEE,
+    learner_master: int = 0x5EED,
+    counter: int = 0,
+    subgroups: int = 1,
+    failed: Iterable[int] = (),
+    initiator_fails: bool = False,
+) -> Dict[int, LearnerGen]:
+    """Build one generator per live learner for one aggregation round.
+
+    This is the single place that wires values/keys/topology into the
+    state machines — ``run_safe_round`` (discrete-event) and
+    ``net.client.run_safe_round_net`` (wire) both call it, so "same
+    seeds, same topology" means *the same coroutines* in both planes.
+    Returns ``{node_id: generator}`` for nodes not in ``failed``.
+    """
+    failed = set(failed)
+    machines: Dict[int, LearnerGen] = {}
+    for g, chain in groups.items():
+        for node in chain:
+            if node in failed:
+                continue  # crashed before the aggregation started
+            val = values[node - 1]
+            w = None if weights is None else float(weights[node - 1])
+            if mode == "insec":
+                machines[node] = insec_learner(
+                    node, val if w is None else val * w, cost, group=g)
+                continue
+            crypto = LearnerCrypto(
+                node, provisioning_seed, learner_master, scale_bits,
+                encrypt=(mode == "safe"), symmetric_only=symmetric_only)
+            is_init = node in initiators
+            fail_mode = ("after_post"
+                         if (initiator_fails and g == 0 and is_init) else None)
+            machines[node] = safe_learner(
+                node, topo, val, crypto, cost, group=g,
+                is_initiator=is_init, weight=w, counter=counter,
+                fail_mode=fail_mode, subgroups=subgroups)
+    return machines

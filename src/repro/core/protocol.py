@@ -12,259 +12,32 @@ mean in tests), per-op message counters (validating §5's closed forms),
 virtual completion time (the paper's "aggregation time" axis), and byte
 counters.
 
-Learner coroutine protocol — generators yield:
-  ("compute", seconds)                       local work
-  ("call",  op, kwargs, nbytes)              non-blocking controller op
-  ("wait",  kind, kwargs, nbytes, timeout)   long-poll; resumes with the
-                                             result or {"status":"timeout"}
-and return their final result via StopIteration.
+The learner coroutines themselves live in ``core/machines.py`` (yield
+protocol documented there) — they are runtime-agnostic and are also
+driven, unmodified, over a real asyncio transport by ``repro.net``.
+This module is the *virtual-time* runtime: the discrete-event kernel,
+FIFO controller-server queueing, and the progress monitor.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Any, Callable, Dict, Generator, Iterable, Optional
+from typing import Any, Dict, Iterable, Optional
 
 import numpy as np
 
-from repro.core.controller import Controller
+from repro.core.controller import CALL_OPS, TIMED_OPS, Controller
 from repro.core.costs import CostModel, EDGE
-from repro.crypto.np_impl import (
-    NpFixedPoint,
-    derive_key_np,
-    derive_pair_key_np,
-    keystream_pair_lanes_np,
+
+# Re-exported for backwards compatibility: the state machines moved to
+# core/machines.py so the wire runtime (repro/net) can drive them too.
+from repro.core.machines import (  # noqa: F401
+    LearnerCrypto,
+    LearnerGen,
+    build_round_machines,
+    insec_learner,
+    safe_learner,
 )
 from repro.topology import RingTopology
-
-_TAG_HOP_PAD = 0x50
-_TAG_INITIATOR_MASK = 0x52
-
-LearnerGen = Generator[tuple, Any, None]
-
-
-# ---------------------------------------------------------------------------
-# Crypto helpers (real arithmetic; costs accounted separately)
-# ---------------------------------------------------------------------------
-
-
-class LearnerCrypto:
-    """Hop encryption for one learner: Threefry one-time pads over Z/2^32Z.
-
-    ``symmetric_only`` models §5.8 pre-negotiation (deep-edge profile);
-    otherwise each hop additionally pays the RSA wrap/unwrap (§5.7 hybrid).
-    """
-
-    def __init__(self, node: int, provisioning_seed: int, learner_master: int,
-                 scale_bits: int = 16, encrypt: bool = True,
-                 symmetric_only: bool = False):
-        self.node = node
-        self.codec = NpFixedPoint(scale_bits)
-        self.encrypt_enabled = encrypt
-        self.symmetric_only = symmetric_only
-        prov = np.array([provisioning_seed & 0xFFFFFFFF,
-                         (provisioning_seed >> 32) & 0xFFFFFFFF], np.uint32)
-        self._pad_seed = derive_key_np(prov, _TAG_HOP_PAD)
-        master = np.array([learner_master & 0xFFFFFFFF,
-                           (learner_master >> 32) & 0xFFFFFFFF], np.uint32)
-        self._own = derive_key_np(derive_key_np(master, node), _TAG_INITIATOR_MASK)
-
-    def pad(self, src: int, dst: int, n: int, counter: int) -> np.ndarray:
-        k = derive_pair_key_np(self._pad_seed, src, dst)
-        return keystream_pair_lanes_np(k, n, counter)
-
-    def mask_r(self, n: int, counter: int) -> np.ndarray:
-        return keystream_pair_lanes_np(self._own, n, counter)
-
-    def hop_encrypt(self, plain_ring: np.ndarray, dst: int, counter: int) -> np.ndarray:
-        if not self.encrypt_enabled:
-            return plain_ring
-        return NpFixedPoint.add(plain_ring, self.pad(self.node, dst, plain_ring.size, counter))
-
-    def hop_decrypt(self, cipher: np.ndarray, src: int, counter: int) -> np.ndarray:
-        if not self.encrypt_enabled:
-            return cipher
-        return NpFixedPoint.sub(cipher, self.pad(src, self.node, cipher.size, counter))
-
-
-# ---------------------------------------------------------------------------
-# Learner state machines (paper §5.1.1 / §5.1.2, with §5.3–5.4 failover)
-# ---------------------------------------------------------------------------
-
-
-def safe_learner(
-    node: int,
-    topology: RingTopology,
-    value: np.ndarray,
-    crypto: LearnerCrypto,
-    cost: CostModel,
-    group: int = 0,
-    is_initiator: bool = False,
-    weight: Optional[float] = None,
-    counter: int = 0,
-    fail_mode: Optional[str] = None,
-    subgroups: int = 1,
-    node_base: int = 1,
-) -> LearnerGen:
-    """One SAFE learner for one aggregation round.
-
-    Successor targeting comes from the shared ``topology`` object (the
-    same one the device plane's ppermute schedule is built from);
-    ``node_base`` maps 0-based topology ranks onto the sim's node ids.
-
-    fail_mode: None | 'dead' (crashed before round — never spawned by the
-    runner, listed here for completeness) | 'after_post' (initiator crash
-    of Fig. 5: posts its first aggregate then stops responding).
-    """
-    codec = crypto.codec
-    nxt = topology.successor(node - node_base) + node_base
-    payload_f = value if weight is None else np.concatenate(
-        [value * weight, np.array([weight], value.dtype)])
-    V = payload_f.size
-    # base64-wrapped binary ciphertext: ~6 bytes/element on the wire —
-    # the "encryption helps with compression" effect of §6.2 (INSEC posts
-    # clear-text JSON floats at ~14 bytes/element)
-    nbytes = 6 * V
-
-    def enc_cost():
-        return crypto.codec.scale_bits * 0 + cost.encrypt(nbytes, crypto.symmetric_only)
-
-    def _election():
-        """§5.4 path after any aggregation timeout: probe the average,
-        else ask to become initiator. Returns 'done'|'initiator'|'rejoin'."""
-        res = yield ("wait", "get_average", dict(), nbytes, 0.01)
-        if res.get("status") != "timeout":
-            return "done"
-        won = yield ("call", "should_initiate", dict(node=node, group=group), 64)
-        if won:
-            return "initiator"
-        res = yield ("wait", "get_average", dict(), nbytes, 0.01)
-        if res.get("status") != "timeout":
-            return "done"
-        return "rejoin"
-
-    def _post_and_confirm(agg):
-        """post_aggregate + check_aggregate loop, handling §5.3 reposts and
-        round resets. Returns the terminal status dict (status is
-        'consumed'|'reset'|'timeout'|'self' — 'self' means every repost
-        target was dead and the poster's own aggregate is final)."""
-        yield ("compute", enc_cost())
-        cipher = crypto.hop_encrypt(agg, nxt, counter)
-        yield ("call", "post_aggregate",
-               dict(from_node=node, to_node=nxt, payload=cipher, group=group), nbytes)
-        while True:
-            st = yield ("wait", "check_aggregate", dict(node=node, group=group),
-                        64, "aggregation")
-            status = st.get("status")
-            if status in ("consumed", "reset", "timeout", "self"):
-                return st
-            assert status == "repost"
-            target = st["to_node"]
-            yield ("compute", enc_cost())
-            cipher = crypto.hop_encrypt(agg, target, counter)
-            yield ("call", "post_aggregate",
-                   dict(from_node=node, to_node=target, payload=cipher, group=group),
-                   nbytes)
-
-    initiator_now = is_initiator
-    while True:  # restarts on initiator failover (§5.4)
-        if initiator_now:
-            # -- §5.1.1 steps 1-2: mask with R, encrypt for next, post.
-            yield ("compute", cost.t_rng_word * V + cost.t_add_elem * V)
-            R = crypto.mask_r(V, counter)
-            agg = NpFixedPoint.add(codec.encode(payload_f), R)
-            if fail_mode == "after_post":
-                # Fig. 5 step 3: initiator posts once, then crashes.
-                yield ("compute", enc_cost())
-                cipher = crypto.hop_encrypt(agg, nxt, counter)
-                yield ("call", "post_aggregate",
-                       dict(from_node=node, to_node=nxt, payload=cipher, group=group),
-                       nbytes)
-                return
-
-            st = yield from _post_and_confirm(agg)
-            if st["status"] in ("reset", "timeout"):
-                verdict = yield from _election()
-                if verdict == "done":
-                    return
-                initiator_now = verdict == "initiator"
-                continue
-
-            if st["status"] == "self":
-                # Lone survivor (§5.3 degenerate case): every repost
-                # target was dead, the aggregate never left this node —
-                # unmask the local copy, no decrypt hop.
-                total = agg
-                posted = st["posted"]
-            else:
-                # -- §5.1.1 steps 3-4: receive final aggregate, unmask.
-                res = yield ("wait", "get_aggregate", dict(node=node, group=group),
-                             nbytes, "aggregation")
-                if res.get("status") == "timeout":
-                    verdict = yield from _election()
-                    if verdict == "done":
-                        return
-                    initiator_now = verdict == "initiator"
-                    continue
-                yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
-                total = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
-                posted = res["posted"]  # §5.3: contributor count from controller
-            yield ("compute", cost.t_add_elem * V * 2)
-            total = NpFixedPoint.sub(total, R)
-            dec = codec.decode(total)
-            if weight is not None:
-                avg = dec[:-1] / max(dec[-1], 1e-12)
-                wavg = dec[-1] / posted
-            else:
-                avg = dec / posted
-                wavg = None
-            yield ("call", "post_average",
-                   dict(node=node, average=avg, group=group, weight_avg=wavg), nbytes)
-            if subgroups > 1:
-                # §5.5: group initiators must fetch the cross-group average.
-                yield ("wait", "get_average", dict(), nbytes, None)
-            return
-        else:
-            # -- §5.1.2 non-initiator.
-            res = yield ("wait", "get_aggregate", dict(node=node, group=group),
-                         nbytes, "aggregation")
-            if res.get("status") == "timeout":
-                verdict = yield from _election()
-                if verdict == "done":
-                    return
-                initiator_now = verdict == "initiator"
-                continue
-            if fail_mode == "dead":
-                return
-            yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
-            agg = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
-            yield ("compute", cost.t_add_elem * V)
-            agg = NpFixedPoint.add(agg, codec.encode(payload_f))
-
-            st = yield from _post_and_confirm(agg)
-            if st["status"] == "reset":
-                continue  # round restarted — rejoin the new chain
-            # 'timeout' falls through to get_average, whose own timeout
-            # handles an aborted round.
-
-            res = yield ("wait", "get_average", dict(), nbytes, "aggregation")
-            if res.get("status") == "timeout":
-                verdict = yield from _election()
-                if verdict == "done":
-                    return
-                initiator_now = verdict == "initiator"
-                continue
-            return
-
-
-def insec_learner(node: int, value: np.ndarray, cost: CostModel,
-                  group: int = 0, post_to: int = -1) -> LearnerGen:
-    """INSEC baseline: post raw parameters, read back the average."""
-    nbytes = 14 * value.size  # clear-text JSON floats
-    yield ("call", "post_aggregate",
-           dict(from_node=node, to_node=post_to, payload=value, group=group), nbytes)
-    yield ("wait", "get_average", dict(), nbytes, None)
-    return
 
 
 # ---------------------------------------------------------------------------
@@ -338,46 +111,27 @@ class ProtocolSimulation:
 
     # -- controller op dispatch (counts messages + bytes) -----------------
     def _dispatch(self, task: _Task, op: str, kwargs: dict, nbytes: int) -> Any:
+        if op not in CALL_OPS:
+            raise ValueError(f"unknown call op {op}")
         self.bytes_sent += nbytes
         task.time = self._server(task.time + self.cost.message(nbytes), nbytes)
-        now = task.time
-        if op == "post_aggregate":
-            return self.ctrl.post_aggregate(now=now, **kwargs)
-        if op == "post_average":
-            return self.ctrl.post_average(now=now, **kwargs)
-        if op == "should_initiate":
-            won = self.ctrl.should_initiate(now=now, **kwargs)
-            if won:
-                self.initiator_elections += 1
-            return won
-        raise ValueError(f"unknown call op {op}")
+        if op in TIMED_OPS:
+            kwargs = dict(kwargs, now=task.time)
+        res = self.ctrl.call(op, **kwargs)
+        if op == "should_initiate" and res:
+            self.initiator_elections += 1
+        return res
 
     def _peek_wait(self, kind: str, kwargs: dict) -> Optional[Any]:
         """Non-consuming availability probe (event-queue ordering)."""
         if kind == "__call__":
             return {}  # plain calls are always ready
-        if kind == "get_aggregate":
-            return self.ctrl.try_get_aggregate(**kwargs)
-        if kind == "check_aggregate":
-            return self.ctrl.try_check_aggregate(**kwargs)
-        if kind == "get_average":
-            return self.ctrl.try_get_average()
-        raise ValueError(f"unknown wait kind {kind}")
+        return self.ctrl.probe(kind, **kwargs)
 
     def _try_wait(self, task: _Task, kind: str, kwargs: dict) -> Optional[Any]:
-        if kind == "get_aggregate":
-            if self.ctrl.try_get_aggregate(**kwargs) is None:
-                return None
-            return self.ctrl.get_aggregate(**kwargs)
-        if kind == "check_aggregate":
-            if self.ctrl.try_check_aggregate(**kwargs) is None:
-                return None
-            return self.ctrl.check_aggregate(**kwargs)
-        if kind == "get_average":
-            if self.ctrl.try_get_average() is None:
-                return None
-            return self.ctrl.get_average()
-        raise ValueError(f"unknown wait kind {kind}")
+        if self.ctrl.probe(kind, **kwargs) is None:
+            return None
+        return self.ctrl.consume(kind, **kwargs)
 
     def run(self, max_virtual_time: float = 3600.0) -> SimResult:
         """Discrete-event loop: process exactly one event at a time in
@@ -560,25 +314,14 @@ def run_safe_round(
     # control plane does not know it up front).
     initiators = {r + 1 for r in topo.elect_initiators()}
 
-    for g, chain in groups.items():
-        for node in chain:
-            if node in failed:
-                continue  # crashed before the aggregation started
-            val = values[node - 1]
-            w = None if weights is None else float(weights[node - 1])
-            if mode == "insec":
-                gen = insec_learner(node, val if w is None else val * w, cost, group=g)
-            else:
-                crypto = LearnerCrypto(
-                    node, provisioning_seed, learner_master, scale_bits,
-                    encrypt=(mode == "safe"), symmetric_only=symmetric_only)
-                is_init = node in initiators
-                fail_mode = "after_post" if (initiator_fails and g == 0 and is_init) else None
-                gen = safe_learner(
-                    node, topo, val, crypto, cost, group=g,
-                    is_initiator=is_init, weight=w, counter=counter,
-                    fail_mode=fail_mode, subgroups=subgroups)
-            sim.spawn(node, gen)
+    machines = build_round_machines(
+        values, topo, groups, initiators, mode=mode, weights=weights,
+        cost=cost, symmetric_only=symmetric_only, scale_bits=scale_bits,
+        provisioning_seed=provisioning_seed, learner_master=learner_master,
+        counter=counter, subgroups=subgroups, failed=failed,
+        initiator_fails=initiator_fails)
+    for node, gen in machines.items():
+        sim.spawn(node, gen)
 
     if mode == "insec":
         _drive_insec(ctrl, sim, groups, failed, weights)

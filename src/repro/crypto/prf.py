@@ -141,16 +141,37 @@ class RoundCounter:
     Guarantees keystream non-reuse across aggregation rounds: each round
     reserves ``nwords`` of counter space per purpose. Plain Python (host
     control-plane state, never traced).
+
+    The Threefry counter words are uint32, so the usable space per key is
+    exactly ``2**32`` words. ``reserve`` refuses — *before* mutating any
+    state — any reservation whose range ``[base, base + nwords)`` would
+    cross that boundary: a silent wrap would hand out counters already
+    consumed in an earlier round, i.e. reuse one-time pads. After a
+    refusal the allocator is still valid for smaller reservations, and
+    the remedy is a Round-0 key rotation (fresh pair keys ⇒ fresh
+    counter space).
     """
+
+    #: usable counter words per (key, purpose): the full uint32 range.
+    LIMIT = 2**32
 
     def __init__(self) -> None:
         self._next = 0
 
+    @property
+    def remaining(self) -> int:
+        """Counter words still available before a key rotation is due."""
+        return self.LIMIT - self._next
+
     def reserve(self, nwords: int) -> int:
-        base = self._next
-        self._next += int(nwords)
-        if self._next >= 2**32:
+        nwords = int(nwords)
+        if nwords < 0:
+            raise ValueError(f"nwords must be >= 0, got {nwords}")
+        if nwords > self.remaining:
             raise OverflowError(
-                "counter space exhausted; rotate pair keys (Round 0) before reuse"
+                f"counter space exhausted: {self._next} of 2**32 words used, "
+                f"{nwords} requested; rotate pair keys (Round 0) before reuse"
             )
+        base = self._next
+        self._next += nwords
         return base

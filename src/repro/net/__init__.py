@@ -1,0 +1,47 @@
+"""Wire plane: the SAFE control plane over a real async transport.
+
+`repro.net` runs the *same* learner state machines
+(``core/machines.py``) and the *same* broker semantics
+(``core/controller.Controller``) as the discrete-event simulation, but
+over actual sockets: a binary wire codec (``wire``), an asyncio broker
+server with long-poll scheduling and the §5.3 progress monitor
+(``broker``), a learner runtime mapping generator yields onto awaits
+(``client``), pluggable transport faults (``faults``), and a
+multi-tenant load harness (``loadgen``).
+
+Numpy-only by design (no JAX import) so a broker or learner can run on
+hosts without an accelerator stack; the engine plane takes an already-
+constructed ``serve.AggregationEngine`` by injection.
+"""
+from repro.net.broker import SafeBroker
+from repro.net.client import NetResult, WireClient, drive_learner, run_safe_round_net
+from repro.net.faults import (
+    Chain,
+    ChurnInterceptor,
+    DropInterceptor,
+    DropPacket,
+    Interceptor,
+    LatencyInterceptor,
+    LearnerCrashed,
+    deep_edge_faults,
+)
+from repro.net.loadgen import LoadReport, run_engine_load, run_protocol_load
+
+__all__ = [
+    "SafeBroker",
+    "WireClient",
+    "NetResult",
+    "drive_learner",
+    "run_safe_round_net",
+    "Interceptor",
+    "Chain",
+    "LatencyInterceptor",
+    "DropInterceptor",
+    "ChurnInterceptor",
+    "DropPacket",
+    "LearnerCrashed",
+    "deep_edge_faults",
+    "LoadReport",
+    "run_engine_load",
+    "run_protocol_load",
+]

@@ -1,0 +1,461 @@
+"""Asyncio broker server: the SAFE controller behind the wire codec.
+
+The paper's claim is that chain aggregation "reduces the controller of
+the aggregation to a mere message broker" (§5, Appendix A). This module
+is that broker as a real server: an asyncio TCP listener speaking
+:mod:`repro.net.wire`, with
+
+  * the *identical* :class:`repro.core.controller.Controller` per tenant
+    session — the broker adds transport, long-poll scheduling and a
+    wall clock, never protocol semantics (dispatch goes through the
+    same ``call``/``probe``/``consume`` registry the discrete-event
+    kernel uses);
+  * long-poll waits: ``check_aggregate`` / ``get_aggregate`` /
+    ``get_average`` park on a per-session condition until the probe is
+    satisfiable or the client's timeout lapses (timeouts do **not**
+    touch the message counters — exactly the sim kernel's accounting);
+  * the external progress monitor (§5.3) as a background task ordering
+    reposts on wall-clock timeouts;
+  * optionally, an *engine plane*: ``submit_session``/``wait_session``
+    ops that feed a :class:`repro.serve.agg_engine.AggregationEngine`,
+    so many wire tenants batch through one compiled device program.
+
+One TCP connection serves one client; requests on a connection are
+processed in order (a parked long-poll blocks only its own connection),
+which matches the one-outstanding-request HTTP clients of the paper's
+deployment.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.controller import CALL_OPS, TIMED_OPS, WAIT_KINDS, Controller
+from repro.net import wire
+
+
+class _Session:
+    """One tenant: a Controller plus the broker-side wait machinery."""
+
+    __slots__ = ("sid", "ctrl", "cond", "closed", "monitor_reposts",
+                 "initiator_elections")
+
+    def __init__(self, sid: int, ctrl: Controller):
+        self.sid = sid
+        self.ctrl = ctrl
+        self.cond = asyncio.Condition()
+        self.closed = False
+        self.monitor_reposts = 0
+        self.initiator_elections = 0
+
+
+async def _cond_wait(cond: asyncio.Condition, deadline: Optional[float]) -> bool:
+    """One parked wait on ``cond`` (held). Returns False when the
+    deadline lapsed, True when notified — callers re-check their
+    predicate either way. The single place that owns the
+    wait_for/Condition timeout interaction."""
+    if deadline is None:
+        await cond.wait()
+        return True
+    remaining = deadline - asyncio.get_running_loop().time()
+    if remaining <= 0:
+        return False
+    try:
+        await asyncio.wait_for(cond.wait(), remaining)
+    except asyncio.TimeoutError:
+        return False
+    return True
+
+
+class SafeBroker:
+    """Wire-level SAFE broker (protocol plane + optional engine plane).
+
+    Args:
+      aggregation_timeout: default §5.4 round timeout (wall seconds) for
+        sessions that don't specify their own.
+      progress_timeout: §5.3 stuck-posting threshold (wall seconds).
+      monitor_interval: progress-monitor tick period.
+      engine: optional ``AggregationEngine``; enables ``submit_session``
+        / ``wait_session``. The engine is stepped on the event loop (its
+        ``step()`` is one compiled-program dispatch), with completion
+        signalled through the engine's ``on_complete`` hook.
+    """
+
+    def __init__(self, aggregation_timeout: float = 30.0,
+                 progress_timeout: float = 1.0,
+                 monitor_interval: float = 0.25,
+                 engine=None, engine_session_ttl: float = 300.0):
+        self.aggregation_timeout = aggregation_timeout
+        self.progress_timeout = progress_timeout
+        self.monitor_interval = monitor_interval
+        self.engine_session_ttl = engine_session_ttl
+        self._sessions: Dict[int, _Session] = {}
+        self._sids = itertools.count()
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._tasks: list = []
+        self._conn_tasks: set = set()
+        self._t0 = 0.0
+        #: §5.3 monitor passes that hit a tenant exception (observability
+        #: for the per-session guard in _monitor_loop)
+        self.monitor_errors = 0
+        #: engine steps that raised (the loop keeps serving; see
+        #: _engine_loop's guard)
+        self.engine_errors = 0
+        # engine plane
+        self.engine = engine
+        self._engine_sessions: Dict[int, object] = {}
+        # sid -> completion wall time; entries older than
+        # engine_session_ttl are pruned (abandoned submissions — a
+        # tenant that crashed between submit_session and wait_session
+        # must not pin its AggSession forever)
+        self._engine_done: Dict[int, float] = {}
+        self._engine_cond = asyncio.Condition()
+        self._engine_wake = asyncio.Event()
+        if engine is not None:
+            # completion hook fires inside step() on the event-loop
+            # thread; waiters are notified after the step returns.
+            engine.on_complete = (
+                lambda sess: self._engine_done.setdefault(
+                    sess.sid, asyncio.get_running_loop().time()))
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    async def start(self, host: str = "127.0.0.1",
+                    port: int = 0) -> Tuple[str, int]:
+        """Bind and serve; returns the (host, port) actually bound."""
+        loop = asyncio.get_running_loop()
+        self._t0 = loop.time()
+        self._server = await asyncio.start_server(self._handle, host, port)
+        self._tasks.append(asyncio.ensure_future(self._monitor_loop()))
+        if self.engine is not None:
+            self._tasks.append(asyncio.ensure_future(self._engine_loop()))
+        sock = self._server.sockets[0]
+        addr = sock.getsockname()
+        return addr[0], addr[1]
+
+    async def stop(self) -> None:
+        # stop accepting FIRST so no handler can slip in behind the
+        # cancellation snapshot below
+        if self._server is not None:
+            self._server.close()
+        # cancel parked connection handlers too: a client long-polling
+        # with timeout=None would otherwise leak (and on Python >= 3.12
+        # make Server.wait_closed() block forever)
+        pending = list(self._tasks) + list(self._conn_tasks)
+        for t in pending:
+            t.cancel()
+        for t in pending:
+            try:
+                await t
+            except (asyncio.CancelledError, Exception):
+                pass
+        # second sweep: a connection accepted just before close() only
+        # registers once its handler task first runs, which may be
+        # during the awaits above — the accept stream is closed, so
+        # this drains in finitely many passes
+        while self._conn_tasks:
+            late = list(self._conn_tasks)
+            self._conn_tasks.difference_update(late)
+            for t in late:
+                t.cancel()
+            for t in late:
+                try:
+                    await t
+                except (asyncio.CancelledError, Exception):
+                    pass
+        self._tasks.clear()
+        if self._server is not None:
+            await self._server.wait_closed()
+            self._server = None
+
+    def now(self) -> float:
+        """Broker wall clock (seconds since start) — the ``now`` every
+        Controller call sees, mirroring the sim's virtual clock."""
+        return asyncio.get_running_loop().time() - self._t0
+
+    # ------------------------------------------------------------------
+    # connection handling
+    # ------------------------------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self._conn_tasks.add(asyncio.current_task())
+        try:
+            while True:
+                body = await wire.read_frame(reader)
+                if body is None:
+                    break
+                try:
+                    op, kwargs = wire.decode_request(body)
+                    payload = await self._dispatch(op, kwargs)
+                    out = wire.encode_response(payload)
+                except asyncio.CancelledError:
+                    raise
+                except wire.WireError as e:
+                    out = wire.encode_error(str(e))
+                except Exception as e:  # noqa: BLE001 — report, keep serving
+                    out = wire.encode_error(f"{type(e).__name__}: {e}")
+                try:
+                    framed = wire.encode_frame(out)
+                except wire.WireError as e:
+                    # response exceeded MAX_FRAME (e.g. a wait_session
+                    # result with many large rounds): answer with the
+                    # error instead of dying mid-connection
+                    framed = wire.encode_frame(wire.encode_error(str(e)))
+                writer.write(framed)
+                await writer.drain()
+        except (asyncio.IncompleteReadError, ConnectionResetError,
+                wire.WireDecodeError, asyncio.CancelledError):
+            pass  # client went away / stream corrupt / shutdown
+        finally:
+            self._conn_tasks.discard(asyncio.current_task())
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:  # noqa: BLE001
+                pass
+
+    def _session(self, kwargs: dict) -> _Session:
+        sid = kwargs.pop("session", None)
+        sess = self._sessions.get(sid)
+        if sess is None:
+            raise wire.WireError(f"unknown session {sid!r}")
+        return sess
+
+    async def _dispatch(self, op: str, kwargs: dict):
+        if op == "create_session":
+            return self._create_session(kwargs)
+        if op == "submit_session":
+            return self._submit_session(kwargs)
+        if op == "wait_session":
+            return await self._wait_session(kwargs)
+
+        sess = self._session(kwargs)
+        if op == "delete_session":
+            # tear the tenant down: unpark any stragglers, stop the
+            # monitor from scanning it, free the Controller state
+            self._sessions.pop(sess.sid, None)
+            async with sess.cond:
+                sess.closed = True
+                sess.cond.notify_all()
+            return None
+        if op in WAIT_KINDS:
+            return await self._long_poll(sess, op, kwargs)
+        if op in CALL_OPS:
+            if op == "post_aggregate":
+                # transport-boundary hygiene: a posting addressed outside
+                # the session's chain could never be consumed or reposted
+                # around (order_repost indexes the chain) — reject it at
+                # the RPC instead of letting it poison the monitor
+                group = kwargs.get("group", 0)
+                chain = sess.ctrl.groups.get(group)
+                if chain is None:
+                    raise wire.WireError(f"unknown group {group!r}")
+                if kwargs.get("to_node") not in chain:
+                    raise wire.WireError(
+                        f"to_node {kwargs.get('to_node')!r} is not in "
+                        f"group {group}'s chain")
+            if op in TIMED_OPS:
+                kwargs = dict(kwargs, now=self.now())
+            async with sess.cond:
+                res = sess.ctrl.call(op, **kwargs)
+                if op == "should_initiate" and res:
+                    sess.initiator_elections += 1
+                sess.cond.notify_all()
+            return res
+        if op == "peek_average":
+            return sess.ctrl.try_get_average()
+        if op == "get_stats":
+            stats = dataclasses.asdict(sess.ctrl.stats)
+            stats["aggregation_total"] = sess.ctrl.stats.aggregation_total
+            stats["key_exchange_total"] = sess.ctrl.stats.key_exchange_total
+            stats["monitor_reposts"] = sess.monitor_reposts
+            stats["initiator_elections"] = sess.initiator_elections
+            return stats
+        if op == "reset_round":
+            async with sess.cond:
+                sess.ctrl.reset_round()
+                sess.cond.notify_all()
+            return None
+        raise wire.WireError(f"unhandled op {op!r}")
+
+    # ------------------------------------------------------------------
+    # protocol plane
+    # ------------------------------------------------------------------
+    def _create_session(self, kwargs: dict) -> dict:
+        raw_groups = kwargs.get("groups")
+        if not isinstance(raw_groups, dict) or not raw_groups:
+            raise wire.WireError("create_session needs a non-empty groups map")
+        groups = {int(g): [int(x) for x in nodes]
+                  for g, nodes in raw_groups.items()}
+        for g, chain in groups.items():
+            if not chain:
+                # an empty chain can never post its group average, so
+                # the session could never publish globally — every
+                # learner would long-poll/elect forever
+                raise wire.WireError(f"group {g} has an empty chain")
+        timeout = kwargs.get("aggregation_timeout")
+        if timeout is None:
+            timeout = self.aggregation_timeout
+        sid = next(self._sids)
+        self._sessions[sid] = _Session(
+            sid, Controller(groups, aggregation_timeout=float(timeout)))
+        return {"session": sid, "aggregation_timeout": float(timeout)}
+
+    async def _long_poll(self, sess: _Session, kind: str, kwargs: dict):
+        """Park until the probe is satisfiable, then consume (counted),
+        or answer {"status": "timeout"} (not counted — sim parity)."""
+        timeout = kwargs.pop("timeout", None)
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + float(timeout)
+        async with sess.cond:
+            timed_out = False
+            while True:
+                if sess.closed:
+                    raise wire.WireError(f"session {sess.sid} deleted")
+                if sess.ctrl.probe(kind, **kwargs) is not None:
+                    res = sess.ctrl.consume(kind, **kwargs)
+                    # consuming get_aggregate resolves the poster's
+                    # pending check_aggregate — wake its waiter
+                    sess.cond.notify_all()
+                    return res
+                if timed_out:
+                    # the probe above was the post-deadline re-check: a
+                    # notify racing the timeout is not a spurious timeout
+                    return {"status": "timeout"}
+                timed_out = not await _cond_wait(sess.cond, deadline)
+
+    async def _monitor_loop(self) -> None:
+        """External progress monitor (§5.3) on the wall clock: scan every
+        session for postings stuck longer than ``progress_timeout`` and
+        order reposts around the dead target."""
+        while True:
+            await asyncio.sleep(self.monitor_interval)
+            now = self.now()
+            if self.engine is not None:
+                # expire abandoned engine sessions even when no new
+                # submissions arrive to trigger the on-submit prune
+                self._prune_engine_sessions()
+            for sess in list(self._sessions.values()):
+                # per-session guard: one tenant's bad state (e.g. a
+                # posting addressed outside its chain) must not kill
+                # the monitor task and silently disable §5.3 failover
+                # for every other tenant
+                try:
+                    async with sess.cond:
+                        for group in sess.ctrl.groups:
+                            stuck = sess.ctrl.stuck_posting(
+                                group, now, self.progress_timeout)
+                            if stuck is None:
+                                continue
+                            poster, failed = stuck
+                            sess.ctrl.order_repost(group, poster, failed)
+                            sess.monitor_reposts += 1
+                            sess.cond.notify_all()
+                except asyncio.CancelledError:
+                    raise
+                except Exception:  # noqa: BLE001
+                    self.monitor_errors += 1
+                    continue
+
+    # ------------------------------------------------------------------
+    # engine plane
+    # ------------------------------------------------------------------
+    def _require_engine(self):
+        if self.engine is None:
+            raise wire.WireError("broker started without an engine")
+        return self.engine
+
+    def _prune_engine_sessions(self) -> None:
+        """Drop completed-but-never-claimed sessions past the TTL."""
+        cutoff = asyncio.get_running_loop().time() - self.engine_session_ttl
+        for sid, done_at in list(self._engine_done.items()):
+            if done_at < cutoff:
+                self._engine_done.pop(sid, None)
+                self._engine_sessions.pop(sid, None)
+
+    def _submit_session(self, kwargs: dict) -> dict:
+        engine = self._require_engine()
+        self._prune_engine_sessions()
+        values = np.asarray(kwargs["values"], np.float32)
+        weights = kwargs.get("weights")
+        alive = kwargs.get("alive")
+        # validate at the RPC boundary what engine.submit doesn't (it
+        # only checks values.shape): a wrong-length alive/weights array
+        # would otherwise blow up inside a later step() and take the
+        # engine loop down for every tenant
+        for name, arr in (("alive", alive), ("weights", weights)):
+            if arr is not None and np.asarray(arr).shape != (engine.n,):
+                raise wire.WireError(
+                    f"{name} must have shape ({engine.n},), got "
+                    f"{np.asarray(arr).shape}")
+        rounds = int(kwargs.get("rounds", 1))
+        # the eventual wait_session response carries rounds × V f32
+        # results in ONE frame — refuse up front what could never be
+        # answered rather than discovering it at response-encode time
+        if rounds * engine.V * 4 > wire.MAX_FRAME // 2:
+            raise wire.WireError(
+                f"rounds={rounds} would produce a wait_session response "
+                f"beyond MAX_FRAME; split the submission")
+        sess = engine.submit(
+            values,
+            rounds=rounds,
+            provisioning_seed=int(kwargs.get("provisioning_seed", 0xC0FFEE)),
+            learner_master=int(kwargs.get("learner_master", 0x5EED)),
+            alive=None if alive is None else np.asarray(alive, np.float32),
+            weights=None if weights is None else np.asarray(weights,
+                                                            np.float32),
+            rotate0=int(kwargs.get("rotate0", 0)))
+        self._engine_sessions[sess.sid] = sess
+        self._engine_wake.set()
+        return {"sid": sess.sid}
+
+    async def _wait_session(self, kwargs: dict):
+        self._require_engine()
+        sid = int(kwargs["sid"])
+        sess = self._engine_sessions.get(sid)
+        if sess is None:
+            raise wire.WireError(f"unknown engine session {sid}")
+        timeout = kwargs.get("timeout")
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + float(timeout)
+        async with self._engine_cond:
+            # completion is signalled by the engine's on_complete hook
+            # (fires inside step(), before the post-step notify)
+            timed_out = False
+            while sid not in self._engine_done and not sess.done:
+                if timed_out:  # post-deadline re-check already happened
+                    return {"status": "timeout"}
+                timed_out = not await _cond_wait(self._engine_cond, deadline)
+        # NOT evicted here: if the response fails to frame/send, the
+        # tenant can re-issue wait_session (idempotent read); eviction
+        # happens via the engine_session_ttl prune after completion
+        return {"status": "done", "rounds": sess.rounds_done,
+                "results": [np.asarray(r) for r in sess.results]}
+
+    async def _engine_loop(self) -> None:
+        """Step the engine while work is queued. ``step()`` runs on the
+        loop thread — one compiled-program dispatch per step — with a
+        ``sleep(0)`` between steps so submissions/waiters interleave."""
+        engine = self.engine
+        while True:
+            await self._engine_wake.wait()
+            self._engine_wake.clear()
+            while engine.queue or engine.active:
+                try:
+                    engine.step()
+                except asyncio.CancelledError:
+                    raise
+                except Exception:  # noqa: BLE001 — keep the plane alive
+                    # a poisoned step must not silently kill the loop
+                    # for every tenant; back off so a persistently
+                    # failing step can't busy-spin
+                    self.engine_errors += 1
+                    await asyncio.sleep(self.monitor_interval)
+                async with self._engine_cond:
+                    self._engine_cond.notify_all()
+                await asyncio.sleep(0)

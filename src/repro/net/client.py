@@ -1,0 +1,266 @@
+"""Wire-plane learner runtime: the SAFE state machines over asyncio.
+
+Drives the *identical* generator coroutines from
+:mod:`repro.core.machines` — the ones the discrete-event kernel runs in
+virtual time — over a real TCP transport to :class:`~repro.net.broker.
+SafeBroker`, mapping each yield onto awaits:
+
+  ("compute", seconds)          -> optional scaled ``asyncio.sleep``
+  ("call", op, kwargs, nbytes)  -> one request/response RPC
+  ("wait", kind, kwargs, nbytes, timeout)
+                                -> long-poll RPC; the broker parks the
+                                   request until data or timeout
+
+Because the machines, the ``Controller`` and the round construction
+(:func:`~repro.core.machines.build_round_machines`) are shared with the
+sim, the published average here is bit-identical to the sim's for the
+same seeds/topology, and the ``MessageStats`` counters still satisfy
+§5's closed forms (asserted in ``tests/test_net.py``).
+
+Faults are injected at this layer via :mod:`repro.net.faults`
+interceptors — latency, request drops (with at-most-once retry: a
+dropped frame never reached the broker), and crash/churn schedules.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.costs import CostModel, EDGE
+from repro.core.machines import LearnerGen, build_round_machines
+from repro.net import wire
+from repro.net.faults import DropPacket, Interceptor, LearnerCrashed
+from repro.topology import RingTopology
+
+Addr = Tuple[str, int]
+
+
+class WireClient:
+    """One connection to the broker; one outstanding request at a time
+    (the learner state machines are strictly sequential)."""
+
+    def __init__(self, host: str, port: int, node: int = 0,
+                 interceptor: Optional[Interceptor] = None,
+                 retry_backoff: float = 0.02):
+        self.host = host
+        self.port = port
+        self.node = node
+        self.interceptor = interceptor
+        self.retry_backoff = retry_backoff
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self.requests = 0
+        self._reader: Optional[asyncio.StreamReader] = None
+        self._writer: Optional[asyncio.StreamWriter] = None
+
+    async def connect(self) -> "WireClient":
+        self._reader, self._writer = await asyncio.open_connection(
+            self.host, self.port)
+        return self
+
+    async def close(self) -> None:
+        if self._writer is not None:
+            self._writer.close()
+            try:
+                await self._writer.wait_closed()
+            except Exception:  # noqa: BLE001
+                pass
+            self._writer = None
+            self._reader = None
+
+    async def request(self, op: str, kwargs: dict) -> Any:
+        """One RPC. A DropPacket from the interceptor loses the frame
+        *before* transmission; we back off and retry (safe: the broker
+        never saw it). LearnerCrashed propagates to the runtime."""
+        body = wire.encode_request(op, kwargs)
+        framed = wire.encode_frame(body)
+        while True:
+            if self.interceptor is not None:
+                try:
+                    await self.interceptor.on_request(
+                        self.node, op, len(framed))
+                except DropPacket:
+                    await asyncio.sleep(self.retry_backoff)
+                    continue
+            self._writer.write(framed)
+            await self._writer.drain()
+            self.bytes_sent += len(framed)
+            self.requests += 1
+            resp = await wire.read_frame(self._reader)
+            if resp is None:
+                raise wire.WireError("broker closed the connection")
+            self.bytes_received += len(resp) + 4
+            if self.interceptor is not None:
+                await self.interceptor.on_response(
+                    self.node, op, len(resp) + 4)
+            return wire.decode_response(resp)
+
+
+async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
+                        *, aggregation_timeout: float,
+                        timeout_scale: float = 1.0,
+                        compute_scale: float = 0.0) -> Any:
+    """Run one state machine to completion over the wire.
+
+    ``timeout`` mapping for ``wait`` yields: ``"aggregation"`` becomes
+    the session's wall-clock aggregation timeout, numeric (virtual
+    seconds) scale by ``timeout_scale``, ``None`` waits forever.
+    ``compute_scale`` turns the machines' virtual compute costs into
+    wall sleeps (0 = infinitely fast learners; the default, since the
+    wire plane measures transport, not the cost model).
+    """
+    send_value = None
+    while True:
+        try:
+            item = gen.send(send_value)
+        except StopIteration as stop:
+            return stop.value
+        kind = item[0]
+        if kind == "compute":
+            if compute_scale > 0.0:
+                await asyncio.sleep(item[1] * compute_scale)
+            send_value = None
+        elif kind == "call":
+            _, op, kwargs, _nbytes = item
+            send_value = await client.request(op, dict(kwargs, session=session))
+        elif kind == "wait":
+            _, wkind, kwargs, _nbytes, timeout = item
+            if timeout == "aggregation":
+                wall: Optional[float] = aggregation_timeout
+            elif timeout is None:
+                wall = None
+            else:
+                wall = float(timeout) * timeout_scale
+            send_value = await client.request(
+                wkind, dict(kwargs, session=session, timeout=wall))
+        else:
+            raise ValueError(f"unknown yield {item!r}")
+
+
+@dataclasses.dataclass
+class NetResult:
+    """Wire-plane mirror of :class:`repro.core.protocol.SimResult` —
+    ``stats`` is the broker's MessageStats as a dict (plus totals)."""
+
+    average: Optional[np.ndarray]
+    weight_avg: Optional[float]
+    wall_time: float
+    stats: Dict[str, int]
+    bytes_sent: int
+    monitor_reposts: int
+    initiator_elections: int
+    crashed_nodes: tuple = ()
+
+
+async def run_safe_round_net(
+    values: np.ndarray,
+    addr: Addr,
+    *,
+    mode: str = "safe",
+    subgroups: int = 1,
+    failed_nodes: Iterable[int] = (),
+    initiator_fails: bool = False,
+    weights: Optional[np.ndarray] = None,
+    cost: CostModel = EDGE,
+    aggregation_timeout: Optional[float] = None,
+    symmetric_only: bool = False,
+    scale_bits: int = 16,
+    provisioning_seed: int = 0xC0FFEE,
+    learner_master: int = 0x5EED,
+    counter: int = 0,
+    interceptor: Optional[Interceptor] = None,
+    timeout_scale: float = 1.0,
+    compute_scale: float = 0.0,
+) -> NetResult:
+    """One full aggregation round over the wire — the transport twin of
+    :func:`repro.core.protocol.run_safe_round` (same signature spirit,
+    wall-clock timeouts). Builds the same topology, elects the same
+    initiators, constructs the same machines, then runs one asyncio
+    task + one TCP connection per live learner against the broker at
+    ``addr``.
+
+    ``failed_nodes`` are dead before the round (their clients never
+    start — discovered by the broker's monitor, §5.3). ``mode`` must be
+    'safe' or 'saf': INSEC needs a parsing, averaging controller, which
+    the wire broker deliberately is not (the paper's point).
+    """
+    if mode not in ("safe", "saf"):
+        raise ValueError(f"wire plane runs 'safe'/'saf', got {mode!r}")
+    values = np.asarray(values, np.float32)
+    n, _V = values.shape
+    topo = RingTopology(n, subgroups)
+    topo.validate_privacy()
+    groups = topo.group_chains(node_base=1)
+    initiators = {r + 1 for r in topo.elect_initiators()}
+    failed = set(failed_nodes)
+
+    machines = build_round_machines(
+        values, topo, groups, initiators, mode=mode, weights=weights,
+        cost=cost, symmetric_only=symmetric_only, scale_bits=scale_bits,
+        provisioning_seed=provisioning_seed, learner_master=learner_master,
+        counter=counter, subgroups=subgroups, failed=failed,
+        initiator_fails=initiator_fails)
+
+    admin = await WireClient(*addr).connect()
+    sid = None
+    try:
+        created = await admin.request("create_session", {
+            "groups": groups, "aggregation_timeout": aggregation_timeout})
+        sid = created["session"]
+        wall_agg = created["aggregation_timeout"]
+
+        crashed = []
+
+        async def one(node: int, gen: LearnerGen) -> Any:
+            client = WireClient(*addr, node=node, interceptor=interceptor)
+            await client.connect()
+            try:
+                return await drive_learner(
+                    gen, client, sid, aggregation_timeout=wall_agg,
+                    timeout_scale=timeout_scale, compute_scale=compute_scale)
+            except LearnerCrashed:
+                crashed.append(node)  # mid-round churn: learner just stops
+                return None
+            finally:
+                admin.bytes_sent += client.bytes_sent
+                await client.close()
+
+        t0 = time.perf_counter()
+        # return_exceptions: let every learner settle (each closes its
+        # own connection in its finally) instead of abandoning running
+        # tasks on the first error, then surface the first failure
+        settled = await asyncio.gather(
+            *(one(node, gen) for node, gen in machines.items()),
+            return_exceptions=True)
+        for r in settled:
+            if isinstance(r, BaseException):
+                raise r
+        wall = time.perf_counter() - t0
+
+        stats = await admin.request("get_stats", {"session": sid})
+        final = await admin.request("peek_average", {"session": sid})
+    finally:
+        # free the tenant on the broker even when a learner errored —
+        # a long-lived broker must not accumulate one Controller per
+        # round (best-effort: the broker may already be gone)
+        if sid is not None:
+            try:
+                await admin.request("delete_session", {"session": sid})
+            except Exception:  # noqa: BLE001
+                pass
+        await admin.close()
+
+    return NetResult(
+        average=None if final is None else final["average"],
+        weight_avg=None if final is None else final.get("weight_avg"),
+        wall_time=wall,
+        stats=stats,
+        bytes_sent=admin.bytes_sent,
+        monitor_reposts=stats["monitor_reposts"],
+        initiator_elections=stats["initiator_elections"],
+        crashed_nodes=tuple(crashed),
+    )

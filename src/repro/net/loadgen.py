@@ -1,0 +1,164 @@
+"""Load harness for the wire plane: S concurrent tenants, one broker.
+
+Two load shapes, matching the broker's two planes:
+
+  * :func:`run_engine_load` — tenants submit whole aggregation sessions
+    (``submit_session``/``wait_session``); the broker batches them
+    through one :class:`~repro.serve.agg_engine.AggregationEngine`
+    program per step. This is the ROADMAP's many-tenants story: wire
+    concurrency in front, one compiled device program behind.
+  * :func:`run_protocol_load` — tenants each run a *full* n-learner
+    SAFE round over TCP (n connections, 4n RPCs, real long-polls), i.e.
+    the paper's distributed system under concurrent sessions.
+
+Both report rounds/sec and p50/p99 per-round latency;
+``benchmarks/net_load.py`` wraps them in the standard bench harness.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.net.client import WireClient, run_safe_round_net
+
+Addr = Tuple[str, int]
+
+
+@dataclasses.dataclass
+class LoadReport:
+    plane: str
+    tenants: int
+    rounds: int          # total rounds completed across tenants
+    wall_s: float
+    rounds_per_s: float
+    p50_s: float
+    p99_s: float
+    latencies_s: List[float]
+
+    def row(self) -> dict:
+        return {
+            "plane": self.plane,
+            "tenants": self.tenants,
+            "rounds": self.rounds,
+            "wall_s": self.wall_s,
+            "rounds_per_s": self.rounds_per_s,
+            "p50_s": self.p50_s,
+            "p99_s": self.p99_s,
+        }
+
+
+def _report(plane: str, tenants: int, lats: List[float],
+            wall: float) -> LoadReport:
+    arr = np.asarray(lats, np.float64)
+    return LoadReport(
+        plane=plane, tenants=tenants, rounds=len(lats), wall_s=wall,
+        rounds_per_s=len(lats) / wall if wall > 0 else float("inf"),
+        p50_s=float(np.percentile(arr, 50)),
+        p99_s=float(np.percentile(arr, 99)),
+        latencies_s=lats)
+
+
+async def run_engine_load(addr: Addr, *, tenants: int = 8,
+                          rounds_per_tenant: int = 8, n: int = 8,
+                          V: int = 1024, seed: int = 0,
+                          warmup: bool = True,
+                          timeout: float = 300.0) -> LoadReport:
+    """Each tenant submits ``rounds_per_tenant`` single-round sessions
+    back-to-back (closed-loop), measuring submit→published latency."""
+    rng = np.random.RandomState(seed)
+    tenant_vals = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
+                   for _ in range(tenants)]
+
+    async def submit_and_wait(client, vals, t, r):
+        sub = await client.request("submit_session", {
+            "values": vals, "rounds": 1,
+            "provisioning_seed": 0xC0FFEE + t,
+            "learner_master": 0x5EED + 17 * t,
+            "rotate0": r})
+        res = await client.request("wait_session",
+                                   {"sid": sub["sid"], "timeout": timeout})
+        if res.get("status") != "done":
+            raise RuntimeError(f"tenant {t} round {r}: {res}")
+        return res
+
+    if warmup:  # first submit compiles the engine program — keep it
+        client = await WireClient(*addr).connect()
+        try:
+            await submit_and_wait(client, tenant_vals[0], 0, 0)
+        finally:
+            await client.close()
+
+    async def tenant(t: int) -> List[float]:
+        client = await WireClient(*addr, node=t).connect()
+        lats = []
+        try:
+            for r in range(rounds_per_tenant):
+                t0 = time.perf_counter()
+                res = await submit_and_wait(client, tenant_vals[t], t, r)
+                lats.append(time.perf_counter() - t0)
+                exp = tenant_vals[t].mean(0)
+                got = res["results"][0]
+                if np.abs(got - exp).max() > 1e-2:
+                    raise RuntimeError(f"tenant {t} got a wrong average")
+        finally:
+            await client.close()
+        return lats
+
+    t0 = time.perf_counter()
+    per_tenant = await asyncio.gather(*(tenant(t) for t in range(tenants)))
+    wall = time.perf_counter() - t0
+    lats = [x for lat in per_tenant for x in lat]
+    return _report("engine", tenants, lats, wall)
+
+
+async def run_protocol_load(addr: Addr, *, tenants: int = 4,
+                            rounds_per_tenant: int = 3, n: int = 8,
+                            V: int = 256, seed: int = 0,
+                            interceptor=None) -> LoadReport:
+    """Each tenant runs full n-learner SAFE rounds (its own broker
+    session per round) concurrently with every other tenant.
+
+    ``interceptor`` is either a shared Interceptor instance or a
+    callable ``tenant_index -> Interceptor`` — use the factory form for
+    reproducible per-tenant fault plans (tenants reuse node ids, so a
+    shared instance's per-node RNG streams interleave in scheduler
+    order; see repro.net.faults).
+    """
+    rng = np.random.RandomState(seed)
+    tenant_vals = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
+                   for _ in range(tenants)]
+
+    async def tenant(t: int) -> List[float]:
+        ic = interceptor(t) if callable(interceptor) else interceptor
+        lats = []
+        for r in range(rounds_per_tenant):
+            t0 = time.perf_counter()
+            res = await run_safe_round_net(
+                tenant_vals[t], addr,
+                provisioning_seed=0xC0FFEE + t,
+                learner_master=0x5EED + 17 * t,
+                counter=r * (V + 1),
+                interceptor=ic)
+            lats.append(time.perf_counter() - t0)
+            if res.crashed_nodes:
+                # churn plan fired: the published mean is over a subset
+                # whose membership depends on *when* each crash landed
+                # (before vs. after reposting) — value correctness under
+                # churn is pinned by tests/test_net.py, not the loadgen
+                continue
+            if res.average is None:
+                raise RuntimeError(f"tenant {t} round {r}: no average")
+            exp = tenant_vals[t].mean(0)
+            if np.abs(res.average - exp).max() > 1e-2:
+                raise RuntimeError(f"tenant {t} round {r}: wrong average")
+        return lats
+
+    t0 = time.perf_counter()
+    per_tenant = await asyncio.gather(*(tenant(t) for t in range(tenants)))
+    wall = time.perf_counter() - t0
+    lats = [x for lat in per_tenant for x in lat]
+    return _report("protocol", tenants, lats, wall)

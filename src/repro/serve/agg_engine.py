@@ -22,7 +22,7 @@ unbatched loop at S ∈ {1, 8, 32}.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +64,11 @@ class AggregationEngine:
         self.steps = 0
         self.rounds_completed = 0
         self._next_sid = 0
+        #: optional completion hook: called synchronously from step()
+        #: with each AggSession the moment it finishes its last round
+        #: (used by net/broker.py to resolve wire-side wait_session
+        #: long-polls without scanning slots).
+        self.on_complete: Optional[Callable[[AggSession], None]] = None
         self._program = self._build_program()
 
     # ---- compiled program ------------------------------------------------
@@ -164,6 +169,8 @@ class AggregationEngine:
             completed += 1
             if sess.done:
                 self.slot_sessions[i] = None
+                if self.on_complete is not None:
+                    self.on_complete(sess)
         self.steps += 1
         self.rounds_completed += completed
         return completed

@@ -72,6 +72,24 @@ class TestThreefry:
         with pytest.raises(OverflowError):
             rc.reserve(2**32)
 
+    def test_round_counter_overflow_guard(self):
+        """The guard must fire *before* any counter in [base, base+n)
+        wraps past 2**32 (a wrap would reuse one-time pads), must not
+        poison the allocator, and must allow exactly the full space."""
+        rc = RoundCounter()
+        base = rc.reserve(2**32 - 4)  # nearly drain the space
+        assert base == 0 and rc.remaining == 4
+        with pytest.raises(OverflowError):
+            rc.reserve(5)  # would wrap — refused pre-mutation
+        assert rc.remaining == 4  # refusal left no partial reservation
+        tail = rc.reserve(4)  # the exact remainder still fits
+        assert tail == 2**32 - 4 and rc.remaining == 0
+        with pytest.raises(OverflowError):
+            rc.reserve(1)
+        assert rc.reserve(0) == 2**32  # degenerate: no words, no wrap
+        with pytest.raises(ValueError):
+            rc.reserve(-1)
+
     def test_keystream_uniformity(self):
         """Coarse sanity: keystream bytes should look uniform (mean and
         bit balance), i.e. the pad actually masks."""

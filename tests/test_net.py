@@ -1,0 +1,389 @@
+"""Wire plane end-to-end: the SAFE state machines over a real asyncio
+transport. Acceptance (ISSUE 2): for the same seeds/topology the
+published average over the wire is bit-identical to the discrete-event
+sim, and MessageStats matches §5's closed forms for n ∈ {4, 8} with and
+without an injected failure. Plus: faults (latency/drop/churn),
+re-election, the engine plane, and the broker's counter hygiene.
+
+Every test runs under a hard SIGALRM deadline (autouse fixture) so a
+hung broker or lost long-poll aborts the test instead of stalling the
+whole tier-1 run.
+"""
+import asyncio
+import signal
+
+import numpy as np
+import pytest
+from helpers import run_multidevice
+
+from repro.core.protocol import run_safe_round
+from repro.net import (
+    Chain,
+    ChurnInterceptor,
+    DropInterceptor,
+    LatencyInterceptor,
+    SafeBroker,
+    run_safe_round_net,
+)
+
+#: per-test wall deadline (seconds). The slowest in-process paths below
+#: are the re-election tests (~1x aggregation_timeout + a second round);
+#: 90 s leaves an order of magnitude of headroom without letting a hang
+#: stall tier-1. Tests that spawn a jax subprocess (fresh import +
+#: 8-device compile) get the larger budget, aligned with
+#: helpers.run_multidevice's own timeout.
+NET_TEST_DEADLINE_S = 90
+SUBPROCESS_DEADLINE_S = 900
+_SUBPROCESS_TESTS = {"test_engine_plane_over_wire"}
+
+
+@pytest.fixture(autouse=True)
+def _hard_deadline(request):
+    """Per-test timeout: a hung broker/long-poll raises instead of
+    hanging pytest (no pytest-timeout in the container)."""
+    deadline = (SUBPROCESS_DEADLINE_S
+                if request.node.name in _SUBPROCESS_TESTS
+                else NET_TEST_DEADLINE_S)
+
+    def _expired(signum, frame):
+        raise TimeoutError(
+            f"net test exceeded {deadline}s hard deadline")
+
+    old = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(deadline)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def _vals(n, V, seed=0):
+    return np.random.RandomState(seed).uniform(-1, 1, (n, V)).astype(np.float32)
+
+
+def _wire_round(values, *, broker_kw=None, **round_kw):
+    """Start a fresh broker, run one round over TCP, tear down."""
+
+    async def go():
+        broker = SafeBroker(**dict(
+            dict(progress_timeout=0.4, monitor_interval=0.1,
+                 aggregation_timeout=30.0), **(broker_kw or {})))
+        addr = await broker.start()
+        try:
+            return await run_safe_round_net(values, addr, **round_kw)
+        finally:
+            await broker.stop()
+
+    return asyncio.run(go())
+
+
+class TestSimEquivalence:
+    """Same seeds, same topology ⇒ same bits, same message counts."""
+
+    @pytest.mark.parametrize("n", [4, 8])
+    def test_bit_identical_no_failure(self, n):
+        vals = _vals(n, 16, seed=n)
+        sim = run_safe_round(vals)
+        net = _wire_round(vals)
+        assert np.array_equal(sim.average, net.average)  # bit-identical
+        assert net.stats["aggregation_total"] == 4 * n
+        assert sim.stats.aggregation_total == 4 * n
+        # per-op counters agree too
+        for op in ("post_aggregate", "check_aggregate", "get_aggregate",
+                   "post_average", "get_average", "should_initiate"):
+            assert net.stats[op] == getattr(sim.stats, op), op
+
+    @pytest.mark.parametrize("n", [4, 8])
+    def test_bit_identical_with_failure(self, n):
+        """One dead learner: §5.3 closed form 4(n−f) + 2f, f=1."""
+        vals = _vals(n, 16, seed=10 + n)
+        sim = run_safe_round(vals, failed_nodes=[3])
+        net = _wire_round(vals, failed_nodes=[3])
+        assert np.array_equal(sim.average, net.average)
+        expected = 4 * (n - 1) + 2
+        assert sim.stats.aggregation_total == expected
+        assert net.stats["aggregation_total"] == expected
+        assert net.monitor_reposts == 1
+        mask = np.ones(n, bool)
+        mask[2] = False
+        np.testing.assert_allclose(net.average, vals[mask].mean(0), atol=1e-3)
+
+    def test_adjacent_failures(self):
+        vals = _vals(8, 8, seed=3)
+        sim = run_safe_round(vals, failed_nodes=[4, 5])
+        net = _wire_round(vals, failed_nodes=[4, 5])
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 6 + 2 * 2
+        assert net.monitor_reposts == 2
+
+    def test_subgroups_closed_form(self):
+        """§5.5: 4n + g messages, average of group averages."""
+        vals = _vals(8, 8, seed=4)
+        sim = run_safe_round(vals, subgroups=2)
+        net = _wire_round(vals, subgroups=2)
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 8 + 2
+        assert sim.stats.aggregation_total == 4 * 8 + 2
+
+    def test_weighted_bit_identical(self):
+        vals = _vals(6, 8, seed=5)
+        w = np.array([1000, 200, 3000, 500, 800, 1500], np.float32)
+        sim = run_safe_round(vals, weights=w)
+        net = _wire_round(vals, weights=w)
+        assert np.array_equal(sim.average, net.average)
+        assert float(sim.weight_avg) == float(net.weight_avg)
+
+    def test_saf_mode(self):
+        vals = _vals(5, 8, seed=6)
+        sim = run_safe_round(vals, mode="saf")
+        net = _wire_round(vals, mode="saf")
+        assert np.array_equal(sim.average, net.average)
+
+
+class TestFaults:
+    def test_latency_and_drops_do_not_change_the_answer(self):
+        """Transport faults perturb timing, never semantics: the codec +
+        retry path must keep the bits and the §5.2 count intact (drops
+        happen before the broker sees the frame, so no double count)."""
+        vals = _vals(8, 16, seed=7)
+        sim = run_safe_round(vals)
+        drop = DropInterceptor(p=0.1, seed=3)
+        net = _wire_round(vals, interceptor=Chain(
+            LatencyInterceptor(mean=0.002, seed=7), drop))
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 8
+        assert drop.dropped > 0  # the fault plan actually fired
+
+    def test_churn_crash_lost_aggregate_reelects(self):
+        """A learner crashes *between* consuming the running aggregate
+        and reposting it (the worst §5.4 case: the aggregate is lost).
+        The round times out, a survivor is re-elected, and the retry
+        publishes the survivors' average — bit-identical to a sim where
+        that node was dead all along (ring addition commutes)."""
+        vals = _vals(8, 16, seed=8)
+        churn = ChurnInterceptor({5: 1})  # dies before its post_aggregate
+        net = _wire_round(
+            vals, interceptor=churn,
+            broker_kw=dict(aggregation_timeout=2.0))
+        sim = run_safe_round(vals, failed_nodes=[5])
+        assert net.crashed_nodes == (5,)
+        assert net.initiator_elections >= 1
+        assert np.array_equal(sim.average, net.average)
+
+    def test_initiator_crash_reelects(self):
+        """Fig. 5: initiator posts once then crashes; §5.4 re-election
+        over the wire converges to the survivors' average."""
+        vals = _vals(8, 8, seed=9)
+        sim = run_safe_round(vals, initiator_fails=True,
+                             aggregation_timeout=2.0)
+        net = _wire_round(vals, initiator_fails=True,
+                          broker_kw=dict(aggregation_timeout=2.0))
+        assert net.initiator_elections >= 1
+        assert np.array_equal(sim.average, net.average)
+        np.testing.assert_allclose(net.average, vals[1:].mean(0), atol=1e-3)
+
+
+class TestBrokerHygiene:
+    def test_unknown_session_is_an_error_not_a_crash(self):
+        from repro.net import WireClient, wire as _w
+
+        async def go():
+            broker = SafeBroker()
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()
+                with pytest.raises(_w.WireError, match="unknown session"):
+                    await c.request("get_stats", {"session": 999})
+                # unserviceable sessions refused at the boundary
+                with pytest.raises(_w.WireError, match="empty chain"):
+                    await c.request("create_session",
+                                    {"groups": {0: [1, 2, 3], 1: []}})
+                # connection still serves after the errors
+                made = await c.request("create_session",
+                                       {"groups": {0: [1, 2, 3]}})
+                assert made["session"] == 0
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_completed_rounds_free_their_sessions(self):
+        """run_safe_round_net deletes its broker session: a long-lived
+        broker must not accumulate one Controller per finished round."""
+        from repro.net import WireClient, wire as _w
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1)
+            addr = await broker.start()
+            try:
+                await run_safe_round_net(_vals(4, 4), addr)
+                assert broker._sessions == {}  # torn down server-side
+                c = await WireClient(*addr).connect()
+                with pytest.raises(_w.WireError, match="unknown session"):
+                    await c.request("get_stats", {"session": 0})
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_stop_unparks_forever_long_polls(self):
+        """broker.stop() must cancel connection handlers parked on a
+        timeout=None long-poll instead of leaking (or hanging
+        wait_closed on newer Pythons)."""
+        from repro.net import WireClient
+
+        async def go():
+            broker = SafeBroker()
+            addr = await broker.start()
+            c = await WireClient(*addr).connect()
+            await c.request("create_session", {"groups": {0: [1, 2, 3]}})
+            poll = asyncio.ensure_future(c.request(
+                "get_average", {"session": 0, "timeout": None}))
+            await asyncio.sleep(0.2)  # let it park on the broker
+            assert not poll.done()
+            await broker.stop()  # must return promptly
+            with pytest.raises(Exception):
+                await asyncio.wait_for(poll, 5.0)  # conn dropped cleanly
+            await c.close()
+
+        asyncio.run(go())
+
+    def test_stray_to_node_rejected_and_monitor_survives(self):
+        """A posting addressed outside the chain is refused at the RPC
+        boundary (it could never be consumed or reposted around), so it
+        can't poison the §5.3 monitor for other tenants."""
+        from repro.net import WireClient, wire as _w
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.2, monitor_interval=0.05)
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()
+                await c.request("create_session", {"groups": {0: [1, 2, 3]}})
+                with pytest.raises(_w.WireError, match="not in"):
+                    await c.request("post_aggregate", {
+                        "session": 0, "from_node": 1, "to_node": 99,
+                        "group": 0,
+                        "payload": np.zeros(4, np.uint32)})
+                with pytest.raises(_w.WireError, match="unknown group"):
+                    await c.request("post_aggregate", {
+                        "session": 0, "from_node": 1, "to_node": 2,
+                        "group": 7,
+                        "payload": np.zeros(4, np.uint32)})
+                await c.close()
+                # monitor still alive and clean; a full round still works
+                res = await run_safe_round_net(_vals(4, 4), addr)
+                assert res.stats["aggregation_total"] == 4 * 4
+                assert broker.monitor_errors == 0
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_wire_round_rejects_insec(self):
+        with pytest.raises(ValueError):
+            _wire_round(_vals(4, 4), mode="insec")
+
+    def test_two_sessions_are_isolated(self):
+        """Two tenants on one broker: independent controllers, stats,
+        and averages (the multi-session story at the wire level)."""
+        vals_a, vals_b = _vals(4, 8, seed=11), _vals(4, 8, seed=12)
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1)
+            addr = await broker.start()
+            try:
+                a, b = await asyncio.gather(
+                    run_safe_round_net(vals_a, addr),
+                    run_safe_round_net(vals_b, addr, learner_master=0x9999))
+            finally:
+                await broker.stop()
+            return a, b
+
+        a, b = asyncio.run(go())
+        sim_a = run_safe_round(vals_a)
+        sim_b = run_safe_round(vals_b, learner_master=0x9999)
+        assert np.array_equal(a.average, sim_a.average)
+        assert np.array_equal(b.average, sim_b.average)
+        assert a.stats["aggregation_total"] == 4 * 4
+        assert b.stats["aggregation_total"] == 4 * 4
+
+
+ENGINE_WIRE_CODE = """
+import asyncio, numpy as np, jax
+from repro.core.types import ChainConfig
+from repro.serve import AggregationEngine
+from repro.net import SafeBroker, WireClient
+
+mesh = jax.make_mesh((8,), ("data",))
+n, V, S = 8, 32, 4
+cfg = ChainConfig(num_learners=n, mode="safe")
+engine = AggregationEngine(mesh, cfg, slots=S, payload_words=V)
+rng = np.random.RandomState(0)
+
+async def go():
+    broker = SafeBroker(engine=engine)
+    addr = await broker.start()
+    try:
+        clients = [await WireClient(*addr, node=t).connect()
+                   for t in range(S)]
+        tenant_vals = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
+                       for _ in range(S)]
+        sids = []
+        for t, c in enumerate(clients):
+            sub = await c.request("submit_session", {
+                "values": tenant_vals[t], "rounds": 2,
+                "provisioning_seed": 0xC0FFEE + t,
+                "learner_master": 0x5EED + t})
+            sids.append(sub["sid"])
+        for t, c in enumerate(clients):
+            res = await c.request("wait_session",
+                                  {"sid": sids[t], "timeout": 300.0})
+            assert res["status"] == "done", res
+            assert res["rounds"] == 2
+            exp = tenant_vals[t].mean(0)
+            for r in res["results"]:
+                assert np.abs(r - exp).max() < 1e-3
+        # wait_session is an idempotent read until the TTL prune: a
+        # client whose first response was lost can re-fetch its results
+        again = await clients[0].request("wait_session",
+                                         {"sid": sids[0], "timeout": 1.0})
+        assert again["status"] == "done" and again["rounds"] == 2
+        # abandoned submissions (never waited on) are pruned after the
+        # TTL instead of pinning their AggSession forever
+        broker.engine_session_ttl = 0.0
+        sub = await clients[0].request("submit_session", {
+            "values": tenant_vals[0], "rounds": 1})
+        abandoned = sub["sid"]
+        # never waited on: the engine completes it, then the monitor's
+        # TTL prune (ttl=0) must drop it without any further submits
+        for _ in range(200):
+            if (abandoned not in broker._engine_sessions
+                    and abandoned not in broker._engine_done):
+                break
+            await asyncio.sleep(0.1)
+        assert abandoned not in broker._engine_sessions, "abandoned session not pruned"
+        broker.engine_session_ttl = 300.0  # new sessions must survive
+        sub2 = await clients[0].request("submit_session", {
+            "values": tenant_vals[0], "rounds": 1})
+        res = await clients[0].request("wait_session",
+                                       {"sid": sub2["sid"], "timeout": 300.0})
+        assert res["status"] == "done"
+        for c in clients:
+            await c.close()
+    finally:
+        await broker.stop()
+
+asyncio.run(go())
+print("ENGINE_WIRE_OK")
+"""
+
+
+def test_engine_plane_over_wire():
+    """S wire tenants batch through one AggregationEngine behind the
+    broker (submit_session/wait_session), results correct per tenant."""
+    out = run_multidevice(ENGINE_WIRE_CODE, devices=8)
+    assert "ENGINE_WIRE_OK" in out

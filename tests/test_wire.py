@@ -1,0 +1,207 @@
+"""Wire codec: encode/decode identity for every controller op payload
+(property-based via hypothesis or its deterministic fallback stub),
+including empty groups, empty payloads and max-size vectors, plus frame
+hardening (truncation, bad version, unknown opcode/tag, oversize)."""
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net import wire
+
+
+def _eq(a, b) -> bool:
+    """Deep equality where numpy arrays compare exactly (dtype + bits)."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+                and a.dtype == b.dtype and a.shape == b.shape
+                and np.array_equal(a, b))
+    if isinstance(a, dict) and isinstance(b, dict):
+        return a.keys() == b.keys() and all(_eq(a[k], b[k]) for k in a)
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and all(_eq(x, y) for x, y in zip(a, b))
+    return a == b
+
+
+def _roundtrip_request(op, kwargs):
+    out = wire.decode_request(wire.encode_request(op, kwargs))
+    assert out[0] == op
+    assert _eq(out[1], kwargs), (op, kwargs, out[1])
+
+
+def _roundtrip_response(payload):
+    got = wire.decode_response(wire.encode_response(payload))
+    assert _eq(got, payload), (payload, got)
+
+
+def _u32(xs) -> np.ndarray:
+    return np.asarray(xs, dtype=np.uint32)
+
+
+class TestOpRoundtrips:
+    """Every controller op's request payload survives the wire."""
+
+    @given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 7),
+           st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=64))
+    @settings(max_examples=30, deadline=None)
+    def test_post_aggregate(self, frm, to, group, payload):
+        _roundtrip_request("post_aggregate", dict(
+            session=0, from_node=frm, to_node=to, group=group,
+            payload=_u32(payload)))
+
+    @given(st.integers(1, 64), st.integers(0, 7),
+           st.floats(0.0, 100.0, allow_nan=False))
+    @settings(max_examples=20, deadline=None)
+    def test_wait_ops(self, node, group, timeout):
+        for op in ("check_aggregate", "get_aggregate"):
+            _roundtrip_request(op, dict(session=1, node=node, group=group,
+                                        timeout=timeout))
+            _roundtrip_request(op, dict(session=1, node=node, group=group,
+                                        timeout=None))
+        _roundtrip_request("get_average", dict(session=1, timeout=timeout))
+
+    @given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                    min_size=0, max_size=64),
+           st.floats(0.0, 1e6, allow_nan=False))
+    @settings(max_examples=30, deadline=None)
+    def test_post_average(self, avg, wavg):
+        arr = np.asarray(avg, np.float32)
+        _roundtrip_request("post_average", dict(
+            session=2, node=1, group=0, average=arr, weight_avg=wavg))
+        _roundtrip_request("post_average", dict(
+            session=2, node=1, group=0, average=arr.astype(np.float64),
+            weight_avg=None))
+
+    @given(st.integers(1, 64), st.integers(0, 7))
+    @settings(max_examples=15, deadline=None)
+    def test_should_initiate(self, node, group):
+        _roundtrip_request("should_initiate",
+                           dict(session=0, node=node, group=group))
+
+    @given(st.integers(1, 64), st.lists(st.integers(0, 255), max_size=64))
+    @settings(max_examples=15, deadline=None)
+    def test_key_exchange(self, node, blob):
+        _roundtrip_request("register_key",
+                           dict(session=0, node=node, key_blob=bytes(blob)))
+        _roundtrip_request("get_key", dict(session=0, node=node))
+
+    @given(st.integers(1, 6), st.integers(0, 5))
+    @settings(max_examples=15, deadline=None)
+    def test_create_session_groups(self, ngroups, empty_groups):
+        """Int-keyed groups maps, including sessions with empty groups."""
+        groups = {g: list(range(g * 10 + 1, g * 10 + 4))
+                  for g in range(ngroups)}
+        for g in range(ngroups, ngroups + empty_groups):
+            groups[g] = []  # empty group: encodable, broker-side validated
+        _roundtrip_request("create_session",
+                           dict(groups=groups, aggregation_timeout=12.5))
+
+    def test_engine_plane_ops(self):
+        vals = np.arange(32, dtype=np.float32).reshape(8, 4)
+        _roundtrip_request("submit_session", dict(
+            values=vals, rounds=3, provisioning_seed=0xC0FFEE,
+            learner_master=0x5EED, rotate0=1, weights=None, alive=None))
+        _roundtrip_request("wait_session", dict(sid=7, timeout=30.0))
+        _roundtrip_response({"status": "done", "rounds": 2,
+                             "results": [vals.mean(0), vals.mean(0) * 2]})
+
+    def test_empty_and_max_size_vectors(self):
+        """Boundary payloads: zero-length and MAX-frame-scale vectors."""
+        _roundtrip_request("post_aggregate", dict(
+            session=0, from_node=1, to_node=2, group=0,
+            payload=np.empty((0,), np.uint32)))
+        big = np.arange(1 << 20, dtype=np.uint32)  # 4 MiB of ring words
+        _roundtrip_request("post_aggregate", dict(
+            session=0, from_node=1, to_node=2, group=0, payload=big))
+        _roundtrip_response({"aggregate": big, "from_node": 3, "posted": 8,
+                             "time": 0.25})
+
+    def test_response_statuses(self):
+        for payload in (None, True, False, {"status": "timeout"},
+                        {"status": "repost", "to_node": 4},
+                        {"status": "self", "posted": 1},
+                        {"average": np.zeros(3, np.float32),
+                         "weight_avg": None, "time": 1.0}):
+            _roundtrip_response(payload)
+
+
+class TestValueTree:
+    @given(st.lists(st.integers(-2**63, 2**63 - 1), max_size=16))
+    @settings(max_examples=25, deadline=None)
+    def test_int_lists(self, xs):
+        assert wire.decode_value(wire.encode_value(xs)) == xs
+
+    @given(st.floats(-1e300, 1e300, allow_nan=False))
+    @settings(max_examples=25, deadline=None)
+    def test_floats_exact(self, x):
+        out = wire.decode_value(wire.encode_value(x))
+        assert struct.pack(">d", out) == struct.pack(">d", x)  # bitwise
+
+    def test_nested(self):
+        v = {"a": [1, {"b": None, 3: True}], 2: b"\x00\xff",
+             "arr": np.ones((2, 3), np.int64), "s": "π ≠ 3"}
+        assert _eq(wire.decode_value(wire.encode_value(v)), v)
+
+    def test_preserves_array_dtype(self):
+        for dt in (np.uint32, np.float32, np.float64, np.int32, np.int64,
+                   np.uint8):
+            arr = np.zeros(4, dt)
+            out = wire.decode_value(wire.encode_value(arr))
+            assert out.dtype == np.dtype(dt).newbyteorder("<")
+
+    def test_decoded_arrays_writable(self):
+        out = wire.decode_value(
+            wire.encode_value(np.arange(8, dtype=np.uint32)))
+        out += 1  # state machines do arithmetic on received payloads
+
+
+class TestHardening:
+    def test_truncated_frame(self):
+        body = wire.encode_request("get_average", {"session": 0})
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode_request(body[:-3])
+
+    def test_trailing_bytes(self):
+        body = wire.encode_request("get_average", {"session": 0})
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode_request(body + b"\x00")
+
+    def test_bad_version(self):
+        body = wire.encode_request("get_average", {"session": 0})
+        bad = bytes([wire.WIRE_VERSION + 1]) + body[1:]
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode_request(bad)
+
+    def test_unknown_opcode(self):
+        bad = struct.pack(">BB", wire.WIRE_VERSION, 255) + wire.encode_value({})
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode_request(bad)
+
+    def test_huge_shape_claim_rejected(self):
+        """Array dims whose product would overflow/absurdly exceed the
+        frame must fail as WireDecodeError, not a numpy ValueError."""
+        bad = (bytes([9, 0, 2])  # tag=array, dtype=u4, ndim=2
+               + struct.pack(">I", 2**32 - 1) * 2)  # 2 huge dims, no data
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode_value(bad)
+
+    def test_unknown_tag(self):
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode_value(b"\xfa")
+
+    def test_unknown_op_name(self):
+        with pytest.raises(wire.WireError):
+            wire.encode_request("drop_tables", {})
+
+    def test_oversize_frame_rejected(self):
+        with pytest.raises(wire.WireError):
+            wire.encode_frame(b"\x00" * (wire.MAX_FRAME + 1))
+
+    def test_error_response_raises(self):
+        with pytest.raises(wire.WireError, match="boom"):
+            wire.decode_response(wire.encode_error("boom"))
+
+    def test_unencodable_type(self):
+        with pytest.raises(wire.WireError):
+            wire.encode_value(object())
