@@ -26,7 +26,7 @@ def main() -> None:
     from benchmarks import (common, constrained, device_aggregation, failover,
                             feature_scalability, hierarchical, kernel_bench,
                             messages, multi_session, net_load,
-                            node_scalability, subgrouping)
+                            node_scalability, paper_scale, subgrouping)
     print("name,us_per_call,derived")
     t0 = time.time()
     mods = [
@@ -41,6 +41,8 @@ def main() -> None:
         ("kernel_bench", "kernel_bench", kernel_bench.main),
         ("multi_session", "multi_session engine (ARCHITECTURE.md)", multi_session.main),
         ("net_load", "net_load wire-plane broker (repro/net)", net_load.main),
+        ("paper_scale", "paper_scale n=36 wire runs vs BON (§6.1)",
+         paper_scale.main),
     ]
     failures = 0
     matched = 0

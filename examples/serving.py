@@ -1,8 +1,10 @@
 """Batched serving: continuous prefill+decode over fixed batch slots.
 
 Run: PYTHONPATH=src python examples/serving.py
-(add XLA_FLAGS=--xla_force_host_platform_device_count=8 to see it sharded)
+(add XLA_FLAGS=--xla_force_host_platform_device_count=8 to see it sharded;
+SAFE_SMOKE=1 shrinks the run for CI)
 """
+import os
 import time
 
 import jax
@@ -21,7 +23,7 @@ def main():
     eng = ServeEngine(model, params, batch_slots=4, max_seq=256,
                       temperature=0.8, seed=0)
     rng = np.random.RandomState(0)
-    n_req, max_new = 10, 24
+    n_req, max_new = (3, 8) if os.environ.get("SAFE_SMOKE") else (10, 24)
     done = []
     t0 = time.time()
     for i in range(n_req):

@@ -24,7 +24,10 @@ import numpy as np
 #: (``("wait", …)`` yields) with a non-counting ``try_*`` probe and a
 #: counting consumer. Both the discrete-event kernel
 #: (``core/protocol.py``) and the wire broker (``net/broker.py``)
-#: dispatch through this table, so the two planes cannot drift.
+#: dispatch through this table, so the two planes cannot drift — and
+#: docs/PROTOCOL.md §7 documents it, with ``tests/test_docs.py``
+#: asserting the book's table matches these sets (and ``MessageStats``'
+#: fields) exactly, so the spec cannot drift either.
 CALL_OPS = frozenset({
     "post_aggregate", "post_average", "should_initiate",
     "register_key", "get_key",

@@ -14,7 +14,13 @@ hosts without an accelerator stack; the engine plane takes an already-
 constructed ``serve.AggregationEngine`` by injection.
 """
 from repro.net.broker import SafeBroker
-from repro.net.client import NetResult, WireClient, drive_learner, run_safe_round_net
+from repro.net.client import (
+    NetResult,
+    WireClient,
+    drive_learner,
+    run_federated_round_net,
+    run_safe_round_net,
+)
 from repro.net.faults import (
     Chain,
     ChurnInterceptor,
@@ -25,7 +31,12 @@ from repro.net.faults import (
     LearnerCrashed,
     deep_edge_faults,
 )
-from repro.net.loadgen import LoadReport, run_engine_load, run_protocol_load
+from repro.net.loadgen import (
+    LoadReport,
+    run_engine_load,
+    run_paper_scale,
+    run_protocol_load,
+)
 
 __all__ = [
     "SafeBroker",
@@ -33,6 +44,7 @@ __all__ = [
     "NetResult",
     "drive_learner",
     "run_safe_round_net",
+    "run_federated_round_net",
     "Interceptor",
     "Chain",
     "LatencyInterceptor",
@@ -44,4 +56,5 @@ __all__ = [
     "LoadReport",
     "run_engine_load",
     "run_protocol_load",
+    "run_paper_scale",
 ]

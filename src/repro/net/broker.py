@@ -18,7 +18,15 @@ is that broker as a real server: an asyncio TCP listener speaking
     reposts on wall-clock timeouts;
   * optionally, an *engine plane*: ``submit_session``/``wait_session``
     ops that feed a :class:`repro.serve.agg_engine.AggregationEngine`,
-    so many wire tenants batch through one compiled device program.
+    so many wire tenants batch through one compiled device program;
+  * the *chunked transfer plane* (docs/PROTOCOL.md §6): arrays larger
+    than one frame stream as ``post_chunk``/``get_chunk`` frames with
+    per-chunk sequence numbers. The broker is store-and-forward at
+    chunk granularity — a downstream learner can pull chunk k of a
+    transfer whose chunk k+1 is still uploading, so chain hops overlap
+    (the §8 pipelined schedule, at the wire). Chunk frames never touch
+    ``MessageStats`` (one completed transfer = one logical message);
+    they are tallied separately in ``get_stats``.
 
 One TCP connection serves one client; requests on a connection are
 processed in order (a parked long-poll blocks only its own connection),
@@ -38,11 +46,43 @@ from repro.core.controller import CALL_OPS, TIMED_OPS, WAIT_KINDS, Controller
 from repro.net import wire
 
 
+class _Transfer:
+    """One in-flight chunked upload (docs/PROTOCOL.md §6).
+
+    Keyed on the session by the *destination* of the eventual logical op
+    — ``("agg", group, to_node)`` for post_aggregate, ``("avg", group)``
+    for post_average — so the receiving side can stream chunks out of a
+    partially-arrived transfer (the §8-style pipelining: the broker
+    relays chunk k downstream while chunk k+1 is still uploading).
+    """
+
+    __slots__ = ("owner", "xfer", "op", "kwargs", "asm", "chunk_words",
+                 "posted", "last_chunk_at")
+
+    def __init__(self, owner: int, xfer: int, op: str, kwargs: dict,
+                 total: int, chunk_words: int, now: float):
+        # transfer identity is (owner, xfer): xfer counters are only
+        # unique per uploader process, so two orgs' streams must never
+        # be merged on a bare xfer match
+        self.owner = owner
+        self.xfer = xfer
+        self.op = op
+        self.kwargs = kwargs      # logical-op kwargs minus the payload
+        self.asm = wire.ChunkAssembler(total)
+        self.chunk_words = chunk_words
+        self.posted = False       # logical op executed (transfer complete)
+        self.last_chunk_at = now  # staleness clock for slot ownership
+
+    def same_transfer(self, owner: int, xfer: int) -> bool:
+        return self.owner == owner and self.xfer == xfer
+
+
 class _Session:
     """One tenant: a Controller plus the broker-side wait machinery."""
 
     __slots__ = ("sid", "ctrl", "cond", "closed", "monitor_reposts",
-                 "initiator_elections")
+                 "initiator_elections", "transfers", "chunk_frames_in",
+                 "chunk_frames_out", "transfers_completed")
 
     def __init__(self, sid: int, ctrl: Controller):
         self.sid = sid
@@ -51,6 +91,17 @@ class _Session:
         self.closed = False
         self.monitor_reposts = 0
         self.initiator_elections = 0
+        # chunked-transfer plane (never touches MessageStats)
+        self.transfers: Dict[tuple, _Transfer] = {}
+        self.chunk_frames_in = 0
+        self.chunk_frames_out = 0
+        self.transfers_completed = 0
+
+    def drop_group_transfers(self, group: int) -> None:
+        """Forget every (partial or posted) transfer of one group — the
+        round restarted (§5.4), so stale chunks must not be served."""
+        for key in [k for k in self.transfers if k[1] == group]:
+            del self.transfers[key]
 
 
 async def _cond_wait(cond: asyncio.Condition, deadline: Optional[float]) -> bool:
@@ -69,6 +120,26 @@ async def _cond_wait(cond: asyncio.Condition, deadline: Optional[float]) -> bool
     except asyncio.TimeoutError:
         return False
     return True
+
+
+async def _park(cond: asyncio.Condition, probe, deadline: Optional[float]):
+    """The broker's long-poll skeleton, shared by every parked wait
+    (protocol waits, chunk reads, engine-session waits): hold ``cond``,
+    re-run ``probe`` on each wakeup, return its first non-None result —
+    or None when the deadline lapses. The loop's load-bearing subtlety
+    lives here once: after a lapsed deadline the probe runs one final
+    time, so a notify racing the timeout is never a spurious timeout.
+    ``probe`` executes under the condition lock; it may raise (session
+    deleted) and may perform consuming side effects on success."""
+    async with cond:
+        timed_out = False
+        while True:
+            res = probe()
+            if res is not None:
+                return res
+            if timed_out:
+                return None
+            timed_out = not await _cond_wait(cond, deadline)
 
 
 class SafeBroker:
@@ -235,6 +306,10 @@ class SafeBroker:
             return await self._wait_session(kwargs)
 
         sess = self._session(kwargs)
+        if op == "post_chunk":
+            return await self._post_chunk(sess, kwargs)
+        if op == "get_chunk":
+            return await self._get_chunk(sess, kwargs)
         if op == "delete_session":
             # tear the tenant down: unpark any stragglers, stop the
             # monitor from scanning it, free the Controller state
@@ -265,6 +340,9 @@ class SafeBroker:
                 res = sess.ctrl.call(op, **kwargs)
                 if op == "should_initiate" and res:
                     sess.initiator_elections += 1
+                    # round restarted (§5.4): stale chunk buffers of the
+                    # aborted round must not be served to the new chain
+                    sess.drop_group_transfers(kwargs.get("group", 0))
                 sess.cond.notify_all()
             return res
         if op == "peek_average":
@@ -275,10 +353,14 @@ class SafeBroker:
             stats["key_exchange_total"] = sess.ctrl.stats.key_exchange_total
             stats["monitor_reposts"] = sess.monitor_reposts
             stats["initiator_elections"] = sess.initiator_elections
+            stats["chunk_frames_in"] = sess.chunk_frames_in
+            stats["chunk_frames_out"] = sess.chunk_frames_out
+            stats["transfers_completed"] = sess.transfers_completed
             return stats
         if op == "reset_round":
             async with sess.cond:
                 sess.ctrl.reset_round()
+                sess.transfers.clear()
                 sess.cond.notify_all()
             return None
         raise wire.WireError(f"unhandled op {op!r}")
@@ -308,26 +390,229 @@ class SafeBroker:
 
     async def _long_poll(self, sess: _Session, kind: str, kwargs: dict):
         """Park until the probe is satisfiable, then consume (counted),
-        or answer {"status": "timeout"} (not counted — sim parity)."""
+        or answer {"status": "timeout"} (not counted — sim parity).
+
+        ``elide_payload=True`` (set by chunk-aware clients that already
+        streamed the array via ``get_chunk``) strips the bulk array from
+        the response — the logical consume still happens and still
+        counts, but the bytes travel only once. ``expect_time`` guards
+        that consume: the probe only counts as satisfiable when the
+        stored entry's timestamp matches, so a client can never consume
+        (and discard, elided) a posting other than the one it streamed
+        — a §5.4 reset racing the final consume parks it instead, and
+        the ordinary timeout path takes over."""
         timeout = kwargs.pop("timeout", None)
+        elide = bool(kwargs.pop("elide_payload", False))
+        expect_time = kwargs.pop("expect_time", None)
         loop = asyncio.get_running_loop()
         deadline = None if timeout is None else loop.time() + float(timeout)
+
+        def probe():
+            if sess.closed:
+                raise wire.WireError(f"session {sess.sid} deleted")
+            probed = sess.ctrl.probe(kind, **kwargs)
+            if probed is not None and expect_time is not None \
+                    and float(probed.get("time", 0.0)) != float(expect_time):
+                probed = None  # not the entry the client streamed
+            if probed is None:
+                return None
+            res = sess.ctrl.consume(kind, **kwargs)
+            if kind == "get_aggregate":
+                # the posting is consumed — its chunk buffer (if it
+                # streamed in) has nothing left to serve
+                sess.transfers.pop(
+                    ("agg", kwargs.get("group", 0), kwargs.get("node")),
+                    None)
+                if elide:
+                    res = dict(res, aggregate=None, chunked=True)
+            elif kind == "get_average" and elide:
+                res = dict(res, average=None, chunked=True)
+            # consuming get_aggregate resolves the poster's pending
+            # check_aggregate — wake its waiter
+            sess.cond.notify_all()
+            return res
+
+        res = await _park(sess.cond, probe, deadline)
+        return res if res is not None else {"status": "timeout"}
+
+    # ------------------------------------------------------------------
+    # chunked transfer plane (docs/PROTOCOL.md §6)
+    # ------------------------------------------------------------------
+    async def _post_chunk(self, sess: _Session, kwargs: dict):
+        """One chunk of a chunked upload. On the final chunk the logical
+        op (post_aggregate / post_average) executes with the assembled
+        array — that is the only point MessageStats moves."""
+        op = kwargs.get("op")
+        if op not in ("post_aggregate", "post_average"):
+            raise wire.WireError(f"post_chunk cannot carry {op!r}")
+        group = int(kwargs.get("group", 0))
+        chain = sess.ctrl.groups.get(group)
+        if chain is None:
+            raise wire.WireError(f"unknown group {group!r}")
+        xfer = int(kwargs["xfer"])
+        seq = int(kwargs["seq"])
+        total = int(kwargs["total"])
+        chunk_words = int(kwargs["chunk_words"])
+        payload = kwargs.get("payload")
+        if not isinstance(payload, np.ndarray) or payload.ndim != 1:
+            raise wire.WireError("post_chunk payload must be a flat array")
+        if op == "post_aggregate":
+            to_node = kwargs.get("to_node")
+            if to_node not in chain:
+                # same transport-boundary hygiene as the unchunked RPC
+                raise wire.WireError(
+                    f"to_node {to_node!r} is not in group {group}'s chain")
+            key = ("agg", group, to_node)
+            owner = int(kwargs.get("from_node"))
+            base = {"from_node": owner, "to_node": to_node, "group": group}
+        else:
+            key = ("avg", group)
+            owner = int(kwargs.get("node"))
+            base = {"node": owner, "group": group,
+                    "weight_avg": kwargs.get("weight_avg")}
+        now = self.now()
         async with sess.cond:
-            timed_out = False
-            while True:
-                if sess.closed:
-                    raise wire.WireError(f"session {sess.sid} deleted")
-                if sess.ctrl.probe(kind, **kwargs) is not None:
-                    res = sess.ctrl.consume(kind, **kwargs)
-                    # consuming get_aggregate resolves the poster's
-                    # pending check_aggregate — wake its waiter
-                    sess.cond.notify_all()
-                    return res
-                if timed_out:
-                    # the probe above was the post-deadline re-check: a
-                    # notify racing the timeout is not a spurious timeout
-                    return {"status": "timeout"}
-                timed_out = not await _cond_wait(sess.cond, deadline)
+            if sess.closed:
+                # parity with the parked paths: a frame racing
+                # delete_session must not execute on the torn-down
+                # Controller and ack success
+                raise wire.WireError(f"session {sess.sid} deleted")
+            sess.chunk_frames_in += 1
+            tr = sess.transfers.get(key)
+            if tr is not None and tr.same_transfer(owner, xfer) \
+                    and tr.posted:
+                # at-least-once repeat of a completed transfer (e.g. a
+                # final chunk re-sent after a lost ack): idempotent ack,
+                # never a fresh buffer — PROTOCOL.md §6 repeat rule
+                return {"seq": seq, "received": tr.asm.total,
+                        "total": tr.asm.total, "complete": True}
+            if (tr is not None and not tr.same_transfer(owner, xfer)
+                    and not tr.posted
+                    and now - tr.last_chunk_at < self.progress_timeout):
+                # the slot is owned by a DIFFERENT transfer that is
+                # still actively receiving chunks: discard this frame
+                # instead of replacing the buffer (last-writer-wins
+                # would let two interleaved uploads clobber each other
+                # forever). The losing uploader sees `superseded` and
+                # falls back to the protocol's own reset/timeout path.
+                return {"seq": seq, "received": 0, "total": total,
+                        "complete": False, "superseded": True}
+            if tr is None or not tr.same_transfer(owner, xfer) or tr.posted:
+                # a new transfer identity replaces a posted or gone-
+                # stale buffer for this slot (repost retry, next round)
+                tr = _Transfer(owner, xfer, op, base, total, chunk_words,
+                               now)
+                sess.transfers[key] = tr
+            if tr.asm.total != total or tr.chunk_words != chunk_words:
+                raise wire.WireError(
+                    "chunk total/chunk_words mismatch within transfer "
+                    f"{xfer}")
+            tr.last_chunk_at = now
+            done = tr.asm.add(seq, payload)
+            if done and not tr.posted:
+                tr.posted = True
+                sess.transfers_completed += 1
+                call_kw = dict(tr.kwargs, now=self.now())
+                field = "payload" if op == "post_aggregate" else "average"
+                call_kw[field] = tr.asm.assemble()
+                sess.ctrl.call(op, **call_kw)
+                # the posted buffer stays (for post_average too, even
+                # though averages are served from controller state): it
+                # is the idempotency record that lets a repeated final
+                # chunk be re-acked instead of re-executing the op
+            sess.cond.notify_all()
+        return {"seq": seq, "received": len(tr.asm.chunks), "total": total,
+                "complete": tr.posted}
+
+    async def _get_chunk(self, sess: _Session, kwargs: dict):
+        """Long-poll for one chunk of an inbound array.
+
+        ``kind=get_aggregate`` serves from the live transfer buffer the
+        moment chunk ``seq`` has arrived (store-and-forward pipelining —
+        the upload need not be complete), falling back to slicing a
+        completed unchunked posting. ``kind=get_average`` slices the
+        published global average. Never counted in MessageStats; the
+        client issues the logical consume (with ``elide_payload``) after
+        the last chunk."""
+        kind = kwargs.get("kind")
+        if kind not in ("get_aggregate", "get_average"):
+            raise wire.WireError(f"get_chunk cannot serve {kind!r}")
+        group = int(kwargs.get("group", 0))
+        node = kwargs.get("node")
+        seq = int(kwargs["seq"])
+        words = int(kwargs.get("words", wire.DEFAULT_CHUNK_WORDS))
+        if words < 1:
+            raise wire.WireError(f"words must be >= 1, got {words}")
+        timeout = kwargs.get("timeout")
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + float(timeout)
+
+        def slice_of(arr: np.ndarray, extra: dict) -> dict:
+            arr = np.asarray(arr).ravel()
+            total = wire.num_chunks(arr.size, words)
+            if seq >= total:
+                raise wire.WireError(f"chunk seq {seq} >= total {total}")
+            return dict(extra, seq=seq, total=total, last=seq == total - 1,
+                        payload=wire.chunk_slice(arr, seq, words))
+
+        # Every response carries the transfer identity (`xfer`): the
+        # uploader's id for buffered streams, the posting/publication
+        # timestamp for slices of stored arrays. A reader seeing the
+        # identity change mid-stream knows the underlying array was
+        # replaced (repost after §5.3, re-election after §5.4) and must
+        # restart assembly — mixing chunks of two transfers would hand
+        # the state machine a corrupt ciphertext.
+        def probe():
+            if kind == "get_aggregate":
+                tr = sess.transfers.get(("agg", group, node))
+                if tr is not None and seq in tr.asm.chunks:
+                    if tr.chunk_words != words:
+                        raise wire.WireError(
+                            f"transfer chunk size {tr.chunk_words} != "
+                            f"requested {words}")
+                    out = {"seq": seq, "total": tr.asm.total,
+                           "last": seq == tr.asm.total - 1,
+                           "from_node": tr.kwargs.get("from_node"),
+                           # full identity (owner, xfer): bare xfer
+                           # counters collide across uploader processes
+                           "xfer": ("u", tr.owner, tr.xfer),
+                           "payload": tr.asm.chunks[seq]}
+                    if tr.posted:
+                        # the consume-guard timestamp (`expect_time`)
+                        # for the logical read that follows — on EVERY
+                        # post-completion chunk, because out-of-order
+                        # refetches mean the client's final received
+                        # chunk need not be seq total-1
+                        peek = sess.ctrl.probe("get_aggregate", node=node,
+                                               group=group)
+                        if peek is not None:
+                            out["time"] = float(peek["time"])
+                    return out
+                peek = sess.ctrl.probe("get_aggregate", node=node,
+                                       group=group)
+                if peek is not None:
+                    return slice_of(peek["aggregate"],
+                                    {"from_node": peek["from_node"],
+                                     "time": float(peek["time"]),
+                                     "xfer": ("t", float(peek["time"]),
+                                              peek["from_node"])})
+                return None
+            peek = sess.ctrl.try_get_average()
+            if peek is None:
+                return None
+            t = float(peek.get("time", 0.0))
+            return slice_of(peek["average"], {"time": t, "xfer": ("avg", t)})
+
+        def guarded():
+            if sess.closed:
+                raise wire.WireError(f"session {sess.sid} deleted")
+            res = probe()
+            if res is not None:
+                sess.chunk_frames_out += 1
+            return res
+
+        res = await _park(sess.cond, guarded, deadline)
+        return res if res is not None else {"status": "timeout"}
 
     async def _monitor_loop(self) -> None:
         """External progress monitor (§5.3) on the wall clock: scan every
@@ -354,6 +639,10 @@ class SafeBroker:
                                 continue
                             poster, failed = stuck
                             sess.ctrl.order_repost(group, poster, failed)
+                            # the dead target's chunk buffer dies with
+                            # its posting — the repost streams afresh
+                            sess.transfers.pop(("agg", group, failed),
+                                               None)
                             sess.monitor_reposts += 1
                             sess.cond.notify_all()
                 except asyncio.CancelledError:
@@ -423,14 +712,14 @@ class SafeBroker:
         timeout = kwargs.get("timeout")
         loop = asyncio.get_running_loop()
         deadline = None if timeout is None else loop.time() + float(timeout)
-        async with self._engine_cond:
-            # completion is signalled by the engine's on_complete hook
-            # (fires inside step(), before the post-step notify)
-            timed_out = False
-            while sid not in self._engine_done and not sess.done:
-                if timed_out:  # post-deadline re-check already happened
-                    return {"status": "timeout"}
-                timed_out = not await _cond_wait(self._engine_cond, deadline)
+        # completion is signalled by the engine's on_complete hook
+        # (fires inside step(), before the post-step notify)
+        done = await _park(
+            self._engine_cond,
+            lambda: (sid in self._engine_done or sess.done) or None,
+            deadline)
+        if done is None:
+            return {"status": "timeout"}
         # NOT evicted here: if the response fails to frame/send, the
         # tenant can re-issue wait_session (idempotent read); eviction
         # happens via the engine_session_ttl prune after completion

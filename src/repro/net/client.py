@@ -17,16 +17,34 @@ sim, the published average here is bit-identical to the sim's for the
 same seeds/topology, and the ``MessageStats`` counters still satisfy
 §5's closed forms (asserted in ``tests/test_net.py``).
 
+Payloads larger than ``chunk_words`` stream over the chunked transfer
+plane (docs/PROTOCOL.md §6) transparently: the runtime splits uploads
+into ``post_chunk`` frames and pulls downloads chunk-by-chunk via
+``get_chunk`` — with one request kept in flight ahead of the chunk
+being processed, and the broker relaying chunks downstream before the
+upload completes, so chain hops overlap the way the §8 pipelined
+schedule overlaps segments. The state machines never see chunks: the
+logical consume still happens (with ``elide_payload`` so the bulk bytes
+travel exactly once) and the reassembled array is injected into its
+response, keeping bits and §5 message counts identical to the
+unchunked path.
+
 Faults are injected at this layer via :mod:`repro.net.faults`
 interceptors — latency, request drops (with at-most-once retry: a
 dropped frame never reached the broker), and crash/churn schedules.
+
+:func:`run_federated_round_net` is the training entry point: each
+learner runs a real local FedAvg step (an injected callable — this
+module stays JAX-free; :func:`repro.train.federated.make_wire_federated`
+builds the callables) and ships its model delta through the broker.
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
+import itertools
 import time
-from typing import Any, Dict, Iterable, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -38,10 +56,19 @@ from repro.topology import RingTopology
 
 Addr = Tuple[str, int]
 
+#: auto-chunk threshold: payloads above this many elements stream even
+#: when the caller didn't ask for chunking (4·8M = 32 MiB of uint32 —
+#: half of MAX_FRAME, so headers/retries never graze the frame cap).
+AUTO_CHUNK_WORDS = 8 << 20
+
+_xfer_ids = itertools.count(1)
+
 
 class WireClient:
     """One connection to the broker; one outstanding request at a time
-    (the learner state machines are strictly sequential)."""
+    (the learner state machines are strictly sequential). The chunk
+    loops below briefly keep a second request in flight — that is safe
+    on the same connection because the broker answers frames in order."""
 
     def __init__(self, host: str, port: int, node: int = 0,
                  interceptor: Optional[Interceptor] = None,
@@ -54,6 +81,7 @@ class WireClient:
         self.bytes_sent = 0
         self.bytes_received = 0
         self.requests = 0
+        self.chunk_frames = 0
         self._reader: Optional[asyncio.StreamReader] = None
         self._writer: Optional[asyncio.StreamWriter] = None
 
@@ -72,10 +100,10 @@ class WireClient:
             self._writer = None
             self._reader = None
 
-    async def request(self, op: str, kwargs: dict) -> Any:
-        """One RPC. A DropPacket from the interceptor loses the frame
-        *before* transmission; we back off and retry (safe: the broker
-        never saw it). LearnerCrashed propagates to the runtime."""
+    # -- low-level halves (chunk pipelining needs send/recv split) --------
+    async def _send(self, op: str, kwargs: dict) -> None:
+        """Fire one request frame, interceptor-gated (drops retry here —
+        the frame never left, so resending is at-most-once)."""
         body = wire.encode_request(op, kwargs)
         framed = wire.encode_frame(body)
         while True:
@@ -90,20 +118,138 @@ class WireClient:
             await self._writer.drain()
             self.bytes_sent += len(framed)
             self.requests += 1
-            resp = await wire.read_frame(self._reader)
-            if resp is None:
-                raise wire.WireError("broker closed the connection")
-            self.bytes_received += len(resp) + 4
-            if self.interceptor is not None:
-                await self.interceptor.on_response(
-                    self.node, op, len(resp) + 4)
-            return wire.decode_response(resp)
+            return
+
+    async def _recv(self, op: str) -> Any:
+        resp = await wire.read_frame(self._reader)
+        if resp is None:
+            raise wire.WireError("broker closed the connection")
+        self.bytes_received += len(resp) + 4
+        if self.interceptor is not None:
+            await self.interceptor.on_response(self.node, op, len(resp) + 4)
+        return wire.decode_response(resp)
+
+    async def request(self, op: str, kwargs: dict) -> Any:
+        """One RPC. A DropPacket from the interceptor loses the frame
+        *before* transmission; we back off and retry (safe: the broker
+        never saw it). LearnerCrashed propagates to the runtime."""
+        await self._send(op, kwargs)
+        return await self._recv(op)
+
+    # -- chunked transfer plane (docs/PROTOCOL.md §6) ---------------------
+    async def post_chunked(self, op: str, kwargs: dict, payload_field: str,
+                           session: int, chunk_words: int) -> None:
+        """Upload one logical post as a chunk stream. Keeps one frame in
+        flight ahead of the previous response, so the broker can relay
+        chunk k downstream while chunk k+1 is still on this socket.
+
+        An upload the broker supersedes or drops mid-stream (the round
+        reset under us, or another active transfer owns the slot) is
+        swallowed, not raised: the state machine's own
+        ``check_aggregate`` / timeout path observes that the post never
+        landed and recovers through the §5.3/§5.4 machinery — exactly
+        as it would for an unchunked post lost to a reset."""
+        arr = np.ascontiguousarray(kwargs[payload_field]).ravel()
+        total = wire.num_chunks(arr.size, chunk_words)
+        meta = {k: v for k, v in kwargs.items() if k != payload_field}
+        xfer = next(_xfer_ids)
+
+        def frame(seq: int) -> dict:
+            return dict(meta, session=session, op=op, xfer=xfer, seq=seq,
+                        total=total, chunk_words=chunk_words,
+                        payload=wire.chunk_slice(arr, seq, chunk_words))
+
+        await self._send("post_chunk", frame(0))
+        for seq in range(1, total):
+            await self._send("post_chunk", frame(seq))
+            self.chunk_frames += 1
+            res = await self._recv("post_chunk")
+            if res.get("superseded"):
+                # drain the frame already in flight, then stop wasting
+                # bytes — this upload lost its slot
+                self.chunk_frames += 1
+                await self._recv("post_chunk")
+                return
+        self.chunk_frames += 1
+        await self._recv("post_chunk")
+
+    async def get_chunked(self, kind: str, kwargs: dict, session: int,
+                          chunk_words: int,
+                          deadline: Optional[float]) -> Any:
+        """Pull one logical array as a chunk stream, then issue the
+        logical consume (``elide_payload=True``) and inject the
+        reassembled array into its response. Returns the consume
+        response, or ``{"status": "timeout"}`` when the deadline lapses
+        mid-stream (matching the plain long-poll contract)."""
+        loop = asyncio.get_running_loop()
+
+        def remaining() -> Optional[float]:
+            return None if deadline is None else deadline - loop.time()
+
+        def chunk_req(seq: int) -> dict:
+            return dict(kwargs, session=session, kind=kind, seq=seq,
+                        words=chunk_words, timeout=remaining())
+
+        asm: Optional[wire.ChunkAssembler] = None
+        xid: Any = None
+        tid: Any = None  # consume-guard timestamp of the current identity
+        seq = 0
+        outstanding = False  # a get_chunk frame in flight beyond `seq`
+        while True:
+            rem = remaining()
+            if rem is not None and rem <= 0:
+                if outstanding:
+                    await self._recv("get_chunk")  # drain, then give up
+                return {"status": "timeout"}
+            if not outstanding:
+                await self._send("get_chunk", chunk_req(seq))
+            res = await self._recv("get_chunk")
+            outstanding = False
+            self.chunk_frames += 1
+            if res.get("status") == "timeout":
+                return res
+            if (asm is None or res.get("xfer") != xid
+                    or int(res["total"]) != asm.total):
+                # first chunk — or the transfer identity changed under
+                # us (the array was reposted / re-elected away):
+                # restart assembly rather than mix two transfers
+                asm = wire.ChunkAssembler(int(res["total"]))
+                xid = res.get("xfer")
+                tid = None
+                seq = 0  # restart the ascending request cursor too
+            if res.get("time") is not None:
+                tid = res["time"]
+            done = asm.add(int(res["seq"]), res["payload"])
+            if not done:
+                # prefetch the lowest missing chunk (requests go out in
+                # ascending order, so advancing a cursor past what we
+                # hold finds it in O(1) amortized): its request rides
+                # ahead of this chunk's bookkeeping (and of the
+                # broker-side wait)
+                while seq in asm.chunks:
+                    seq += 1
+                await self._send("get_chunk", chunk_req(seq))
+                outstanding = True
+                continue
+            # the logical consume, guarded by the streamed entry's
+            # timestamp: the broker refuses to consume (and elide) any
+            # OTHER posting — a reset racing us parks into the normal
+            # timeout path instead of corrupting the round
+            final = await self.request(kind, dict(
+                kwargs, session=session, elide_payload=True,
+                expect_time=tid, timeout=remaining()))
+            if final.get("status") == "timeout":
+                return final
+            field = "aggregate" if kind == "get_aggregate" else "average"
+            return dict(final, **{field: asm.assemble()})
 
 
 async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
                         *, aggregation_timeout: float,
                         timeout_scale: float = 1.0,
-                        compute_scale: float = 0.0) -> Any:
+                        compute_scale: float = 0.0,
+                        chunk_words: Optional[int] = None,
+                        payload_words: Optional[int] = None) -> Any:
     """Run one state machine to completion over the wire.
 
     ``timeout`` mapping for ``wait`` yields: ``"aggregation"`` becomes
@@ -112,7 +258,22 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
     ``compute_scale`` turns the machines' virtual compute costs into
     wall sleeps (0 = infinitely fast learners; the default, since the
     wire plane measures transport, not the cost model).
+
+    With ``chunk_words`` set and ``payload_words`` (the round's vector
+    length, weighted word included) exceeding it, array traffic takes
+    the chunked plane; the machines are driven unchanged either way.
     """
+    chunked = (chunk_words is not None and payload_words is not None
+               and payload_words > chunk_words)
+    loop = asyncio.get_running_loop()
+
+    def wall_timeout(timeout) -> Optional[float]:
+        if timeout == "aggregation":
+            return aggregation_timeout
+        if timeout is None:
+            return None
+        return float(timeout) * timeout_scale
+
     send_value = None
     while True:
         try:
@@ -126,17 +287,27 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
             send_value = None
         elif kind == "call":
             _, op, kwargs, _nbytes = item
-            send_value = await client.request(op, dict(kwargs, session=session))
+            payload_field = {"post_aggregate": "payload",
+                             "post_average": "average"}.get(op)
+            arr = kwargs.get(payload_field) if payload_field else None
+            if (chunked and isinstance(arr, np.ndarray)
+                    and arr.size > chunk_words):
+                await client.post_chunked(op, kwargs, payload_field,
+                                          session, chunk_words)
+                send_value = None
+            else:
+                send_value = await client.request(
+                    op, dict(kwargs, session=session))
         elif kind == "wait":
             _, wkind, kwargs, _nbytes, timeout = item
-            if timeout == "aggregation":
-                wall: Optional[float] = aggregation_timeout
-            elif timeout is None:
-                wall = None
+            wall = wall_timeout(timeout)
+            if chunked and wkind in ("get_aggregate", "get_average"):
+                deadline = None if wall is None else loop.time() + wall
+                send_value = await client.get_chunked(
+                    wkind, kwargs, session, chunk_words, deadline)
             else:
-                wall = float(timeout) * timeout_scale
-            send_value = await client.request(
-                wkind, dict(kwargs, session=session, timeout=wall))
+                send_value = await client.request(
+                    wkind, dict(kwargs, session=session, timeout=wall))
         else:
             raise ValueError(f"unknown yield {item!r}")
 
@@ -144,7 +315,8 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
 @dataclasses.dataclass
 class NetResult:
     """Wire-plane mirror of :class:`repro.core.protocol.SimResult` —
-    ``stats`` is the broker's MessageStats as a dict (plus totals)."""
+    ``stats`` is the broker's MessageStats as a dict (plus totals and
+    the chunk-plane frame counters)."""
 
     average: Optional[np.ndarray]
     weight_avg: Optional[float]
@@ -175,6 +347,7 @@ async def run_safe_round_net(
     interceptor: Optional[Interceptor] = None,
     timeout_scale: float = 1.0,
     compute_scale: float = 0.0,
+    chunk_words: Optional[int] = None,
 ) -> NetResult:
     """One full aggregation round over the wire — the transport twin of
     :func:`repro.core.protocol.run_safe_round` (same signature spirit,
@@ -187,11 +360,19 @@ async def run_safe_round_net(
     start — discovered by the broker's monitor, §5.3). ``mode`` must be
     'safe' or 'saf': INSEC needs a parsing, averaging controller, which
     the wire broker deliberately is not (the paper's point).
+
+    ``chunk_words`` enables the chunked transfer plane for payloads
+    longer than that many elements; by default it switches on
+    automatically once the payload could not safely fit one frame
+    (AUTO_CHUNK_WORDS).
     """
     if mode not in ("safe", "saf"):
         raise ValueError(f"wire plane runs 'safe'/'saf', got {mode!r}")
     values = np.asarray(values, np.float32)
-    n, _V = values.shape
+    n, V = values.shape
+    payload_words = V + 1 if weights is not None else V
+    if chunk_words is None and payload_words > AUTO_CHUNK_WORDS:
+        chunk_words = wire.DEFAULT_CHUNK_WORDS
     topo = RingTopology(n, subgroups)
     topo.validate_privacy()
     groups = topo.group_chains(node_base=1)
@@ -221,7 +402,8 @@ async def run_safe_round_net(
             try:
                 return await drive_learner(
                     gen, client, sid, aggregation_timeout=wall_agg,
-                    timeout_scale=timeout_scale, compute_scale=compute_scale)
+                    timeout_scale=timeout_scale, compute_scale=compute_scale,
+                    chunk_words=chunk_words, payload_words=payload_words)
             except LearnerCrashed:
                 crashed.append(node)  # mid-round churn: learner just stops
                 return None
@@ -264,3 +446,63 @@ async def run_safe_round_net(
         initiator_elections=stats["initiator_elections"],
         crashed_nodes=tuple(crashed),
     )
+
+
+async def run_federated_round_net(
+    state: Any,
+    local_fns: Mapping[int, Callable[[Any], np.ndarray]],
+    apply_fn: Callable[[Any, np.ndarray], Any],
+    addr: Addr,
+    *,
+    weights: Optional[np.ndarray] = None,
+    counter: int = 0,
+    failed_nodes: Iterable[int] = (),
+    chunk_words: Optional[int] = None,
+    **round_kw,
+) -> Tuple[Any, NetResult]:
+    """One FedAvg round over the wire plane (the paper's actual use
+    case: learners chained, traffic encrypted, controller a broker).
+
+    Each live learner runs its *real* local update — ``local_fns[node]``
+    maps the shared model state to that node's f32[P] model delta (built
+    by :func:`repro.train.federated.make_wire_federated`; injected as a
+    callable so this module never imports JAX) — then the deltas travel
+    the SAFE chain through the broker at ``addr``, chunk-streamed when
+    longer than ``chunk_words``. The published (weighted) mean delta is
+    merged via ``apply_fn`` and the new state returned.
+
+    Local updates run in the default executor so a co-hosted broker (or
+    other tenants on this loop) keeps serving while learners compute.
+    Callers advance ``counter`` by at least P (+1 when weighted) words
+    per round — the pad no-reuse invariant.
+
+    ``failed_nodes`` never compute and never connect: the §5.3/5.4
+    failover machinery publishes the survivors' mean, exactly as in the
+    paper's dropped-org experiment.
+    """
+    failed = set(failed_nodes)
+    nodes = sorted(local_fns)
+    if nodes != list(range(1, len(nodes) + 1)):
+        raise ValueError(f"local_fns must be keyed 1..n, got {nodes}")
+    if not set(nodes) - failed:
+        raise ValueError("no live learners: every node is in failed_nodes")
+    loop = asyncio.get_running_loop()
+    deltas: Dict[int, np.ndarray] = {}
+    for node in nodes:
+        if node in failed:
+            continue
+        out = await loop.run_in_executor(None, local_fns[node], state)
+        deltas[node] = np.asarray(out, np.float32).ravel()
+    sizes = {d.size for d in deltas.values()}
+    if len(sizes) != 1:
+        raise ValueError(f"learners produced mixed delta sizes {sizes}")
+    values = np.zeros((len(nodes), sizes.pop()), np.float32)
+    for node, d in deltas.items():
+        values[node - 1] = d
+
+    res = await run_safe_round_net(
+        values, addr, weights=weights, counter=counter,
+        failed_nodes=failed, chunk_words=chunk_words, **round_kw)
+    if res.average is None:
+        return state, res
+    return apply_fn(state, res.average), res

@@ -14,6 +14,10 @@ Hook contract (all coroutines, called by the client):
     leaves the host; the client backs off and retries — safe because
     the broker never saw it), or raise :class:`LearnerCrashed` (the
     learner runtime stops driving this node's state machine mid-round).
+    Chunked transfers (docs/PROTOCOL.md §6) pass through the same hook
+    one frame at a time (``op`` is ``post_chunk``/``get_chunk``), so a
+    drop loses a single chunk (retried) and a churn schedule can kill a
+    learner mid-upload — both exercised in tests/test_net.py.
   ``on_response(node, op, nbytes)`` after a response frame is read.
     May sleep. Drops are deliberately *not* supported here: the broker
     has already executed the (possibly consuming) op, so retrying would

@@ -1,6 +1,6 @@
 """Load harness for the wire plane: S concurrent tenants, one broker.
 
-Two load shapes, matching the broker's two planes:
+Three load shapes, matching the broker's planes:
 
   * :func:`run_engine_load` — tenants submit whole aggregation sessions
     (``submit_session``/``wait_session``); the broker batches them
@@ -10,19 +10,26 @@ Two load shapes, matching the broker's two planes:
   * :func:`run_protocol_load` — tenants each run a *full* n-learner
     SAFE round over TCP (n connections, 4n RPCs, real long-polls), i.e.
     the paper's distributed system under concurrent sessions.
+  * :func:`run_paper_scale` — ONE round at the paper's headline scale
+    (n=36, §6.1: where SAFE beats Bonawitz-style masking by 70x/56x
+    with/without failover), with the §5 closed-form message counts
+    asserted inside the harness. ``benchmarks/paper_scale.py`` pairs it
+    with the ``core/bon_protocol.py`` baseline at the same n
+    (EXPERIMENTS.md §Paper-scale).
 
-Both report rounds/sec and p50/p99 per-round latency;
-``benchmarks/net_load.py`` wraps them in the standard bench harness.
+All report into the standard bench harness (``benchmarks/net_load.py``,
+``benchmarks/paper_scale.py``).
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
 import time
-from typing import List, Optional, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.net.broker import SafeBroker
 from repro.net.client import WireClient, run_safe_round_net
 
 Addr = Tuple[str, int]
@@ -162,3 +169,78 @@ async def run_protocol_load(addr: Addr, *, tenants: int = 4,
     wall = time.perf_counter() - t0
     lats = [x for lat in per_tenant for x in lat]
     return _report("protocol", tenants, lats, wall)
+
+
+async def run_paper_scale(
+    *,
+    n: int = 36,
+    V: int = 256,
+    failures: Iterable[int] = (),
+    seed: int = 0,
+    chunk_words: Optional[int] = None,
+    weights: Optional[np.ndarray] = None,
+    progress_timeout: float = 0.3,
+    monitor_interval: float = 0.1,
+    aggregation_timeout: float = 60.0,
+) -> dict:
+    """One SAFE round over real TCP at paper scale, closed forms checked.
+
+    Starts a fresh broker, runs ``run_safe_round_net`` with n learners
+    (``failures`` dead before the round — the paper's §6.1 failover
+    experiment takes out nodes 4–6 after key exchange), and asserts:
+
+      * MessageStats == §5 closed form 4(n−f) + 2f (4n when f=0);
+      * one §5.3 monitor repost per dead node;
+      * the published average equals the survivors' clear-text mean.
+
+    Returns a flat row for the bench harness (wall seconds, messages,
+    bytes, chunk-plane frame counts). ``chunk_words`` prices the
+    chunk-streaming path at the same scale.
+    """
+    rng = np.random.RandomState(seed)
+    vals = rng.uniform(-1, 1, (n, V)).astype(np.float32)
+    failed = sorted(set(failures))
+    broker = SafeBroker(progress_timeout=progress_timeout,
+                        monitor_interval=monitor_interval,
+                        aggregation_timeout=aggregation_timeout)
+    addr = await broker.start()
+    try:
+        res = await run_safe_round_net(
+            vals, addr, failed_nodes=failed, weights=weights,
+            chunk_words=chunk_words)
+    finally:
+        await broker.stop()
+
+    f = len(failed)
+    expected = 4 * (n - f) + 2 * f
+    got = res.stats["aggregation_total"]
+    if got != expected:
+        raise AssertionError(
+            f"n={n} f={f}: {got} aggregation messages, §5 closed form "
+            f"says {expected}")
+    if res.monitor_reposts != f:
+        raise AssertionError(
+            f"{res.monitor_reposts} monitor reposts for {f} dead nodes")
+    mask = np.ones(n, bool)
+    for node in failed:
+        mask[node - 1] = False
+    if weights is None:
+        exp_avg = vals[mask].mean(0)
+    else:
+        w = np.asarray(weights, np.float64)[mask]
+        exp_avg = (vals[mask] * w[:, None]).sum(0) / w.sum()
+    if np.abs(res.average - exp_avg).max() > 1e-2:
+        raise AssertionError("published average off the survivors' mean")
+    return {
+        "n": n,
+        "V": V,
+        "failures": f,
+        "messages": got,
+        "expected_messages": expected,
+        "monitor_reposts": res.monitor_reposts,
+        "wall_s": res.wall_time,
+        "bytes_sent": res.bytes_sent,
+        "chunk_frames_in": res.stats["chunk_frames_in"],
+        "chunk_frames_out": res.stats["chunk_frames_out"],
+        "transfers_completed": res.stats["transfers_completed"],
+    }

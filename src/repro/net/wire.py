@@ -28,6 +28,15 @@ bytes — None/bool singletons, i64 ints, f64 floats, length-prefixed
 utf-8 strings and bytes, lists, dicts (arbitrary encodable keys, so
 ``{group: [nodes]}`` int-keyed maps survive), and ndarrays
 (``u8 dtype | u8 ndim | u32 dims… | raw``).
+
+Arrays larger than one frame do not travel as one value: the chunked
+transfer path (``post_chunk``/``get_chunk``, rules in docs/PROTOCOL.md
+§6) splits a flat vector into ``chunk_words``-sized slices with
+per-chunk sequence numbers, streamed as ordinary frames and reassembled
+by :class:`ChunkAssembler`. The authoritative spec for the whole layer
+— frames, opcodes, value tags, chunking, versioning — is
+``docs/PROTOCOL.md``; ``tests/test_docs.py`` asserts its tables match
+the registries below, so the book cannot silently drift from the code.
 """
 from __future__ import annotations
 
@@ -80,24 +89,43 @@ OPS: Tuple[str, ...] = (
     "wait_session",
     # session teardown (a long-lived broker must not accumulate tenants)
     "delete_session",
+    # chunked transfer plane (docs/PROTOCOL.md §6) — transport frames
+    # for arrays larger than one frame; never counted in MessageStats
+    "post_chunk",
+    "get_chunk",
 )
 OPCODE = {name: i + 1 for i, name in enumerate(OPS)}
 OPNAME = {i + 1: name for i, name in enumerate(OPS)}
 
-# value tags
-_T_NONE = 0
-_T_TRUE = 1
-_T_FALSE = 2
-_T_INT = 3
-_T_FLOAT = 4
-_T_STR = 5
-_T_BYTES = 6
-_T_LIST = 7
-_T_DICT = 8
-_T_ARRAY = 9
+#: Value-tag registry (names are the canonical spellings used by
+#: docs/PROTOCOL.md §4 — the doc-sync test compares this mapping).
+VALUE_TAGS = {
+    "none": 0,
+    "true": 1,
+    "false": 2,
+    "int": 3,
+    "float": 4,
+    "str": 5,
+    "bytes": 6,
+    "list": 7,
+    "dict": 8,
+    "array": 9,
+}
 
-# array dtype codes — little-endian canonical forms only
-_DTYPES = {
+_T_NONE = VALUE_TAGS["none"]
+_T_TRUE = VALUE_TAGS["true"]
+_T_FALSE = VALUE_TAGS["false"]
+_T_INT = VALUE_TAGS["int"]
+_T_FLOAT = VALUE_TAGS["float"]
+_T_STR = VALUE_TAGS["str"]
+_T_BYTES = VALUE_TAGS["bytes"]
+_T_LIST = VALUE_TAGS["list"]
+_T_DICT = VALUE_TAGS["dict"]
+_T_ARRAY = VALUE_TAGS["array"]
+
+#: array dtype codes — little-endian canonical forms only (public: the
+#: doc-sync test pins docs/PROTOCOL.md §5 to this table)
+ARRAY_DTYPES = {
     0: np.dtype("<u4"),
     1: np.dtype("<f4"),
     2: np.dtype("<f8"),
@@ -105,6 +133,7 @@ _DTYPES = {
     4: np.dtype("<i8"),
     5: np.dtype("<u1"),
 }
+_DTYPES = ARRAY_DTYPES
 _DTYPE_CODES = {dt.str: code for code, dt in _DTYPES.items()}
 
 
@@ -318,6 +347,74 @@ def encode_frame(body: bytes) -> bytes:
     if len(body) > MAX_FRAME:
         raise WireError(f"frame body {len(body)} exceeds MAX_FRAME")
     return struct.pack(">I", len(body)) + body
+
+
+# ---------------------------------------------------------------------------
+# Chunked array transfer (docs/PROTOCOL.md §6)
+# ---------------------------------------------------------------------------
+
+#: default chunk size in array elements — 1 Mi ring words = 4 MiB of
+#: uint32 per chunk, comfortably inside MAX_FRAME with headers to spare.
+DEFAULT_CHUNK_WORDS = 1 << 20
+
+
+def num_chunks(words: int, chunk_words: int) -> int:
+    """Chunks needed for a ``words``-element vector (>= 1: a zero-length
+    vector still travels as one empty chunk so metadata arrives)."""
+    if chunk_words < 1:
+        raise WireError(f"chunk_words must be >= 1, got {chunk_words}")
+    return max(1, -(-words // chunk_words))
+
+
+def chunk_slice(arr: np.ndarray, seq: int, chunk_words: int) -> np.ndarray:
+    """Chunk ``seq`` of a flat array: elements [seq*cw, (seq+1)*cw).
+
+    The last chunk is short when the length is not a multiple of
+    ``chunk_words``; a length that is an exact multiple produces no
+    empty trailing chunk (the boundary case tests pin this down).
+    """
+    if arr.ndim != 1:
+        raise WireError(
+            f"chunked transfer carries flat vectors, got rank {arr.ndim}")
+    return arr[seq * chunk_words:(seq + 1) * chunk_words]
+
+
+class ChunkAssembler:
+    """Reassemble one chunked transfer; order-independent, duplicate-safe.
+
+    Chunks may arrive in any order (each carries its own ``seq`` and the
+    transfer-wide ``total``); a repeated ``seq`` overwrites (at-least-
+    once delivery upstream is safe because chunk payloads are immutable
+    within one transfer id). ``add`` returns True once every chunk is
+    present; ``assemble`` concatenates in sequence order.
+    """
+
+    __slots__ = ("total", "chunks")
+
+    def __init__(self, total: int):
+        if total < 1:
+            raise WireDecodeError(f"transfer total must be >= 1, got {total}")
+        self.total = total
+        self.chunks: dict = {}
+
+    def add(self, seq: int, payload: np.ndarray) -> bool:
+        if not 0 <= seq < self.total:
+            raise WireDecodeError(
+                f"chunk seq {seq} outside transfer of {self.total}")
+        if not isinstance(payload, np.ndarray) or payload.ndim != 1:
+            raise WireDecodeError("chunk payload must be a flat ndarray")
+        self.chunks[seq] = payload
+        return self.complete
+
+    @property
+    def complete(self) -> bool:
+        return len(self.chunks) == self.total
+
+    def assemble(self) -> np.ndarray:
+        if not self.complete:
+            missing = sorted(set(range(self.total)) - set(self.chunks))
+            raise WireDecodeError(f"transfer missing chunks {missing[:8]}")
+        return np.concatenate([self.chunks[s] for s in range(self.total)])
 
 
 async def read_frame(reader) -> Optional[bytes]:

@@ -19,6 +19,11 @@ one stacked cache shape.
 
 Throughput: benchmarks/multi_session.py measures rounds/sec vs. the
 unbatched loop at S ∈ {1, 8, 32}.
+
+Behind the wire broker (``net/broker.py`` ``submit_session`` /
+``wait_session``, docs/PROTOCOL.md §7) an engine instance serves many
+TCP tenants; those ops still carry whole sessions in single frames —
+chunk-streamed engine submissions are a ROADMAP open item.
 """
 from __future__ import annotations
 

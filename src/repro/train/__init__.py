@@ -1,11 +1,20 @@
 """Training: SAFE-integrated distributed step, FedAvg rounds, metrics."""
 from repro.train.train_step import make_train_step, TrainStepBundle
-from repro.train.federated import make_federated_round, FederatedBundle
+from repro.train.federated import (
+    FederatedBundle,
+    WireFederated,
+    apply_delta,
+    make_federated_round,
+    make_local_update,
+    make_wire_federated,
+)
 from repro.train.loss import next_token_loss
 from repro.train.metrics import MetricsLogger
 
 __all__ = [
     "make_train_step", "TrainStepBundle",
     "make_federated_round", "FederatedBundle",
+    "make_local_update", "make_wire_federated", "WireFederated",
+    "apply_delta",
     "next_token_loss", "MetricsLogger",
 ]

@@ -6,13 +6,26 @@ local optimizer steps on its private shard, then the *model delta*
 counts via the paper's §5.6 weighted-averaging feature, so no learner
 reveals its dataset size — and applied to the shared model.
 
-The whole round is one SPMD program: local steps are a lax.scan over the
-per-learner microbatches inside the manual region.
+Two runtimes consume the same local update:
+
+  * :func:`make_federated_round` — the whole round as one SPMD program
+    (local steps are a lax.scan inside the shard_map region, deltas go
+    through the device-plane chain of ``core/chain.py``);
+  * :func:`make_wire_federated` — per-learner standalone jit of the
+    *identical* :func:`make_local_update` body, producing the numpy
+    callables :func:`repro.net.client.run_federated_round_net` drives
+    over a real broker (deltas travel the TCP chain of ``repro.net``,
+    chunk-streamed when larger than one frame — docs/PROTOCOL.md §6).
+
+Because both paths share one local-update function and both aggregation
+planes share one fixed-point/PRF substrate, a wire round's published
+delta is bit-identical to the in-SPMD round for the same seeds
+(asserted in tests/test_train.py::test_wire_round_delta_bit_identical).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +45,55 @@ class FederatedBundle:
     init_state_fn: Any
 
 
+def make_local_update(
+    model: Model,
+    *,
+    local_steps: int = 4,
+    local_lr: float = 1e-3,
+) -> Callable[[Any, jax.Array], tuple]:
+    """One learner's FedAvg local update, free of collectives.
+
+    Returns ``local_update(params, tokens) -> (delta_flat, mean_loss)``
+    where ``tokens`` is int32[local_steps, B, S] (one microbatch per
+    local optimizer step) and ``delta_flat`` is f32[P] in the canonical
+    :mod:`repro.train.flatten` layout. The function contains no
+    ``axis_index``/collective ops, so it composes *inside* a shard_map
+    region (``make_federated_round``) and compiles standalone per
+    learner (``make_wire_federated``) — the factoring that lets the wire
+    plane's learners run real local steps.
+    """
+    cfg = model.cfg
+    local_opt = AdamW(lr=local_lr, weight_decay=0.0, grad_clip=1.0)
+
+    def local_update(params, tokens):
+        opt_state = local_opt.init(params)
+
+        def local_step(carry, batch):
+            p, s = carry
+
+            def loss_fn(q):
+                logits, aux = model.forward(q, batch)
+                return next_token_loss(logits, batch, cfg.prefix_embeds) + aux
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p, s = local_opt.update(grads, s, p)
+            return (p, s), loss
+
+        (new_params, _), losses = jax.lax.scan(
+            local_step, (params, opt_state), tokens)
+        delta = tree_to_flat(new_params) - tree_to_flat(params)
+        return delta, losses.mean()
+
+    return local_update
+
+
+def apply_delta(params: Any, avg_delta) -> Any:
+    """Merge a published average delta back into the parameter tree —
+    the single apply formula both runtimes share."""
+    merged = tree_to_flat(params) + jnp.asarray(avg_delta, jnp.float32)
+    return flat_to_tree(merged, params)
+
+
 def make_federated_round(
     model: Model,
     aggregator: SecureAggregator,
@@ -41,46 +103,36 @@ def make_federated_round(
     local_lr: float = 1e-3,
     learner_axis: str = "data",
     pod_axis: Optional[str] = None,
+    return_delta: bool = False,
 ) -> FederatedBundle:
     """Build one FedAvg round: k local AdamW steps then weighted SAFE
     aggregation of the deltas. Aggregator must have cfg.weighted=True to
-    exercise §5.6 (falls back to plain mean otherwise)."""
-    cfg = model.cfg
-    n = aggregator.cfg.num_learners
-    local_opt = AdamW(lr=local_lr, weight_decay=0.0, grad_clip=1.0)
+    exercise §5.6 (falls back to plain mean otherwise).
 
-    params_abs = jax.eval_shape(model.init, jax.random.key(0))
-    psize = tree_size(params_abs)
+    ``return_delta=True`` adds the published f32[P] ``avg_delta`` to the
+    metrics dict — the cross-plane parity hook (tests compare it against
+    the wire-trained round's published delta bit for bit).
+    """
+    n = aggregator.cfg.num_learners
+    local_update = make_local_update(model, local_steps=local_steps,
+                                     local_lr=local_lr)
 
     def per_rank_round(params, tokens, weights, counter, alive):
         # tokens: [1, local_steps, B_l, S] for this learner
         tokens = tokens.reshape(tokens.shape[1:])
         my_w = weights[jax.lax.axis_index(learner_axis)]
 
-        opt_state = local_opt.init(params)
-
-        def local_step(carry, batch):
-            p, s = carry
-            def loss_fn(q):
-                logits, aux = model.forward(q, batch)
-                return next_token_loss(logits, batch, cfg.prefix_embeds) + aux
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            p, s = local_opt.update(grads, s, p)
-            return (p, s), loss
-
-        (new_params, _), losses = jax.lax.scan(
-            local_step, (params, opt_state), tokens)
-
-        delta = tree_to_flat(new_params) - tree_to_flat(params)
+        delta, loss_mean = local_update(params, tokens)
         # §5.6: weighted secure mean of deltas; weights stay private
         avg_delta = aggregator.aggregate(delta, counter, alive=alive,
                                          weights=my_w)
-        merged = tree_to_flat(params) + avg_delta
-        out_params = flat_to_tree(merged, params)
+        out_params = apply_delta(params, avg_delta)
         metrics = {
-            "local_loss": jax.lax.pmean(losses.mean(), learner_axis),
+            "local_loss": jax.lax.pmean(loss_mean, learner_axis),
             "delta_norm": jnp.sqrt(jnp.sum(jnp.square(avg_delta))),
         }
+        if return_delta:
+            metrics["avg_delta"] = avg_delta
         return out_params, metrics
 
     manual = {learner_axis} | ({pod_axis} if pod_axis else set())
@@ -104,3 +156,58 @@ def make_federated_round(
 
     return FederatedBundle(round_fn=round_fn,
                            init_state_fn=lambda p: p)
+
+
+@dataclasses.dataclass
+class WireFederated:
+    """JAX-side half of wire-plane federated training.
+
+    ``local_fns[node]`` computes that learner's f32[P] delta from the
+    current params (standalone jit — no mesh, no shard_map), and
+    ``apply_fn`` merges a published average delta; both are exactly what
+    :func:`repro.net.client.run_federated_round_net` consumes, keeping
+    ``repro.net`` JAX-free (callables are injected, never imported).
+    """
+
+    local_fns: Dict[int, Callable[[Any], np.ndarray]]
+    apply_fn: Callable[[Any, np.ndarray], Any]
+    payload_words: int
+    last_losses: Dict[int, float]
+
+
+def make_wire_federated(
+    model: Model,
+    tokens_by_learner: Dict[int, np.ndarray],
+    *,
+    local_steps: int = 4,
+    local_lr: float = 1e-3,
+) -> WireFederated:
+    """Build per-learner local-update callables for the wire runtime.
+
+    ``tokens_by_learner`` maps 1-based node ids (paper numbering — the
+    same ids the broker chains carry) to that org's private
+    int32[local_steps, B, S] microbatches. Every callable shares ONE
+    compiled program (learners differ only in data), so an n-org round
+    compiles once.
+    """
+    local_update = make_local_update(model, local_steps=local_steps,
+                                     local_lr=local_lr)
+    step = jax.jit(local_update)
+    params_abs = jax.eval_shape(model.init, jax.random.key(0))
+    psize = tree_size(params_abs)
+    losses: Dict[int, float] = {}
+
+    def make_fn(node: int, toks: np.ndarray):
+        toks = jnp.asarray(toks)
+
+        def fn(params) -> np.ndarray:
+            delta, loss = step(params, toks)
+            losses[node] = float(loss)
+            return np.asarray(delta, np.float32)
+
+        return fn
+
+    local_fns = {node: make_fn(node, toks)
+                 for node, toks in sorted(tokens_by_learner.items())}
+    return WireFederated(local_fns=local_fns, apply_fn=apply_delta,
+                         payload_words=psize, last_losses=losses)

@@ -1,0 +1,131 @@
+"""Doc-sync: docs/PROTOCOL.md's tables must match the code registries.
+
+The protocol book is the authoritative spec of the wire layer; these
+tests parse its markdown tables and compare them — entry by entry, both
+directions — against the registries in ``repro.net.wire``
+(``OPCODE``/``VALUE_TAGS``/``ARRAY_DTYPES``) and
+``repro.core.controller`` (``CALL_OPS``/``WAIT_KINDS``/``TIMED_OPS``/
+``MessageStats``). Adding an opcode without documenting it, or editing
+the doc without changing the code, fails tier-1.
+"""
+import dataclasses
+import os
+import re
+
+import pytest
+
+from repro.core.controller import CALL_OPS, MessageStats, TIMED_OPS, WAIT_KINDS
+from repro.net import wire
+
+DOC = os.path.join(os.path.dirname(__file__), "..", "docs", "PROTOCOL.md")
+
+
+def _tables(text):
+    """Every markdown table as (header_cells, [row_cells...])."""
+    tables = []
+    current = None
+    for line in text.splitlines():
+        line = line.strip()
+        if line.startswith("|"):
+            # markdown escapes a literal pipe inside a cell as \|
+            line = line.replace("\\|", "\x00")
+            cells = [c.strip().replace("\x00", "|")
+                     for c in line.strip("|").split("|")]
+            if all(re.fullmatch(r":?-+:?", c) for c in cells):
+                continue  # separator row
+            if current is None:
+                current = (cells, [])
+                tables.append(current)
+            else:
+                current[1].append(cells)
+        else:
+            current = None
+    return tables
+
+
+@pytest.fixture(scope="module")
+def doc():
+    with open(DOC) as f:
+        return f.read()
+
+
+@pytest.fixture(scope="module")
+def tables(doc):
+    by_header = {}
+    for header, rows in _tables(doc):
+        by_header[tuple(h.lower() for h in header[:2])] = (header, rows)
+    return by_header
+
+
+def _table(tables, first_two):
+    assert first_two in tables, (
+        f"PROTOCOL.md lost its {first_two} table (found: "
+        f"{sorted(tables)})")
+    return tables[first_two]
+
+
+class TestOpcodeTable:
+    def _rows(self, tables):
+        header, rows = _table(tables, ("code", "op"))
+        assert [h.lower() for h in header] == [
+            "code", "op", "class", "counted", "timed"]
+        return [dict(zip(["code", "op", "cls", "counted", "timed"], r))
+                for r in rows]
+
+    def test_codes_match_registry(self, tables):
+        documented = {r["op"]: int(r["code"]) for r in self._rows(tables)}
+        assert documented == wire.OPCODE, (
+            "PROTOCOL.md §7 opcode table != wire.OPCODE — update BOTH "
+            "the registry and the book")
+
+    def test_classes_match_registries(self, tables):
+        by_cls = {}
+        for r in self._rows(tables):
+            by_cls.setdefault(r["cls"], set()).add(r["op"])
+        assert by_cls["call"] == set(CALL_OPS)
+        assert by_cls["wait"] == set(WAIT_KINDS)
+        assert by_cls["chunk"] == {"post_chunk", "get_chunk"}
+        assert by_cls["engine"] == {"submit_session", "wait_session"}
+        assert by_cls["admin"] == (set(wire.OPS) - set(CALL_OPS)
+                                   - set(WAIT_KINDS)
+                                   - by_cls["chunk"] - by_cls["engine"])
+
+    def test_counted_column_is_messagestats(self, tables):
+        counted = {r["op"] for r in self._rows(tables)
+                   if r["counted"] == "yes"}
+        # the §5 accounting: counted ops are exactly the MessageStats
+        # fields, which are exactly the controller's client ops
+        fields = {f.name for f in dataclasses.fields(MessageStats)}
+        assert counted == fields
+        assert counted == set(CALL_OPS) | set(WAIT_KINDS)
+
+    def test_timed_column_matches(self, tables):
+        timed = {r["op"] for r in self._rows(tables) if r["timed"] == "yes"}
+        assert timed == set(TIMED_OPS)
+
+
+class TestValueTagTable:
+    def test_tags_match(self, tables):
+        _, rows = _table(tables, ("tag", "name"))
+        documented = {r[1]: int(r[0]) for r in rows}
+        assert documented == wire.VALUE_TAGS, (
+            "PROTOCOL.md §4 tag table != wire.VALUE_TAGS")
+
+
+class TestDtypeTable:
+    def test_dtypes_match(self, tables):
+        _, rows = _table(tables, ("code", "dtype"))
+        documented = {int(r[0]): r[1] for r in rows}
+        assert documented == {c: dt.str for c, dt in
+                              wire.ARRAY_DTYPES.items()}, (
+            "PROTOCOL.md §5 dtype table != wire.ARRAY_DTYPES")
+
+
+class TestScalars:
+    def test_wire_version_pinned(self, doc):
+        assert f"`WIRE_VERSION` (currently {wire.WIRE_VERSION})" in doc, (
+            "PROTOCOL.md §9 must state the current WIRE_VERSION")
+
+    def test_max_frame_pinned(self, doc):
+        assert f"`MAX_FRAME` is {wire.MAX_FRAME >> 20} MiB" in doc, (
+            "PROTOCOL.md §2 must state MAX_FRAME")

@@ -3,7 +3,10 @@ transport. Acceptance (ISSUE 2): for the same seeds/topology the
 published average over the wire is bit-identical to the discrete-event
 sim, and MessageStats matches §5's closed forms for n ∈ {4, 8} with and
 without an injected failure. Plus: faults (latency/drop/churn),
-re-election, the engine plane, and the broker's counter hygiene.
+re-election, the engine plane, the broker's counter hygiene, and the
+chunked transfer plane of docs/PROTOCOL.md §6 (boundary sizes,
+single-chunk fallback, reordered/duplicate chunks, drops mid-stream,
+crash mid-upload).
 
 Every test runs under a hard SIGALRM deadline (autouse fixture) so a
 hung broker or lost long-poll aborts the test instead of stalling the
@@ -310,6 +313,155 @@ class TestBrokerHygiene:
         assert np.array_equal(b.average, sim_b.average)
         assert a.stats["aggregation_total"] == 4 * 4
         assert b.stats["aggregation_total"] == 4 * 4
+
+
+class TestChunkedTransfer:
+    """docs/PROTOCOL.md §6: multi-frame array streaming. Chunking is
+    transport — bits, §5 message counts and failover semantics must be
+    indistinguishable from the unchunked path."""
+
+    def test_multi_chunk_bit_identical_and_counts(self):
+        """V=103 over 16-word chunks (7 per transfer, ragged tail)."""
+        vals = _vals(6, 103, seed=21)
+        sim = run_safe_round(vals)
+        net = _wire_round(vals, chunk_words=16)
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 6
+        assert net.stats["transfers_completed"] == 7  # 6 hops + average
+        assert net.stats["chunk_frames_in"] == 7 * 7
+
+    def test_exact_chunk_boundary(self):
+        """V an exact multiple of chunk_words: no empty trailing chunk."""
+        vals = _vals(4, 64, seed=22)
+        sim = run_safe_round(vals)
+        net = _wire_round(vals, chunk_words=16)
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["chunk_frames_in"] == 5 * 4  # exactly 64/16 each
+
+    def test_single_chunk_fallback(self):
+        """Payload fits one chunk: the plain ops carry it, zero chunk
+        frames on the wire."""
+        vals = _vals(4, 8, seed=23)
+        sim = run_safe_round(vals)
+        net = _wire_round(vals, chunk_words=16)
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["chunk_frames_in"] == 0
+        assert net.stats["chunk_frames_out"] == 0
+
+    def test_chunked_weighted_and_dead_node(self):
+        """A dead learner's chunked transfer is reposted around (§5.3)
+        and the weighted closed form 4(n−f)+2f still holds."""
+        vals = _vals(8, 48, seed=24)
+        w = np.arange(1, 9, dtype=np.float32) * 100
+        sim = run_safe_round(vals, failed_nodes=[3], weights=w)
+        net = _wire_round(vals, failed_nodes=[3], weights=w, chunk_words=16)
+        assert np.array_equal(sim.average, net.average)
+        assert float(sim.weight_avg) == float(net.weight_avg)
+        assert net.stats["aggregation_total"] == 4 * 7 + 2
+        assert net.monitor_reposts == 1
+
+    def test_dropped_chunks_retry_clean(self):
+        """Drops hit individual chunk frames (they never reached the
+        broker — at-most-once retry), bits and counts survive."""
+        vals = _vals(8, 48, seed=25)
+        sim = run_safe_round(vals)
+        drop = DropInterceptor(p=0.1, seed=9)
+        net = _wire_round(vals, chunk_words=16, interceptor=Chain(
+            LatencyInterceptor(mean=0.001, seed=9), drop))
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 8
+        assert drop.dropped > 0
+
+    def test_crash_mid_upload_reelects(self):
+        """A learner dies partway through streaming its aggregate (some
+        chunks uploaded, transfer never completes): no posting exists,
+        so §5.3 cannot fire — the round times out, §5.4 re-elects, and
+        the survivors' retry publishes, bit-identical to a sim where
+        that node was dead all along."""
+        vals = _vals(8, 48, seed=26)
+        # node 5 (non-initiator): 3 get_chunk + 1 get_aggregate frames,
+        # then dies before its 2nd post_chunk — one chunk buffered
+        churn = ChurnInterceptor({5: 5})
+        net = _wire_round(vals, chunk_words=16, interceptor=churn,
+                          broker_kw=dict(aggregation_timeout=2.0))
+        sim = run_safe_round(vals, failed_nodes=[5])
+        assert net.crashed_nodes == (5,)
+        assert net.initiator_elections >= 1
+        assert np.array_equal(sim.average, net.average)
+
+    def test_reordered_duplicate_chunks_and_streaming(self):
+        """Raw frames: chunks arrive out of order with a duplicate; the
+        logical post fires exactly once, on completion; a chunk is
+        downloadable *before* the upload completes (store-and-forward
+        pipelining); the elided consume counts once."""
+        from repro.net import WireClient
+
+        payload = np.arange(40, dtype=np.uint32)
+        cw = 16  # chunks [0:16] [16:32] [32:40], total 3
+
+        def frame(seq):
+            return {"session": 0, "op": "post_aggregate", "xfer": 77,
+                    "seq": seq, "total": 3, "chunk_words": cw,
+                    "from_node": 1, "to_node": 2, "group": 0,
+                    "payload": payload[seq * cw:(seq + 1) * cw]}
+
+        async def go():
+            broker = SafeBroker()
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()
+                await c.request("create_session", {"groups": {0: [1, 2]}})
+                r = await c.request("post_chunk", frame(2))  # tail first
+                assert not r["complete"] and r["received"] == 1
+                # streaming: the buffered chunk serves before completion
+                g = await c.request("get_chunk", {
+                    "session": 0, "kind": "get_aggregate", "node": 2,
+                    "group": 0, "seq": 2, "words": cw, "timeout": 5.0})
+                assert g["last"] and g["from_node"] == 1
+                assert np.array_equal(g["payload"], payload[32:])
+                st = await c.request("get_stats", {"session": 0})
+                assert st["post_aggregate"] == 0  # not a message yet
+                await c.request("post_chunk", frame(0))
+                r = await c.request("post_chunk", frame(0))  # duplicate
+                assert r["received"] == 2  # idempotent overwrite
+                r = await c.request("post_chunk", frame(1))
+                assert r["complete"]
+                # at-least-once repeat AFTER completion (final ack lost):
+                # idempotent re-ack, no fresh buffer, no second posting
+                r = await c.request("post_chunk", frame(1))
+                assert r["complete"] and r["received"] == 3
+                st = await c.request("get_stats", {"session": 0})
+                assert st["post_aggregate"] == 1
+                assert st["transfers_completed"] == 1
+                parts = [(await c.request("get_chunk", {
+                    "session": 0, "kind": "get_aggregate", "node": 2,
+                    "group": 0, "seq": s, "words": cw,
+                    "timeout": 5.0}))["payload"] for s in range(3)]
+                res = await c.request("get_aggregate", {
+                    "session": 0, "node": 2, "group": 0,
+                    "elide_payload": True, "timeout": 5.0})
+                assert res["chunked"] is True and res["aggregate"] is None
+                assert np.array_equal(np.concatenate(parts), payload)
+                st = await c.request("get_stats", {"session": 0})
+                assert st["get_aggregate"] == 1
+                # post_average idempotency: the posted buffer is the
+                # repeat record — a re-sent final chunk re-acks, never
+                # re-executes the op (PROTOCOL.md §6 repeat rule)
+                avg_frame = {"session": 0, "op": "post_average",
+                             "xfer": 5, "seq": 0, "total": 1,
+                             "chunk_words": cw, "node": 1, "group": 0,
+                             "payload": np.zeros(8, np.float32)}
+                r = await c.request("post_chunk", dict(avg_frame))
+                assert r["complete"]
+                r = await c.request("post_chunk", dict(avg_frame))
+                assert r["complete"]
+                st = await c.request("get_stats", {"session": 0})
+                assert st["post_average"] == 1
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
 
 
 ENGINE_WIRE_CODE = """
