@@ -26,7 +26,8 @@ def main() -> None:
     from benchmarks import (common, constrained, device_aggregation, failover,
                             feature_scalability, hierarchical, kernel_bench,
                             messages, multi_session, net_load,
-                            node_scalability, paper_scale, subgrouping)
+                            node_scalability, paper_scale, streaming,
+                            subgrouping)
     print("name,us_per_call,derived")
     t0 = time.time()
     mods = [
@@ -43,6 +44,8 @@ def main() -> None:
         ("net_load", "net_load wire-plane broker (repro/net)", net_load.main),
         ("paper_scale", "paper_scale n=36 wire runs vs BON (§6.1)",
          paper_scale.main),
+        ("streaming", "streaming combine + persistent sessions (§8 wire)",
+         streaming.main),
     ]
     failures = 0
     matched = 0

@@ -10,6 +10,22 @@ broker directly: every externally-visible action is a yield,
   ("wait",  kind, kwargs, nbytes, timeout)   long-poll; resumes with the
                                              result or {"status":"timeout"}
 
+plus the streaming-combine form of the §5.1.2 hot path,
+
+  ("stream", kwargs, nbytes, timeout)        fused receive+combine+post:
+                                             a runtime that can stream
+                                             chunks performs the per-
+                                             chunk combine (kwargs
+                                             carries the closure) and
+                                             resumes with
+                                             {"status": "streamed", ...};
+                                             any other runtime treats it
+                                             as a plain get_aggregate
+                                             wait and the machine falls
+                                             back to whole-vector
+                                             decrypt/add/encrypt/post —
+                                             same bits, same §5 counts,
+
 and the final result is returned via StopIteration. Two runtimes drive
 the identical coroutines:
 
@@ -39,6 +55,7 @@ from repro.crypto.np_impl import (
     derive_key_np,
     derive_pair_key_np,
     keystream_pair_lanes_np,
+    keystream_slice_np,
 )
 from repro.topology import RingTopology
 
@@ -46,6 +63,14 @@ _TAG_HOP_PAD = 0x50
 _TAG_INITIATOR_MASK = 0x52
 
 LearnerGen = Generator[tuple, Any, None]
+
+
+def key_derivations() -> int:
+    """Total Threefry key derivations performed by LearnerCrypto objects
+    so far (constructions + pair-key cache misses). Persistent-session
+    acceptance hinges on this staying flat after Round 0 — the broker
+    tests and ``benchmarks/streaming.py`` snapshot it around rounds."""
+    return LearnerCrypto._derivations
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +85,9 @@ class LearnerCrypto:
     otherwise each hop additionally pays the RSA wrap/unwrap (§5.7 hybrid).
     """
 
+    #: class-wide Threefry derivation tally (see :func:`key_derivations`)
+    _derivations = 0
+
     def __init__(self, node: int, provisioning_seed: int, learner_master: int,
                  scale_bits: int = 16, encrypt: bool = True,
                  symmetric_only: bool = False):
@@ -73,10 +101,30 @@ class LearnerCrypto:
         master = np.array([learner_master & 0xFFFFFFFF,
                            (learner_master >> 32) & 0xFFFFFFFF], np.uint32)
         self._own = derive_key_np(derive_key_np(master, node), _TAG_INITIATOR_MASK)
+        # pair keys are derived once per (src, dst) and cached: a
+        # persistent multi-round session (and the chunk-granular combine,
+        # which touches the pad many times per vector) must not re-derive
+        # per use — the Round-0 amortization the paper counts on
+        self._pair_keys: Dict[tuple, np.ndarray] = {}
+        LearnerCrypto._derivations += 4  # prov tag + master, node, R tags
+
+    def _pair_key(self, src: int, dst: int) -> np.ndarray:
+        k = self._pair_keys.get((src, dst))
+        if k is None:
+            k = derive_pair_key_np(self._pad_seed, src, dst)
+            self._pair_keys[(src, dst)] = k
+            LearnerCrypto._derivations += 1
+        return k
 
     def pad(self, src: int, dst: int, n: int, counter: int) -> np.ndarray:
-        k = derive_pair_key_np(self._pad_seed, src, dst)
-        return keystream_pair_lanes_np(k, n, counter)
+        return keystream_pair_lanes_np(self._pair_key(src, dst), n, counter)
+
+    def pad_slice(self, src: int, dst: int, start: int, n: int,
+                  counter: int) -> np.ndarray:
+        """Words [start, start+n) of the (src→dst, counter) hop pad —
+        bit-identical to ``pad(src, dst, total, counter)[start:start+n]``
+        (the seekability the chunk-granular combine runs on)."""
+        return keystream_slice_np(self._pair_key(src, dst), n, start, counter)
 
     def mask_r(self, n: int, counter: int) -> np.ndarray:
         return keystream_pair_lanes_np(self._own, n, counter)
@@ -90,6 +138,20 @@ class LearnerCrypto:
         if not self.encrypt_enabled:
             return cipher
         return NpFixedPoint.sub(cipher, self.pad(src, self.node, cipher.size, counter))
+
+    def hop_encrypt_slice(self, plain_chunk: np.ndarray, dst: int,
+                          counter: int, start: int) -> np.ndarray:
+        if not self.encrypt_enabled:
+            return plain_chunk
+        return NpFixedPoint.add(plain_chunk, self.pad_slice(
+            self.node, dst, start, plain_chunk.size, counter))
+
+    def hop_decrypt_slice(self, cipher_chunk: np.ndarray, src: int,
+                          counter: int, start: int) -> np.ndarray:
+        if not self.encrypt_enabled:
+            return cipher_chunk
+        return NpFixedPoint.sub(cipher_chunk, self.pad_slice(
+            src, self.node, start, cipher_chunk.size, counter))
 
 
 # ---------------------------------------------------------------------------
@@ -148,15 +210,21 @@ def safe_learner(
             return "done"
         return "rejoin"
 
-    def _post_and_confirm(agg):
+    def _post_and_confirm(agg, posted=False):
         """post_aggregate + check_aggregate loop, handling §5.3 reposts and
         round resets. Returns the terminal status dict (status is
         'consumed'|'reset'|'timeout'|'self' — 'self' means every repost
-        target was dead and the poster's own aggregate is final)."""
-        yield ("compute", enc_cost())
-        cipher = crypto.hop_encrypt(agg, nxt, counter)
-        yield ("call", "post_aggregate",
-               dict(from_node=node, to_node=nxt, payload=cipher, group=group), nbytes)
+        target was dead and the poster's own aggregate is final).
+        ``posted=True`` means the streaming-combine path already shipped
+        the encrypted aggregate chunk-by-chunk — skip straight to the
+        confirmation loop (repost retargets still re-encrypt ``agg``
+        whole, exactly as in the buffered path)."""
+        if not posted:
+            yield ("compute", enc_cost())
+            cipher = crypto.hop_encrypt(agg, nxt, counter)
+            yield ("call", "post_aggregate",
+                   dict(from_node=node, to_node=nxt, payload=cipher,
+                        group=group), nbytes)
         while True:
             st = yield ("wait", "check_aggregate", dict(node=node, group=group),
                         64, "aggregation")
@@ -230,9 +298,45 @@ def safe_learner(
                 yield ("wait", "get_average", dict(), nbytes, None)
             return
         else:
-            # -- §5.1.2 non-initiator.
-            res = yield ("wait", "get_aggregate", dict(node=node, group=group),
-                         nbytes, "aggregation")
+            # -- §5.1.2 non-initiator. The receive+combine+forward hop is
+            # the chain's hot path; yield it as a "stream" so a chunk-
+            # capable runtime can decrypt/add/re-encrypt chunk k (the pad
+            # is seekable, `_combine_chunk`) and ship it downstream while
+            # chunk k+1 is still in flight — the §8 pipelined schedule
+            # inside one hop. Runtimes without streaming resolve the
+            # yield as a plain get_aggregate wait and the classic whole-
+            # vector path below runs, bit-identical.
+            enc_payload_box: list = []
+
+            def _enc_payload() -> np.ndarray:
+                if not enc_payload_box:
+                    enc_payload_box.append(codec.encode(payload_f))
+                return enc_payload_box[0]
+
+            def _combine_chunk(start: int, cipher_chunk: np.ndarray,
+                               src: int):
+                """Chunk-granular §5.1.2 combine on words
+                [start, start+len): returns (outgoing ciphertext for
+                ``nxt``, combined plaintext kept for repost/unmask).
+                Elementwise over Z/2^32Z, so any chunking of the vector
+                produces the same bits as the whole-vector path."""
+                plain = crypto.hop_decrypt_slice(cipher_chunk, src,
+                                                 counter, start)
+                comb = NpFixedPoint.add(
+                    plain, _enc_payload()[start:start + cipher_chunk.size])
+                out = crypto.hop_encrypt_slice(comb, nxt, counter, start)
+                return out, comb
+
+            if fail_mode is None:
+                res = yield ("stream",
+                             dict(node=node, group=group, to_node=nxt,
+                                  combine=_combine_chunk,
+                                  payload_words=V),
+                             nbytes, "aggregation")
+            else:
+                res = yield ("wait", "get_aggregate",
+                             dict(node=node, group=group), nbytes,
+                             "aggregation")
             if res.get("status") == "timeout":
                 verdict = yield from _election()
                 if verdict == "done":
@@ -241,12 +345,21 @@ def safe_learner(
                 continue
             if fail_mode == "dead":
                 return
-            yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
-            agg = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
-            yield ("compute", cost.t_add_elem * V)
-            agg = NpFixedPoint.add(agg, codec.encode(payload_f))
-
-            st = yield from _post_and_confirm(agg)
+            if res.get("status") == "streamed":
+                # chunk-combined on the fly; `combined` is the assembled
+                # plaintext partial (for repost retargets), `uploaded`
+                # says whether the streamed post landed (a superseded
+                # upload falls back to a whole-vector post here).
+                agg = res["combined"]
+                st = yield from _post_and_confirm(agg,
+                                                  posted=res["uploaded"])
+            else:
+                yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
+                agg = crypto.hop_decrypt(res["aggregate"], res["from_node"],
+                                         counter)
+                yield ("compute", cost.t_add_elem * V)
+                agg = NpFixedPoint.add(agg, codec.encode(payload_f))
+                st = yield from _post_and_confirm(agg)
             if st["status"] == "reset":
                 continue  # round restarted — rejoin the new chain
             # 'timeout' falls through to get_average, whose own timeout
@@ -294,6 +407,7 @@ def build_round_machines(
     subgroups: int = 1,
     failed: Iterable[int] = (),
     initiator_fails: bool = False,
+    crypto_cache: Optional[Dict[int, LearnerCrypto]] = None,
 ) -> Dict[int, LearnerGen]:
     """Build one generator per live learner for one aggregation round.
 
@@ -302,6 +416,13 @@ def build_round_machines(
     ``net.client.run_safe_round_net`` (wire) both call it, so "same
     seeds, same topology" means *the same coroutines* in both planes.
     Returns ``{node_id: generator}`` for nodes not in ``failed``.
+
+    ``crypto_cache`` (node → LearnerCrypto, filled on first use) lets a
+    persistent multi-round session reuse each learner's derived key
+    material across rounds — no key re-derivation after Round 0, the
+    paper's amortization. Callers own counter bookkeeping: the cache is
+    only sound while ``counter`` advances past every previous round's
+    pad words (``core.session.RoundCursor``).
     """
     failed = set(failed)
     machines: Dict[int, LearnerGen] = {}
@@ -315,9 +436,13 @@ def build_round_machines(
                 machines[node] = insec_learner(
                     node, val if w is None else val * w, cost, group=g)
                 continue
-            crypto = LearnerCrypto(
-                node, provisioning_seed, learner_master, scale_bits,
-                encrypt=(mode == "safe"), symmetric_only=symmetric_only)
+            crypto = None if crypto_cache is None else crypto_cache.get(node)
+            if crypto is None:
+                crypto = LearnerCrypto(
+                    node, provisioning_seed, learner_master, scale_bits,
+                    encrypt=(mode == "safe"), symmetric_only=symmetric_only)
+                if crypto_cache is not None:
+                    crypto_cache[node] = crypto
             is_init = node in initiators
             fail_mode = ("after_post"
                          if (initiator_fails and g == 0 and is_init) else None)

@@ -252,6 +252,18 @@ class ProtocolSimulation:
                     _, op, kwargs, nbytes = item
                     task.waiting = ("__call__", (op, kwargs), nbytes, None)
                     return
+                if kind == "stream":
+                    # the fused receive+combine+post yield: virtual time
+                    # has no transfer to overlap, so the kernel lowers it
+                    # to the plain get_aggregate wait — the machine sees
+                    # no "streamed" status and takes the whole-vector
+                    # fallback, keeping bits, counts and timing exactly
+                    # the pre-streaming discrete-event behaviour
+                    _, skwargs, nbytes, timeout = item
+                    item = ("wait", "get_aggregate",
+                            dict(node=skwargs["node"],
+                                 group=skwargs["group"]), nbytes, timeout)
+                    kind = "wait"
                 if kind == "wait":
                     _, wkind, kwargs, nbytes, timeout = item
                     deadline = None

@@ -23,6 +23,39 @@ import numpy as np
 from repro.crypto.prf import RoundCounter
 
 
+class RoundCursor:
+    """Per-round counter-base bookkeeping for persistent multi-round
+    sessions (wire plane): round r's pads start at a fresh base, so key
+    material survives R rounds with no pad reuse — the wire twin of
+    ``AggSession.reserve_counter`` for the device engine.
+
+    ``words_per_round`` is the vector length the pads cover (payload
+    words, +1 when weighted — the same convention every existing caller
+    of ``counter=`` uses). Reservation delegates to
+    :class:`~repro.crypto.prf.RoundCounter`, inheriting its pre-mutation
+    uint32 overflow guard: when the counter space runs out the session
+    must rotate keys (Round 0 again), never silently wrap.
+    """
+
+    def __init__(self, words_per_round: int, counter0: int = 0):
+        if words_per_round < 1:
+            raise ValueError(
+                f"words_per_round must be >= 1, got {words_per_round}")
+        self.words_per_round = int(words_per_round)
+        self._rc = RoundCounter()
+        if counter0:
+            self._rc.reserve(int(counter0))  # externally consumed space
+
+    @property
+    def rounds_remaining(self) -> int:
+        """Rounds still reservable before a Round-0 key rotation is due."""
+        return self._rc.remaining // self.words_per_round
+
+    def next_round(self) -> int:
+        """Reserve and return the next round's counter base."""
+        return self._rc.reserve(self.words_per_round)
+
+
 def seed_words(seed: int) -> np.ndarray:
     """uint32[2] little-endian words of a 64-bit seed — the exact host
     conversion ``make_round_keys`` applies before key derivation."""

@@ -67,6 +67,32 @@ def keystream_pair_lanes_np(key: np.ndarray, n: int, counter_base: int = 0) -> n
         np.seterr(**old)
 
 
+def keystream_slice_np(key: np.ndarray, n: int, start: int,
+                       counter_base: int = 0) -> np.ndarray:
+    """Words ``[start, start + n)`` of the two-lane keystream based at
+    ``counter_base`` — the seekable slab the streaming chunk-combine path
+    runs on.
+
+    Bit-identical to ``keystream_pair_lanes_np(key, total, counter_base)
+    [start:start + n]`` for any ``total >= start + n``, computed without
+    generating the prefix. ``counter_base`` is in two-word *blocks* (the
+    Threefry counter schedule), so word ``start`` of the stream lives at
+    global word ``2 * counter_base + start``; an odd ``start`` lands
+    mid-block and costs one extra generated word. Property-tested in
+    ``tests/test_crypto.py`` (arbitrary split points, chunk edges, empty
+    slices).
+    """
+    if n < 0:
+        raise ValueError(f"slice length must be >= 0, got {n}")
+    if start < 0:
+        raise ValueError(f"slice start must be >= 0, got {start}")
+    if n == 0:
+        return np.empty(0, np.uint32)
+    word0 = 2 * int(counter_base) + int(start)
+    block0, off = divmod(word0, 2)
+    return keystream_pair_lanes_np(key, n + off, block0 % (1 << 32))[off:]
+
+
 def derive_key_np(master: np.ndarray, *tags: int) -> np.ndarray:
     k = np.asarray(master, np.uint32)
     for tag in tags:

@@ -16,9 +16,11 @@ constructed ``serve.AggregationEngine`` by injection.
 from repro.net.broker import SafeBroker
 from repro.net.client import (
     NetResult,
+    PersistentNetSession,
     WireClient,
     drive_learner,
     run_federated_round_net,
+    run_federated_rounds_net,
     run_safe_round_net,
 )
 from repro.net.faults import (
@@ -42,9 +44,11 @@ __all__ = [
     "SafeBroker",
     "WireClient",
     "NetResult",
+    "PersistentNetSession",
     "drive_learner",
     "run_safe_round_net",
     "run_federated_round_net",
+    "run_federated_rounds_net",
     "Interceptor",
     "Chain",
     "LatencyInterceptor",

@@ -179,6 +179,13 @@ class SafeBroker:
         # engine plane
         self.engine = engine
         self._engine_sessions: Dict[int, object] = {}
+        # engine-plane chunked transfers (oversized submit values /
+        # result fetches routed over the §6 transfer plane): staged
+        # uploads keyed (owner, xfer); flattened result cache per sid
+        self._engine_uploads: Dict[tuple, dict] = {}
+        self._engine_flat: Dict[int, np.ndarray] = {}
+        self.engine_chunk_frames_in = 0
+        self.engine_chunk_frames_out = 0
         # sid -> completion wall time; entries older than
         # engine_session_ttl are pruned (abandoned submissions — a
         # tenant that crashed between submit_session and wait_session
@@ -304,6 +311,13 @@ class SafeBroker:
             return self._submit_session(kwargs)
         if op == "wait_session":
             return await self._wait_session(kwargs)
+        # engine payloads beyond one frame ride the same chunk ops as
+        # protocol arrays, but address the engine plane (no protocol
+        # session): op/kind routes them before the session lookup
+        if op == "post_chunk" and kwargs.get("op") == "submit_session":
+            return self._post_engine_chunk(kwargs)
+        if op == "get_chunk" and kwargs.get("kind") == "wait_session":
+            return await self._get_engine_chunk(kwargs)
 
         sess = self._session(kwargs)
         if op == "post_chunk":
@@ -486,15 +500,30 @@ class SafeBroker:
                 # never a fresh buffer — PROTOCOL.md §6 repeat rule
                 return {"seq": seq, "received": tr.asm.total,
                         "total": tr.asm.total, "complete": True}
+            if (tr is not None and tr.owner == owner
+                    and xfer < tr.xfer):
+                # stale frame of this uploader's own ABANDONED stream
+                # (xfer ids are monotone per uploader; a streaming
+                # combine restarts under a fresh xfer after an upstream
+                # identity change): discard — it must never clobber the
+                # newer stream's buffer
+                return {"seq": seq, "received": 0, "total": total,
+                        "complete": False, "superseded": True}
             if (tr is not None and not tr.same_transfer(owner, xfer)
+                    and tr.owner != owner
                     and not tr.posted
                     and now - tr.last_chunk_at < self.progress_timeout):
-                # the slot is owned by a DIFFERENT transfer that is
-                # still actively receiving chunks: discard this frame
-                # instead of replacing the buffer (last-writer-wins
-                # would let two interleaved uploads clobber each other
-                # forever). The losing uploader sees `superseded` and
-                # falls back to the protocol's own reset/timeout path.
+                # the slot is owned by a DIFFERENT uploader's transfer
+                # that is still actively receiving chunks: discard this
+                # frame instead of replacing the buffer (last-writer-
+                # wins would let two interleaved uploads clobber each
+                # other forever). The losing uploader sees `superseded`
+                # and falls back to the protocol's own reset/timeout
+                # path. An uploader's own NEWER xfer is exempt: it
+                # always replaces its older stream (uploaders are
+                # sequential — a new xfer for the slot is a deliberate
+                # restart, e.g. a partial combine abandoned after a
+                # repost upstream).
                 return {"seq": seq, "received": 0, "total": total,
                         "complete": False, "superseded": True}
             if tr is None or not tr.same_transfer(owner, xfer) or tr.posted:
@@ -660,12 +689,19 @@ class SafeBroker:
         return self.engine
 
     def _prune_engine_sessions(self) -> None:
-        """Drop completed-but-never-claimed sessions past the TTL."""
-        cutoff = asyncio.get_running_loop().time() - self.engine_session_ttl
+        """Drop completed-but-never-claimed sessions past the TTL (and
+        with them their flattened-result cache and any staged chunk
+        uploads abandoned mid-stream)."""
+        now = asyncio.get_running_loop().time()
+        cutoff = now - self.engine_session_ttl
         for sid, done_at in list(self._engine_done.items()):
             if done_at < cutoff:
                 self._engine_done.pop(sid, None)
                 self._engine_sessions.pop(sid, None)
+                self._engine_flat.pop(sid, None)
+        for key, ent in list(self._engine_uploads.items()):
+            if ent["at"] < cutoff:
+                del self._engine_uploads[key]
 
     def _submit_session(self, kwargs: dict) -> dict:
         engine = self._require_engine()
@@ -683,13 +719,6 @@ class SafeBroker:
                     f"{name} must have shape ({engine.n},), got "
                     f"{np.asarray(arr).shape}")
         rounds = int(kwargs.get("rounds", 1))
-        # the eventual wait_session response carries rounds × V f32
-        # results in ONE frame — refuse up front what could never be
-        # answered rather than discovering it at response-encode time
-        if rounds * engine.V * 4 > wire.MAX_FRAME // 2:
-            raise wire.WireError(
-                f"rounds={rounds} would produce a wait_session response "
-                f"beyond MAX_FRAME; split the submission")
         sess = engine.submit(
             values,
             rounds=rounds,
@@ -710,6 +739,7 @@ class SafeBroker:
         if sess is None:
             raise wire.WireError(f"unknown engine session {sid}")
         timeout = kwargs.get("timeout")
+        elide = bool(kwargs.get("elide_results", False))
         loop = asyncio.get_running_loop()
         deadline = None if timeout is None else loop.time() + float(timeout)
         # completion is signalled by the engine's on_complete hook
@@ -723,8 +753,107 @@ class SafeBroker:
         # NOT evicted here: if the response fails to frame/send, the
         # tenant can re-issue wait_session (idempotent read); eviction
         # happens via the engine_session_ttl prune after completion
+        if elide:
+            # chunk-aware client: it streamed (or will stream) the
+            # results via get_chunk kind=wait_session — the completion
+            # handshake travels without the bulk arrays
+            return {"status": "done", "rounds": sess.rounds_done,
+                    "results": None, "chunked": True}
+        results = [np.asarray(r) for r in sess.results]
+        if sum(int(r.size) for r in results) * 4 > wire.MAX_FRAME - 4096:
+            raise wire.WireError(
+                f"wait_session results for sid={sid} exceed one frame; "
+                f"fetch them chunked (get_chunk kind=wait_session, then "
+                f"wait_session with elide_results)")
         return {"status": "done", "rounds": sess.rounds_done,
-                "results": [np.asarray(r) for r in sess.results]}
+                "results": results}
+
+    def _post_engine_chunk(self, kwargs: dict):
+        """One chunk of an oversized submit_session values upload. On
+        the final chunk the reassembled flat f32 vector is reshaped to
+        (engine.n, V) and submitted — the ack then carries the ``sid``.
+        Repeats after completion re-ack the same sid (idempotent)."""
+        engine = self._require_engine()
+        owner = int(kwargs.get("node", 0))
+        xfer = int(kwargs["xfer"])
+        seq = int(kwargs["seq"])
+        total = int(kwargs["total"])
+        chunk_words = int(kwargs["chunk_words"])
+        payload = kwargs.get("payload")
+        if not isinstance(payload, np.ndarray) or payload.ndim != 1:
+            raise wire.WireError("post_chunk payload must be a flat array")
+        self.engine_chunk_frames_in += 1
+        key = (owner, xfer)
+        ent = self._engine_uploads.get(key)
+        if ent is not None and ent["sid"] is not None:
+            return {"seq": seq, "received": ent["asm"].total,
+                    "total": ent["asm"].total, "complete": True,
+                    "sid": ent["sid"]}
+        if ent is None:
+            meta = {k: v for k, v in kwargs.items()
+                    if k not in ("payload", "op", "xfer", "seq", "total",
+                                 "chunk_words", "node", "session")}
+            ent = {"asm": wire.ChunkAssembler(total),
+                   "chunk_words": chunk_words, "meta": meta, "sid": None,
+                   "at": asyncio.get_running_loop().time()}
+            self._engine_uploads[key] = ent
+        if ent["asm"].total != total or ent["chunk_words"] != chunk_words:
+            raise wire.WireError(
+                f"chunk total/chunk_words mismatch within transfer {xfer}")
+        ent["at"] = asyncio.get_running_loop().time()
+        done = ent["asm"].add(seq, payload)
+        res = {"seq": seq, "received": len(ent["asm"].chunks),
+               "total": total, "complete": done}
+        if done:
+            flat = ent["asm"].assemble().astype(np.float32, copy=False)
+            if flat.size % engine.n:
+                raise wire.WireError(
+                    f"submit values of {flat.size} words do not divide "
+                    f"into {engine.n} learners")
+            values = flat.reshape(engine.n, flat.size // engine.n)
+            sub = self._submit_session(dict(ent["meta"], values=values))
+            ent["sid"] = sub["sid"]
+            res["sid"] = sub["sid"]
+        return res
+
+    async def _get_engine_chunk(self, kwargs: dict):
+        """Long-poll for one chunk of a completed engine session's
+        results, flattened round-major (rounds × V f32). Never counted;
+        the client issues ``wait_session`` with ``elide_results`` for
+        the completion handshake."""
+        self._require_engine()
+        sid = int(kwargs["sid"])
+        seq = int(kwargs["seq"])
+        words = int(kwargs.get("words", wire.DEFAULT_CHUNK_WORDS))
+        if words < 1:
+            raise wire.WireError(f"words must be >= 1, got {words}")
+        sess = self._engine_sessions.get(sid)
+        if sess is None:
+            raise wire.WireError(f"unknown engine session {sid}")
+        timeout = kwargs.get("timeout")
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + float(timeout)
+
+        def probe():
+            if not (sid in self._engine_done or sess.done):
+                return None
+            flat = self._engine_flat.get(sid)
+            if flat is None:
+                flat = (np.concatenate(
+                    [np.asarray(r, np.float32).ravel()
+                     for r in sess.results])
+                    if sess.results else np.empty(0, np.float32))
+                self._engine_flat[sid] = flat
+            total = wire.num_chunks(flat.size, words)
+            if seq >= total:
+                raise wire.WireError(f"chunk seq {seq} >= total {total}")
+            self.engine_chunk_frames_out += 1
+            return {"seq": seq, "total": total, "last": seq == total - 1,
+                    "rounds": sess.rounds_done,
+                    "payload": wire.chunk_slice(flat, seq, words)}
+
+        res = await _park(self._engine_cond, probe, deadline)
+        return res if res is not None else {"status": "timeout"}
 
     async def _engine_loop(self) -> None:
         """Step the engine while work is queued. ``step()`` runs on the

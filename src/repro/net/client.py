@@ -41,6 +41,7 @@ builds the callables) and ships its model delta through the broker.
 from __future__ import annotations
 
 import asyncio
+import collections
 import dataclasses
 import itertools
 import time
@@ -49,7 +50,8 @@ from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.core.costs import CostModel, EDGE
-from repro.core.machines import LearnerGen, build_round_machines
+from repro.core.machines import LearnerCrypto, LearnerGen, build_round_machines
+from repro.core.session import RoundCursor
 from repro.net import wire
 from repro.net.faults import DropPacket, Interceptor, LearnerCrashed
 from repro.topology import RingTopology
@@ -82,15 +84,45 @@ class WireClient:
         self.bytes_received = 0
         self.requests = 0
         self.chunk_frames = 0
+        self.streamed_combines = 0
         self._reader: Optional[asyncio.StreamReader] = None
         self._writer: Optional[asyncio.StreamWriter] = None
+        self._aux: Optional["WireClient"] = None
 
     async def connect(self) -> "WireClient":
         self._reader, self._writer = await asyncio.open_connection(
             self.host, self.port)
         return self
 
+    @property
+    def total_bytes_sent(self) -> int:
+        """Bytes sent including a still-open aux channel (whose counters
+        only fold into this client on close)."""
+        return self.bytes_sent + (
+            self._aux.bytes_sent if self._aux is not None else 0)
+
+    async def aux(self) -> "WireClient":
+        """Lazily-connected second connection to the same broker — the
+        upload channel of the streaming combine (inbound chunks arrive
+        on this connection while outbound chunks ship on the aux one, so
+        neither direction queues behind the other's responses). Shares
+        the node id and interceptor (churn schedules count ops across
+        both), and folds its byte counters into this client on close."""
+        if self._aux is None:
+            self._aux = await WireClient(
+                self.host, self.port, node=self.node,
+                interceptor=self.interceptor,
+                retry_backoff=self.retry_backoff).connect()
+        return self._aux
+
     async def close(self) -> None:
+        if self._aux is not None:
+            aux, self._aux = self._aux, None
+            await aux.close()
+            self.bytes_sent += aux.bytes_sent
+            self.bytes_received += aux.bytes_received
+            self.requests += aux.requests
+            self.chunk_frames += aux.chunk_frames
         if self._writer is not None:
             self._writer.close()
             try:
@@ -173,14 +205,23 @@ class WireClient:
         self.chunk_frames += 1
         await self._recv("post_chunk")
 
-    async def get_chunked(self, kind: str, kwargs: dict, session: int,
-                          chunk_words: int,
-                          deadline: Optional[float]) -> Any:
-        """Pull one logical array as a chunk stream, then issue the
-        logical consume (``elide_payload=True``) and inject the
-        reassembled array into its response. Returns the consume
-        response, or ``{"status": "timeout"}`` when the deadline lapses
-        mid-stream (matching the plain long-poll contract)."""
+    async def _chunk_stream(self, kind: str, kwargs: dict, session: int,
+                            chunk_words: int, deadline: Optional[float],
+                            depth: int, on_chunk=None, on_restart=None):
+        """Shared inbound chunk pump: pull one logical array chunk-by-
+        chunk with up to ``depth`` get_chunk requests in flight ahead of
+        the chunk being processed (requests for the lowest missing seqs;
+        responses come back in request order on this connection).
+
+        ``on_chunk(seq, payload, from_node, total)`` fires (awaited) for
+        every chunk first seen under the current transfer identity — the
+        streaming combine's hook. An identity change mid-stream (the
+        array was reposted / re-elected away) restarts assembly and
+        fires ``on_restart()`` so a partially-combined buffer is
+        abandoned, never mixed across identities.
+
+        Returns ``(assembler, consume_guard_time)`` on completion or a
+        ``{"status": "timeout"}`` dict when the deadline lapses."""
         loop = asyncio.get_running_loop()
 
         def remaining() -> Optional[float]:
@@ -190,58 +231,250 @@ class WireClient:
             return dict(kwargs, session=session, kind=kind, seq=seq,
                         words=chunk_words, timeout=remaining())
 
+        async def drain(inflight) -> None:
+            for _ in range(len(inflight)):
+                await self._recv("get_chunk")
+                self.chunk_frames += 1
+            inflight.clear()
+
         asm: Optional[wire.ChunkAssembler] = None
         xid: Any = None
         tid: Any = None  # consume-guard timestamp of the current identity
-        seq = 0
-        outstanding = False  # a get_chunk frame in flight beyond `seq`
+        inflight: collections.deque = collections.deque()
+        cursor = 1  # lowest seq never requested under the current identity
+        await self._send("get_chunk", chunk_req(0))
+        inflight.append(0)
         while True:
             rem = remaining()
             if rem is not None and rem <= 0:
-                if outstanding:
-                    await self._recv("get_chunk")  # drain, then give up
+                await drain(inflight)  # each request carried a deadline
                 return {"status": "timeout"}
-            if not outstanding:
-                await self._send("get_chunk", chunk_req(seq))
             res = await self._recv("get_chunk")
-            outstanding = False
+            inflight.popleft()
             self.chunk_frames += 1
             if res.get("status") == "timeout":
+                await drain(inflight)
                 return res
             if (asm is None or res.get("xfer") != xid
                     or int(res["total"]) != asm.total):
                 # first chunk — or the transfer identity changed under
                 # us (the array was reposted / re-elected away):
                 # restart assembly rather than mix two transfers
+                restarted = asm is not None
                 asm = wire.ChunkAssembler(int(res["total"]))
                 xid = res.get("xfer")
                 tid = None
-                seq = 0  # restart the ascending request cursor too
+                cursor = 0
+                if restarted and on_restart is not None:
+                    on_restart()
             if res.get("time") is not None:
                 tid = res["time"]
-            done = asm.add(int(res["seq"]), res["payload"])
-            if not done:
-                # prefetch the lowest missing chunk (requests go out in
-                # ascending order, so advancing a cursor past what we
-                # hold finds it in O(1) amortized): its request rides
-                # ahead of this chunk's bookkeeping (and of the
-                # broker-side wait)
-                while seq in asm.chunks:
-                    seq += 1
-                await self._send("get_chunk", chunk_req(seq))
-                outstanding = True
-                continue
-            # the logical consume, guarded by the streamed entry's
-            # timestamp: the broker refuses to consume (and elide) any
-            # OTHER posting — a reset racing us parks into the normal
-            # timeout path instead of corrupting the round
-            final = await self.request(kind, dict(
-                kwargs, session=session, elide_payload=True,
-                expect_time=tid, timeout=remaining()))
-            if final.get("status") == "timeout":
-                return final
-            field = "aggregate" if kind == "get_aggregate" else "average"
-            return dict(final, **{field: asm.assemble()})
+            seq = int(res["seq"])
+            fresh = seq not in asm.chunks
+            done = asm.add(seq, res["payload"])
+            if fresh and on_chunk is not None:
+                await on_chunk(seq, res["payload"], res.get("from_node"),
+                               asm.total)
+            if done:
+                if inflight:  # stale prefetches from before a restart
+                    await drain(inflight)
+                return asm, tid
+            # top the pipeline up to `depth`; the ascending cursor finds
+            # the lowest unrequested chunk in O(1) amortized (it only
+            # rewinds on an identity restart, where the in-flight checks
+            # keep requests unique), and each request rides ahead of the
+            # broker-side wait (and, in the streaming combine, of the
+            # chunk's crypto)
+            while len(inflight) < depth:
+                while cursor < asm.total and (cursor in asm.chunks
+                                              or cursor in inflight):
+                    cursor += 1
+                if cursor >= asm.total:
+                    break
+                await self._send("get_chunk", chunk_req(cursor))
+                inflight.append(cursor)
+                cursor += 1
+
+    async def get_chunked(self, kind: str, kwargs: dict, session: int,
+                          chunk_words: int, deadline: Optional[float],
+                          depth: int = wire.DEFAULT_PREFETCH_DEPTH) -> Any:
+        """Pull one logical array as a chunk stream, then issue the
+        logical consume (``elide_payload=True``) and inject the
+        reassembled array into its response. Returns the consume
+        response, or ``{"status": "timeout"}`` when the deadline lapses
+        mid-stream (matching the plain long-poll contract)."""
+        got = await self._chunk_stream(kind, kwargs, session, chunk_words,
+                                       deadline, depth)
+        if isinstance(got, dict):
+            return got  # timeout
+        asm, tid = got
+        loop = asyncio.get_running_loop()
+        # the logical consume, guarded by the streamed entry's
+        # timestamp: the broker refuses to consume (and elide) any
+        # OTHER posting — a reset racing us parks into the normal
+        # timeout path instead of corrupting the round
+        final = await self.request(kind, dict(
+            kwargs, session=session, elide_payload=True,
+            expect_time=tid,
+            timeout=None if deadline is None else deadline - loop.time()))
+        if final.get("status") == "timeout":
+            return final
+        field = "aggregate" if kind == "get_aggregate" else "average"
+        return dict(final, **{field: asm.assemble()})
+
+    async def stream_combine(self, skwargs: dict, session: int,
+                             chunk_words: int, deadline: Optional[float],
+                             depth: int = wire.DEFAULT_PREFETCH_DEPTH) -> Any:
+        """The fused §5.1.2 hop: pull the inbound aggregate chunk-by-
+        chunk and, per chunk, run the machine's combine closure
+        (seekable-pad decrypt + add + re-encrypt) and ship the result
+        downstream via ``post_chunk`` on the aux connection — chunk k's
+        crypto and upload overlap chunk k+1's transfer, and the broker
+        relays uploaded chunks onward before this upload completes (§8's
+        pipelined schedule end-to-end on the wire).
+
+        Resolves the machine's ``("stream", ...)`` yield with
+        ``{"status": "streamed", "combined": <plaintext partial>,
+        "uploaded": bool, ...consume fields...}``. An upstream identity
+        change restarts the combine under a fresh upload xfer (the
+        broker replaces our own older stream; stale frames can't clobber
+        it); a superseded upload degrades to ``uploaded=False`` and the
+        machine posts the whole vector itself. Timeouts match the plain
+        long-poll contract."""
+        node = skwargs["node"]
+        group = skwargs["group"]
+        to_node = skwargs["to_node"]
+        combine = skwargs["combine"]
+        up = await self.aux()
+        loop = asyncio.get_running_loop()
+
+        st = {"xfer": next(_xfer_ids), "dead": False, "complete": False,
+              "sent": 0}
+        acks: collections.deque = collections.deque()  # xfer per sent frame
+        combs: Dict[int, np.ndarray] = {}
+
+        async def drain_ack() -> None:
+            ack = await up._recv("post_chunk")
+            up.chunk_frames += 1
+            xf = acks.popleft()
+            if xf != st["xfer"]:
+                return  # ack of an abandoned stream
+            if ack.get("superseded"):
+                st["dead"] = True
+            elif ack.get("complete"):
+                st["complete"] = True
+
+        async def on_chunk(seq, payload, src, total) -> None:
+            out, comb = combine(seq * chunk_words, payload, src)
+            combs[seq] = comb
+            if st["dead"]:
+                return
+            await up._send("post_chunk", dict(
+                session=session, op="post_aggregate", xfer=st["xfer"],
+                seq=seq, total=total, chunk_words=chunk_words,
+                from_node=node, to_node=to_node, group=group,
+                payload=out))
+            acks.append(st["xfer"])
+            st["sent"] += 1
+            while len(acks) > depth:
+                await drain_ack()
+
+        def on_restart() -> None:
+            # upstream identity changed under a partial combine: abandon
+            # it — fresh upload xfer (replaces our older stream at the
+            # broker), fresh plaintext buffer
+            combs.clear()
+            st.update(xfer=next(_xfer_ids), dead=False, complete=False,
+                      sent=0)
+
+        got = await self._chunk_stream(
+            "get_aggregate", dict(node=node, group=group), session,
+            chunk_words, deadline, depth, on_chunk=on_chunk,
+            on_restart=on_restart)
+        while acks:
+            await drain_ack()
+        if isinstance(got, dict):
+            return got  # timeout (partial upload is left to go stale)
+        asm, tid = got
+        uploaded = (st["complete"] and not st["dead"]
+                    and st["sent"] == asm.total)
+        # the counted consume of the inbound posting, expect_time-guarded
+        # exactly like the buffered path
+        final = await self.request("get_aggregate", dict(
+            node=node, group=group, session=session, elide_payload=True,
+            expect_time=tid,
+            timeout=None if deadline is None else deadline - loop.time()))
+        if final.get("status") == "timeout":
+            return final
+        if uploaded:
+            self.streamed_combines += 1
+        combined = np.concatenate([combs[s] for s in range(asm.total)])
+        return dict(final, status="streamed", combined=combined,
+                    uploaded=uploaded)
+
+    # -- engine plane over the chunk ops (oversized payloads) -------------
+    async def submit_session_chunked(self, kwargs: dict,
+                                     chunk_words: int) -> dict:
+        """``submit_session`` whose ``values`` ride the §6 chunk plane —
+        for contribution matrices beyond one frame (the broker reshapes
+        the reassembled flat vector to its engine's (n, V)). Returns
+        ``{"sid": ...}`` like the plain op."""
+        values = np.ascontiguousarray(
+            np.asarray(kwargs["values"], np.float32)).ravel()
+        total = wire.num_chunks(values.size, chunk_words)
+        meta = {k: v for k, v in kwargs.items() if k != "values"}
+        xfer = next(_xfer_ids)
+        sid = None
+        for seq in range(total):
+            res = await self.request("post_chunk", dict(
+                meta, op="submit_session", node=self.node, xfer=xfer,
+                seq=seq, total=total, chunk_words=chunk_words,
+                payload=wire.chunk_slice(values, seq, chunk_words)))
+            self.chunk_frames += 1
+            if res.get("complete"):
+                sid = res["sid"]
+        return {"sid": sid}
+
+    async def wait_session_chunked(self, sid: int, *,
+                                   timeout: Optional[float] = None,
+                                   chunk_words: int =
+                                   wire.DEFAULT_CHUNK_WORDS) -> dict:
+        """``wait_session`` whose results ride the §6 chunk plane — for
+        rounds × V beyond one frame. The elided handshake carries
+        completion; the flat round-major results stream as get_chunk
+        frames and are reshaped back to per-round arrays here.
+        ``timeout`` bounds the WHOLE call (one shared deadline, like
+        every other long-poll), not each chunk."""
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + float(timeout)
+
+        def remaining() -> Optional[float]:
+            return None if deadline is None else deadline - loop.time()
+
+        final = await self.request("wait_session", {
+            "sid": sid, "timeout": timeout, "elide_results": True})
+        if final.get("status") != "done":
+            return final
+        rounds = int(final["rounds"])
+        parts, total, seq = [], None, 0
+        while total is None or seq < total:
+            rem = remaining()
+            if rem is not None and rem <= 0:
+                return {"status": "timeout"}
+            res = await self.request("get_chunk", {
+                "kind": "wait_session", "sid": sid, "seq": seq,
+                "words": chunk_words, "timeout": rem})
+            if res.get("status") == "timeout":
+                return res
+            self.chunk_frames += 1
+            total = int(res["total"])
+            parts.append(res["payload"])
+            seq += 1
+        flat = (np.concatenate(parts) if parts
+                else np.empty(0, np.float32))
+        V = flat.size // rounds if rounds else 0
+        return {"status": "done", "rounds": rounds,
+                "results": [flat[r * V:(r + 1) * V] for r in range(rounds)]}
 
 
 async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
@@ -249,7 +482,9 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
                         timeout_scale: float = 1.0,
                         compute_scale: float = 0.0,
                         chunk_words: Optional[int] = None,
-                        payload_words: Optional[int] = None) -> Any:
+                        payload_words: Optional[int] = None,
+                        prefetch_depth: Optional[int] = None,
+                        stream: bool = True) -> Any:
     """Run one state machine to completion over the wire.
 
     ``timeout`` mapping for ``wait`` yields: ``"aggregation"`` becomes
@@ -262,9 +497,16 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
     With ``chunk_words`` set and ``payload_words`` (the round's vector
     length, weighted word included) exceeding it, array traffic takes
     the chunked plane; the machines are driven unchanged either way.
+    ``prefetch_depth`` caps in-flight chunk requests (default
+    ``wire.DEFAULT_PREFETCH_DEPTH``); ``stream=False`` disables the
+    chunk-granular combine (the machine's ``("stream", ...)`` yield
+    falls back to reassemble-then-combine — the ablation baseline of
+    ``benchmarks/streaming.py``).
     """
     chunked = (chunk_words is not None and payload_words is not None
                and payload_words > chunk_words)
+    depth = (wire.DEFAULT_PREFETCH_DEPTH if prefetch_depth is None
+             else max(1, int(prefetch_depth)))
     loop = asyncio.get_running_loop()
 
     def wall_timeout(timeout) -> Optional[float]:
@@ -304,12 +546,83 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
             if chunked and wkind in ("get_aggregate", "get_average"):
                 deadline = None if wall is None else loop.time() + wall
                 send_value = await client.get_chunked(
-                    wkind, kwargs, session, chunk_words, deadline)
+                    wkind, kwargs, session, chunk_words, deadline, depth)
             else:
                 send_value = await client.request(
                     wkind, dict(kwargs, session=session, timeout=wall))
+        elif kind == "stream":
+            # the fused receive+combine+post hop: stream when the
+            # payload is chunked, otherwise resolve as the plain
+            # get_aggregate wait (the machine falls back to the
+            # whole-vector combine — identical bits and counts)
+            _, skwargs, _nbytes, timeout = item
+            wall = wall_timeout(timeout)
+            wait_kw = dict(node=skwargs["node"], group=skwargs["group"])
+            if chunked and stream:
+                deadline = None if wall is None else loop.time() + wall
+                send_value = await client.stream_combine(
+                    skwargs, session, chunk_words, deadline, depth)
+            elif chunked:
+                deadline = None if wall is None else loop.time() + wall
+                send_value = await client.get_chunked(
+                    "get_aggregate", wait_kw, session, chunk_words,
+                    deadline, depth)
+            else:
+                send_value = await client.request(
+                    "get_aggregate",
+                    dict(wait_kw, session=session, timeout=wall))
         else:
             raise ValueError(f"unknown yield {item!r}")
+
+
+async def _drive_round_machines(machines: Dict[int, LearnerGen], acquire,
+                                release, session: int, *,
+                                aggregation_timeout: float,
+                                timeout_scale: float, compute_scale: float,
+                                chunk_words: Optional[int],
+                                payload_words: int,
+                                prefetch_depth: Optional[int],
+                                stream: bool):
+    """Drive one round's machines to completion, one task per live
+    learner — the round core shared by :func:`run_safe_round_net` and
+    :class:`PersistentNetSession`. ``acquire(node)`` supplies the node's
+    connected client; ``release(node, client, crashed)`` disposes or
+    retains it afterwards. Returns ``(wall_s, crashed_nodes,
+    streamed_combines)``; the first learner exception (other than a
+    churn crash) re-raises after every task settled."""
+    crashed: list = []
+    streamed = [0]
+
+    async def one(node: int, gen: LearnerGen) -> Any:
+        client = await acquire(node)
+        before = client.streamed_combines
+        node_crashed = False
+        try:
+            return await drive_learner(
+                gen, client, session,
+                aggregation_timeout=aggregation_timeout,
+                timeout_scale=timeout_scale, compute_scale=compute_scale,
+                chunk_words=chunk_words, payload_words=payload_words,
+                prefetch_depth=prefetch_depth, stream=stream)
+        except LearnerCrashed:
+            node_crashed = True
+            crashed.append(node)  # mid-round churn: learner just stops
+            return None
+        finally:
+            streamed[0] += client.streamed_combines - before
+            await release(node, client, node_crashed)
+
+    t0 = time.perf_counter()
+    # return_exceptions: let every learner settle (each releases its
+    # own connection) instead of abandoning running tasks on the first
+    # error, then surface the first failure
+    settled = await asyncio.gather(
+        *(one(node, gen) for node, gen in machines.items()),
+        return_exceptions=True)
+    for r in settled:
+        if isinstance(r, BaseException):
+            raise r
+    return time.perf_counter() - t0, tuple(crashed), streamed[0]
 
 
 @dataclasses.dataclass
@@ -326,6 +639,9 @@ class NetResult:
     monitor_reposts: int
     initiator_elections: int
     crashed_nodes: tuple = ()
+    #: hops that ran the chunk-granular streaming combine end-to-end
+    #: (inbound decrypt+add+re-encrypt per chunk, outbound landed)
+    streamed_combines: int = 0
 
 
 async def run_safe_round_net(
@@ -348,6 +664,8 @@ async def run_safe_round_net(
     timeout_scale: float = 1.0,
     compute_scale: float = 0.0,
     chunk_words: Optional[int] = None,
+    prefetch_depth: Optional[int] = None,
+    stream: bool = True,
 ) -> NetResult:
     """One full aggregation round over the wire — the transport twin of
     :func:`repro.core.protocol.run_safe_round` (same signature spirit,
@@ -364,7 +682,10 @@ async def run_safe_round_net(
     ``chunk_words`` enables the chunked transfer plane for payloads
     longer than that many elements; by default it switches on
     automatically once the payload could not safely fit one frame
-    (AUTO_CHUNK_WORDS).
+    (AUTO_CHUNK_WORDS). Chunked hops run the chunk-granular streaming
+    combine (crypto overlapped with transfer inside each hop) unless
+    ``stream=False``; ``prefetch_depth`` caps each learner's in-flight
+    chunk requests (default ``wire.DEFAULT_PREFETCH_DEPTH``).
     """
     if mode not in ("safe", "saf"):
         raise ValueError(f"wire plane runs 'safe'/'saf', got {mode!r}")
@@ -394,34 +715,20 @@ async def run_safe_round_net(
         sid = created["session"]
         wall_agg = created["aggregation_timeout"]
 
-        crashed = []
+        async def acquire(node: int) -> WireClient:
+            return await WireClient(*addr, node=node,
+                                    interceptor=interceptor).connect()
 
-        async def one(node: int, gen: LearnerGen) -> Any:
-            client = WireClient(*addr, node=node, interceptor=interceptor)
-            await client.connect()
-            try:
-                return await drive_learner(
-                    gen, client, sid, aggregation_timeout=wall_agg,
-                    timeout_scale=timeout_scale, compute_scale=compute_scale,
-                    chunk_words=chunk_words, payload_words=payload_words)
-            except LearnerCrashed:
-                crashed.append(node)  # mid-round churn: learner just stops
-                return None
-            finally:
-                admin.bytes_sent += client.bytes_sent
-                await client.close()
+        async def release(node: int, client: WireClient, _crashed: bool):
+            await client.close()  # folds the aux channel's counters in
+            admin.bytes_sent += client.bytes_sent
 
-        t0 = time.perf_counter()
-        # return_exceptions: let every learner settle (each closes its
-        # own connection in its finally) instead of abandoning running
-        # tasks on the first error, then surface the first failure
-        settled = await asyncio.gather(
-            *(one(node, gen) for node, gen in machines.items()),
-            return_exceptions=True)
-        for r in settled:
-            if isinstance(r, BaseException):
-                raise r
-        wall = time.perf_counter() - t0
+        wall, crashed, streamed = await _drive_round_machines(
+            machines, acquire, release, sid,
+            aggregation_timeout=wall_agg, timeout_scale=timeout_scale,
+            compute_scale=compute_scale, chunk_words=chunk_words,
+            payload_words=payload_words, prefetch_depth=prefetch_depth,
+            stream=stream)
 
         stats = await admin.request("get_stats", {"session": sid})
         final = await admin.request("peek_average", {"session": sid})
@@ -444,8 +751,225 @@ async def run_safe_round_net(
         bytes_sent=admin.bytes_sent,
         monitor_reposts=stats["monitor_reposts"],
         initiator_elections=stats["initiator_elections"],
-        crashed_nodes=tuple(crashed),
+        crashed_nodes=crashed,
+        streamed_combines=streamed,
     )
+
+
+class PersistentNetSession:
+    """One broker session, one set of learner connections, R rounds.
+
+    The per-round path of :func:`run_safe_round_net` rebuilds everything
+    every round: a fresh broker session, n fresh TCP connections, and n
+    fresh :class:`LearnerCrypto` objects (full key re-derivation). This
+    class keeps all three alive across rounds — ``reset_round`` clears
+    the controller's round state between rounds, a
+    :class:`repro.core.session.RoundCursor` hands each round a fresh
+    counter base (no pad reuse), and the crypto cache means **no key
+    derivation after Round 0** — the paper's Round-0 amortization, at
+    the transport. Each round's published average is bit-identical to
+    an independent ``run_safe_round(values, counter=base)`` sim round,
+    and the per-round MessageStats delta still satisfies the §5 closed
+    forms (asserted in tests/test_net.py).
+
+    Usage::
+
+        sess = PersistentNetSession(addr, n, chunk_words=4096)
+        await sess.open()
+        try:
+            for r in range(R):
+                res = await sess.run_round(values_r)
+        finally:
+            await sess.close()
+
+    (or ``async with PersistentNetSession(...) as sess:``.)
+    """
+
+    def __init__(self, addr: Addr, n: int, *,
+                 mode: str = "safe",
+                 subgroups: int = 1,
+                 cost: CostModel = EDGE,
+                 aggregation_timeout: Optional[float] = None,
+                 symmetric_only: bool = False,
+                 scale_bits: int = 16,
+                 provisioning_seed: int = 0xC0FFEE,
+                 learner_master: int = 0x5EED,
+                 interceptor: Optional[Interceptor] = None,
+                 timeout_scale: float = 1.0,
+                 compute_scale: float = 0.0,
+                 chunk_words: Optional[int] = None,
+                 prefetch_depth: Optional[int] = None,
+                 stream: bool = True,
+                 words_per_round: Optional[int] = None,
+                 counter0: int = 0):
+        if mode not in ("safe", "saf"):
+            raise ValueError(f"wire plane runs 'safe'/'saf', got {mode!r}")
+        self.addr = addr
+        self.n = n
+        self.mode = mode
+        self.subgroups = subgroups
+        self.cost = cost
+        self.aggregation_timeout = aggregation_timeout
+        self.symmetric_only = symmetric_only
+        self.scale_bits = scale_bits
+        self.provisioning_seed = provisioning_seed
+        self.learner_master = learner_master
+        self.interceptor = interceptor
+        self.timeout_scale = timeout_scale
+        self.compute_scale = compute_scale
+        self.chunk_words = chunk_words
+        self.prefetch_depth = prefetch_depth
+        self.stream = stream
+        self._words_per_round = words_per_round
+        self._counter0 = counter0
+        self.topo = RingTopology(n, subgroups)
+        self.topo.validate_privacy()
+        self.groups = self.topo.group_chains(node_base=1)
+        self.initiators = {r + 1 for r in self.topo.elect_initiators()}
+        self.sid: Optional[int] = None
+        self.rounds_done = 0
+        self._admin: Optional[WireClient] = None
+        self._clients: Dict[int, WireClient] = {}
+        self._crypto_cache: Dict[int, LearnerCrypto] = {}
+        self._cursor: Optional[RoundCursor] = None
+        self._wall_agg: float = 30.0
+        self._prev_stats: Dict[str, int] = {}
+        self._prev_bytes = 0
+        self._closed_bytes = 0  # bytes of connections dropped mid-session
+
+    async def open(self) -> "PersistentNetSession":
+        self._admin = await WireClient(*self.addr).connect()
+        created = await self._admin.request("create_session", {
+            "groups": self.groups,
+            "aggregation_timeout": self.aggregation_timeout})
+        self.sid = created["session"]
+        self._wall_agg = created["aggregation_timeout"]
+        return self
+
+    async def __aenter__(self) -> "PersistentNetSession":
+        return await self.open()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    async def _client(self, node: int) -> WireClient:
+        c = self._clients.get(node)
+        if c is None:
+            c = await WireClient(*self.addr, node=node,
+                                 interceptor=self.interceptor).connect()
+            self._clients[node] = c
+        return c
+
+    async def _drop_client(self, node: int) -> None:
+        c = self._clients.pop(node, None)
+        if c is not None:
+            await c.close()
+            self._closed_bytes += c.bytes_sent
+
+    async def run_round(self, values: np.ndarray, *,
+                        weights: Optional[np.ndarray] = None,
+                        failed_nodes: Iterable[int] = (),
+                        initiator_fails: bool = False,
+                        counter: Optional[int] = None) -> NetResult:
+        """One aggregation round on the live session. Rounds after the
+        first begin with ``reset_round``; the counter base comes from
+        the session's :class:`RoundCursor` unless ``counter`` pins it
+        (parity tests). Learner connections and key material are reused;
+        a learner that crashed last round reconnects (crash-resume
+        across the round boundary)."""
+        values = np.asarray(values, np.float32)
+        if values.shape[0] != self.n:
+            raise ValueError(
+                f"values has {values.shape[0]} rows for n={self.n}")
+        V = values.shape[1]
+        payload_words = V + 1 if weights is not None else V
+        if self._cursor is None:
+            self._cursor = RoundCursor(
+                self._words_per_round or payload_words, self._counter0)
+        if payload_words > self._cursor.words_per_round:
+            # a payload wider than the per-round counter stride would
+            # overlap the next round's pad words — silent keystream
+            # reuse, the one invariant this class must never break
+            raise ValueError(
+                f"payload of {payload_words} words exceeds this "
+                f"session's {self._cursor.words_per_round} words/round "
+                f"counter stride — size words_per_round for the widest "
+                f"round up front")
+        if counter is None:
+            counter = self._cursor.next_round()
+        chunk_words = self.chunk_words
+        if chunk_words is None and payload_words > AUTO_CHUNK_WORDS:
+            chunk_words = wire.DEFAULT_CHUNK_WORDS
+
+        failed = set(failed_nodes)
+        machines = build_round_machines(
+            values, self.topo, self.groups, self.initiators,
+            mode=self.mode, weights=weights, cost=self.cost,
+            symmetric_only=self.symmetric_only, scale_bits=self.scale_bits,
+            provisioning_seed=self.provisioning_seed,
+            learner_master=self.learner_master, counter=counter,
+            subgroups=self.subgroups, failed=failed,
+            initiator_fails=initiator_fails,
+            crypto_cache=self._crypto_cache)
+
+        if self.rounds_done > 0:
+            # new FL iteration on the same tenant: clear round state and
+            # stale chunk buffers, keep keys/counters/connections warm
+            await self._admin.request("reset_round", {"session": self.sid})
+
+        async def release(node: int, _client: WireClient, crashed: bool):
+            if crashed:
+                # the connection may hold half-sent frames / parked
+                # polls — drop it so the node rejoins cleanly next round
+                await self._drop_client(node)
+
+        wall, crashed, streamed = await _drive_round_machines(
+            machines, self._client, release, self.sid,
+            aggregation_timeout=self._wall_agg,
+            timeout_scale=self.timeout_scale,
+            compute_scale=self.compute_scale, chunk_words=chunk_words,
+            payload_words=payload_words,
+            prefetch_depth=self.prefetch_depth, stream=self.stream)
+
+        raw = await self._admin.request("get_stats", {"session": self.sid})
+        stats = {k: (raw[k] - self._prev_stats.get(k, 0)
+                     if isinstance(raw.get(k), int) else raw[k])
+                 for k in raw}
+        self._prev_stats = {k: v for k, v in raw.items()
+                            if isinstance(v, int)}
+        final = await self._admin.request("peek_average",
+                                          {"session": self.sid})
+        self.rounds_done += 1
+        total_bytes = (self._admin.bytes_sent + self._closed_bytes
+                       + sum(c.total_bytes_sent
+                             for c in self._clients.values()))
+        bytes_now = total_bytes - self._prev_bytes
+        self._prev_bytes = total_bytes
+        return NetResult(
+            average=None if final is None else final["average"],
+            weight_avg=None if final is None else final.get("weight_avg"),
+            wall_time=wall,
+            stats=stats,
+            bytes_sent=bytes_now,
+            monitor_reposts=stats["monitor_reposts"],
+            initiator_elections=stats["initiator_elections"],
+            crashed_nodes=crashed,
+            streamed_combines=streamed,
+        )
+
+    async def close(self) -> None:
+        for node in list(self._clients):
+            await self._drop_client(node)
+        if self._admin is not None:
+            if self.sid is not None:
+                try:
+                    await self._admin.request("delete_session",
+                                              {"session": self.sid})
+                except Exception:  # noqa: BLE001
+                    pass
+            await self._admin.close()
+            self._admin = None
+        self.sid = None
 
 
 async def run_federated_round_net(
@@ -486,6 +1010,21 @@ async def run_federated_round_net(
         raise ValueError(f"local_fns must be keyed 1..n, got {nodes}")
     if not set(nodes) - failed:
         raise ValueError("no live learners: every node is in failed_nodes")
+    values = await _collect_deltas(state, local_fns, failed, nodes)
+
+    res = await run_safe_round_net(
+        values, addr, weights=weights, counter=counter,
+        failed_nodes=failed, chunk_words=chunk_words, **round_kw)
+    if res.average is None:
+        return state, res
+    return apply_fn(state, res.average), res
+
+
+async def _collect_deltas(state: Any, local_fns, failed: set,
+                          nodes: list) -> np.ndarray:
+    """Run each live learner's local update in the default executor and
+    pack the deltas learner-major (shared by the single- and multi-round
+    federated runners)."""
     loop = asyncio.get_running_loop()
     deltas: Dict[int, np.ndarray] = {}
     for node in nodes:
@@ -499,10 +1038,65 @@ async def run_federated_round_net(
     values = np.zeros((len(nodes), sizes.pop()), np.float32)
     for node, d in deltas.items():
         values[node - 1] = d
+    return values
 
-    res = await run_safe_round_net(
-        values, addr, weights=weights, counter=counter,
-        failed_nodes=failed, chunk_words=chunk_words, **round_kw)
-    if res.average is None:
-        return state, res
-    return apply_fn(state, res.average), res
+
+async def run_federated_rounds_net(
+    state: Any,
+    local_fns: Mapping[int, Callable[[Any], np.ndarray]],
+    apply_fn: Callable[[Any, np.ndarray], Any],
+    addr: Addr,
+    *,
+    rounds: int,
+    weights: Optional[np.ndarray] = None,
+    counter0: int = 0,
+    words_per_round: Optional[int] = None,
+    failed_by_round: Optional[Mapping[int, Iterable[int]]] = None,
+    **session_kw,
+) -> Tuple[Any, list]:
+    """R federated rounds on ONE persistent broker session — the full
+    §8 pipeline on the wire, amortized the way the paper amortizes
+    Round 0.
+
+    Where :func:`run_federated_round_net` rebuilds session, connections
+    and key material every round, this keeps a
+    :class:`PersistentNetSession` alive for all ``rounds``: one
+    ``create_session``, one set of learner TCP connections, **no key
+    derivation after Round 0** (``machines.key_derivations()`` stays
+    flat), with ``reset_round`` + :class:`~repro.core.session.
+    RoundCursor` counter bases between rounds (no pad reuse). Deltas
+    chunk-stream through the chunk-granular combine by default.
+
+    ``failed_by_round`` maps round index → nodes dead that round (they
+    neither compute nor connect; §5.3/5.4 publish the survivors' mean,
+    and the nodes rejoin the next round — crash-resume across the round
+    boundary). ``session_kw`` forwards to
+    :class:`PersistentNetSession` (``chunk_words``, ``prefetch_depth``,
+    ``stream``, ``aggregation_timeout``, ...).
+
+    Returns ``(final_state, [NetResult per round])``.
+    """
+    nodes = sorted(local_fns)
+    if nodes != list(range(1, len(nodes) + 1)):
+        raise ValueError(f"local_fns must be keyed 1..n, got {nodes}")
+    failed_by_round = dict(failed_by_round or {})
+    results: list = []
+    sess = PersistentNetSession(
+        addr, len(nodes), counter0=counter0,
+        words_per_round=words_per_round, **session_kw)
+    await sess.open()
+    try:
+        for r in range(rounds):
+            failed = set(failed_by_round.get(r, ()))
+            if not set(nodes) - failed:
+                raise ValueError(
+                    f"round {r}: every node is in failed_by_round")
+            values = await _collect_deltas(state, local_fns, failed, nodes)
+            res = await sess.run_round(values, weights=weights,
+                                       failed_nodes=failed)
+            results.append(res)
+            if res.average is not None:
+                state = apply_fn(state, res.average)
+    finally:
+        await sess.close()
+    return state, results

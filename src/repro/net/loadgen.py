@@ -30,7 +30,11 @@ from typing import Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.net.broker import SafeBroker
-from repro.net.client import WireClient, run_safe_round_net
+from repro.net.client import (
+    PersistentNetSession,
+    WireClient,
+    run_safe_round_net,
+)
 
 Addr = Tuple[str, int]
 
@@ -73,21 +77,30 @@ async def run_engine_load(addr: Addr, *, tenants: int = 8,
                           rounds_per_tenant: int = 8, n: int = 8,
                           V: int = 1024, seed: int = 0,
                           warmup: bool = True,
-                          timeout: float = 300.0) -> LoadReport:
+                          timeout: float = 300.0,
+                          chunk_words: Optional[int] = None) -> LoadReport:
     """Each tenant submits ``rounds_per_tenant`` single-round sessions
-    back-to-back (closed-loop), measuring submit→published latency."""
+    back-to-back (closed-loop), measuring submit→published latency.
+
+    ``chunk_words`` routes submit values and result fetches over the §6
+    chunk plane — the path for engine payloads beyond one frame."""
     rng = np.random.RandomState(seed)
     tenant_vals = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
                    for _ in range(tenants)]
 
     async def submit_and_wait(client, vals, t, r):
-        sub = await client.request("submit_session", {
-            "values": vals, "rounds": 1,
-            "provisioning_seed": 0xC0FFEE + t,
-            "learner_master": 0x5EED + 17 * t,
-            "rotate0": r})
-        res = await client.request("wait_session",
-                                   {"sid": sub["sid"], "timeout": timeout})
+        sub_kw = {"values": vals, "rounds": 1,
+                  "provisioning_seed": 0xC0FFEE + t,
+                  "learner_master": 0x5EED + 17 * t,
+                  "rotate0": r}
+        if chunk_words is not None:
+            sub = await client.submit_session_chunked(sub_kw, chunk_words)
+            res = await client.wait_session_chunked(
+                sub["sid"], timeout=timeout, chunk_words=chunk_words)
+        else:
+            sub = await client.request("submit_session", sub_kw)
+            res = await client.request(
+                "wait_session", {"sid": sub["sid"], "timeout": timeout})
         if res.get("status") != "done":
             raise RuntimeError(f"tenant {t} round {r}: {res}")
         return res
@@ -122,12 +135,34 @@ async def run_engine_load(addr: Addr, *, tenants: int = 8,
     return _report("engine", tenants, lats, wall)
 
 
+def _check_round(t: int, r: int, res, vals: np.ndarray) -> None:
+    """Shared per-round sanity check for the protocol-load shapes."""
+    if res.crashed_nodes:
+        # churn plan fired: the published mean is over a subset whose
+        # membership depends on *when* each crash landed (before vs.
+        # after reposting) — value correctness under churn is pinned by
+        # tests/test_net.py, not the loadgen
+        return
+    if res.average is None:
+        raise RuntimeError(f"tenant {t} round {r}: no average")
+    exp = vals.mean(0)
+    if np.abs(res.average - exp).max() > 1e-2:
+        raise RuntimeError(f"tenant {t} round {r}: wrong average")
+
+
 async def run_protocol_load(addr: Addr, *, tenants: int = 4,
                             rounds_per_tenant: int = 3, n: int = 8,
                             V: int = 256, seed: int = 0,
-                            interceptor=None) -> LoadReport:
-    """Each tenant runs full n-learner SAFE rounds (its own broker
-    session per round) concurrently with every other tenant.
+                            interceptor=None,
+                            chunk_words: Optional[int] = None,
+                            prefetch_depth: Optional[int] = None,
+                            persistent: bool = False) -> LoadReport:
+    """Each tenant runs full n-learner SAFE rounds concurrently with
+    every other tenant — one broker session per round by default, or
+    (``persistent=True``) all of a tenant's rounds on ONE
+    :class:`~repro.net.client.PersistentNetSession` (shared keys,
+    connections and counter space — the amortized path the streaming
+    benchmark compares against the rebuild path).
 
     ``interceptor`` is either a shared Interceptor instance or a
     callable ``tenant_index -> Interceptor`` — use the factory form for
@@ -142,6 +177,22 @@ async def run_protocol_load(addr: Addr, *, tenants: int = 4,
     async def tenant(t: int) -> List[float]:
         ic = interceptor(t) if callable(interceptor) else interceptor
         lats = []
+        if persistent:
+            sess = PersistentNetSession(
+                addr, n, provisioning_seed=0xC0FFEE + t,
+                learner_master=0x5EED + 17 * t, interceptor=ic,
+                chunk_words=chunk_words, prefetch_depth=prefetch_depth,
+                words_per_round=V + 1)
+            await sess.open()
+            try:
+                for r in range(rounds_per_tenant):
+                    t0 = time.perf_counter()
+                    res = await sess.run_round(tenant_vals[t])
+                    lats.append(time.perf_counter() - t0)
+                    _check_round(t, r, res, tenant_vals[t])
+            finally:
+                await sess.close()
+            return lats
         for r in range(rounds_per_tenant):
             t0 = time.perf_counter()
             res = await run_safe_round_net(
@@ -149,19 +200,10 @@ async def run_protocol_load(addr: Addr, *, tenants: int = 4,
                 provisioning_seed=0xC0FFEE + t,
                 learner_master=0x5EED + 17 * t,
                 counter=r * (V + 1),
-                interceptor=ic)
+                interceptor=ic, chunk_words=chunk_words,
+                prefetch_depth=prefetch_depth)
             lats.append(time.perf_counter() - t0)
-            if res.crashed_nodes:
-                # churn plan fired: the published mean is over a subset
-                # whose membership depends on *when* each crash landed
-                # (before vs. after reposting) — value correctness under
-                # churn is pinned by tests/test_net.py, not the loadgen
-                continue
-            if res.average is None:
-                raise RuntimeError(f"tenant {t} round {r}: no average")
-            exp = tenant_vals[t].mean(0)
-            if np.abs(res.average - exp).max() > 1e-2:
-                raise RuntimeError(f"tenant {t} round {r}: wrong average")
+            _check_round(t, r, res, tenant_vals[t])
         return lats
 
     t0 = time.perf_counter()
@@ -178,6 +220,8 @@ async def run_paper_scale(
     failures: Iterable[int] = (),
     seed: int = 0,
     chunk_words: Optional[int] = None,
+    prefetch_depth: Optional[int] = None,
+    stream: bool = True,
     weights: Optional[np.ndarray] = None,
     progress_timeout: float = 0.3,
     monitor_interval: float = 0.1,
@@ -207,7 +251,8 @@ async def run_paper_scale(
     try:
         res = await run_safe_round_net(
             vals, addr, failed_nodes=failed, weights=weights,
-            chunk_words=chunk_words)
+            chunk_words=chunk_words, prefetch_depth=prefetch_depth,
+            stream=stream)
     finally:
         await broker.stop()
 
@@ -243,4 +288,5 @@ async def run_paper_scale(
         "chunk_frames_in": res.stats["chunk_frames_in"],
         "chunk_frames_out": res.stats["chunk_frames_out"],
         "transfers_completed": res.stats["transfers_completed"],
+        "streamed_combines": res.streamed_combines,
     }

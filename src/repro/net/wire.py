@@ -357,6 +357,14 @@ def encode_frame(body: bytes) -> bytes:
 #: uint32 per chunk, comfortably inside MAX_FRAME with headers to spare.
 DEFAULT_CHUNK_WORDS = 1 << 20
 
+#: default number of get_chunk requests a downloading client keeps in
+#: flight ahead of the chunk it is processing. 2 keeps the socket and
+#: the combine busy simultaneously without triple-buffering memory;
+#: picked by the prefetch-depth ablation in ``benchmarks/streaming.py``
+#: (depth 1 leaves the link idle during each combine, depth 4 measured
+#: no further gain on the localhost profile).
+DEFAULT_PREFETCH_DEPTH = 2
+
 
 def num_chunks(words: int, chunk_words: int) -> int:
     """Chunks needed for a ``words``-element vector (>= 1: a zero-length

@@ -13,9 +13,13 @@ Two runtimes consume the same local update:
     through the device-plane chain of ``core/chain.py``);
   * :func:`make_wire_federated` — per-learner standalone jit of the
     *identical* :func:`make_local_update` body, producing the numpy
-    callables :func:`repro.net.client.run_federated_round_net` drives
-    over a real broker (deltas travel the TCP chain of ``repro.net``,
-    chunk-streamed when larger than one frame — docs/PROTOCOL.md §6).
+    callables :func:`repro.net.client.run_federated_round_net` (one
+    round, session rebuilt per call) and
+    :func:`repro.net.client.run_federated_rounds_net` (R rounds on one
+    persistent broker session — key material, connections and counter
+    space amortized across rounds, deltas chunk-streamed through the
+    hop-level streaming combine) drive over a real broker
+    (docs/PROTOCOL.md §6/§11).
 
 Because both paths share one local-update function and both aggregation
 planes share one fixed-point/PRF substrate, a wire round's published
@@ -173,6 +177,14 @@ class WireFederated:
     apply_fn: Callable[[Any, np.ndarray], Any]
     payload_words: int
     last_losses: Dict[int, float]
+
+    def words_per_round(self, weighted: bool = True) -> int:
+        """Counter words one aggregation round consumes (the weighted
+        payload appends one weight word) — what a persistent session's
+        :class:`~repro.core.session.RoundCursor` must advance by, and
+        the per-round stride the in-SPMD plane's ``counter=`` must match
+        for cross-plane bit-parity."""
+        return self.payload_words + (1 if weighted else 0)
 
 
 def make_wire_federated(

@@ -11,7 +11,7 @@ from repro.crypto.prf import (
 from repro.crypto.fixedpoint import FixedPointCodec
 from repro.crypto.np_impl import (
     threefry2x32_np, keystream_np, keystream_pair_lanes_np, derive_key_np,
-    derive_pair_key_np, NpFixedPoint)
+    derive_pair_key_np, keystream_slice_np, NpFixedPoint)
 
 
 class TestThreefry:
@@ -97,6 +97,68 @@ class TestThreefry:
         bits = np.unpackbits(ks.view(np.uint8))
         assert abs(bits.mean() - 0.5) < 0.01
         assert abs(ks.astype(np.float64).mean() / 2**32 - 0.5) < 0.02
+
+
+class TestKeystreamSeekability:
+    """The streaming chunk-combine rests on one property: slicing the
+    keystream at an arbitrary word offset (``keystream_slice_np``)
+    yields exactly the words of the single full-length stream — so a
+    chunk-by-chunk decrypt/re-encrypt is bit-identical to the
+    whole-vector one. counter_base is in two-word blocks, so odd
+    offsets land mid-block; both parities must hold."""
+
+    @given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1),
+           st.integers(1, 257), st.integers(0, 2**20),
+           st.lists(st.integers(0, 256), min_size=0, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_concatenated_slices_equal_full_stream(self, k0, k1, n, base,
+                                                   cuts):
+        key = np.array([k0, k1], np.uint32)
+        full = keystream_pair_lanes_np(key, n, base)
+        bounds = [0] + sorted(min(c, n) for c in cuts) + [n]
+        parts = [keystream_slice_np(key, b - a, a, base)
+                 for a, b in zip(bounds, bounds[1:])]
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+    @pytest.mark.parametrize("chunk_words", [1, 2, 3, 16, 64])
+    def test_chunk_edges(self, chunk_words):
+        """The exact chunking the wire plane performs: V=103 over
+        chunk_words-sized slices (ragged tail, odd offsets for odd
+        chunk sizes) reassembles the full pad at every counter base."""
+        key = np.array([0xDEAD, 0xBEEF], np.uint32)
+        V = 103
+        for base in (0, 1, 7, 2**31):
+            full = keystream_pair_lanes_np(key, V, base)
+            for k in range((V + chunk_words - 1) // chunk_words):
+                start = k * chunk_words
+                stop = min(start + chunk_words, V)
+                np.testing.assert_array_equal(
+                    keystream_slice_np(key, stop - start, start, base),
+                    full[start:stop])
+
+    def test_empty_slices(self):
+        key = np.array([1, 2], np.uint32)
+        assert keystream_slice_np(key, 0, 0, 0).size == 0
+        assert keystream_slice_np(key, 0, 17, 5).size == 0
+        # an empty slice between two non-empty ones changes nothing
+        full = keystream_pair_lanes_np(key, 9, 3)
+        parts = [keystream_slice_np(key, 4, 0, 3),
+                 keystream_slice_np(key, 0, 4, 3),
+                 keystream_slice_np(key, 5, 4, 3)]
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+    def test_learner_crypto_pad_slice_matches_pad(self):
+        """The machine-level wrapper: pad_slice == pad[start:stop] for
+        the hop-pad keys the learners actually derive."""
+        from repro.core.machines import LearnerCrypto
+
+        crypto = LearnerCrypto(3, 0xC0FFEE, 0x5EED)
+        V, counter = 103, 777
+        full = crypto.pad(2, 3, V, counter)
+        for start, stop in ((0, 16), (16, 33), (33, 103), (7, 8), (50, 50)):
+            np.testing.assert_array_equal(
+                crypto.pad_slice(2, 3, start, stop - start, counter),
+                full[start:stop])
 
 
 class TestFixedPoint:

@@ -373,20 +373,39 @@ class TestChunkedTransfer:
         assert drop.dropped > 0
 
     def test_crash_mid_upload_reelects(self):
-        """A learner dies partway through streaming its aggregate (some
-        chunks uploaded, transfer never completes): no posting exists,
-        so §5.3 cannot fire — the round times out, §5.4 re-elects, and
-        the survivors' retry publishes, bit-identical to a sim where
-        that node was dead all along."""
+        """Buffered path (stream=False): a learner dies partway through
+        streaming its aggregate AFTER consuming its predecessor's
+        posting (the buffered pipeline consumes before it re-posts): no
+        stuck posting exists, so §5.3 cannot fire — the round times
+        out, §5.4 re-elects, and the survivors' retry publishes,
+        bit-identical to a sim where that node was dead all along."""
         vals = _vals(8, 48, seed=26)
         # node 5 (non-initiator): 3 get_chunk + 1 get_aggregate frames,
         # then dies before its 2nd post_chunk — one chunk buffered
         churn = ChurnInterceptor({5: 5})
         net = _wire_round(vals, chunk_words=16, interceptor=churn,
+                          stream=False,
                           broker_kw=dict(aggregation_timeout=2.0))
         sim = run_safe_round(vals, failed_nodes=[5])
         assert net.crashed_nodes == (5,)
         assert net.initiator_elections >= 1
+        assert np.array_equal(sim.average, net.average)
+
+    def test_crash_mid_streamed_combine_reposts_around(self):
+        """Streaming path: the combine defers the logical consume to
+        after the upload, so a learner crashing mid-hop leaves its
+        predecessor's posting unconsumed — the §5.3 monitor reposts
+        around the dead node (no full §5.4 round restart needed), its
+        half-combined upload goes stale and is replaced, and the
+        survivors' average is bit-identical to a sim where that node
+        was dead all along."""
+        vals = _vals(8, 48, seed=26)
+        churn = ChurnInterceptor({5: 5})  # dies mid-streamed-combine
+        net = _wire_round(vals, chunk_words=16, interceptor=churn,
+                          broker_kw=dict(aggregation_timeout=2.0))
+        sim = run_safe_round(vals, failed_nodes=[5])
+        assert net.crashed_nodes == (5,)
+        assert net.monitor_reposts >= 1
         assert np.array_equal(sim.average, net.average)
 
     def test_reordered_duplicate_chunks_and_streaming(self):
@@ -457,6 +476,464 @@ class TestChunkedTransfer:
                 assert r["complete"]
                 st = await c.request("get_stats", {"session": 0})
                 assert st["post_average"] == 1
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+
+class TestStreamingCombine:
+    """The chunk-granular §5.1.2 combine (ISSUE 4 tentpole): chunk k is
+    decrypted/added/re-encrypted and shipped downstream while chunk k+1
+    is in flight. Streaming is transport scheduling — bits, §5 message
+    counts and failover semantics must be indistinguishable from the
+    reassemble-then-combine path (and from the sim)."""
+
+    @pytest.mark.parametrize("n", [4, 8])
+    def test_streamed_bit_identical_and_counts(self, n):
+        vals = _vals(n, 103, seed=30 + n)
+        sim = run_safe_round(vals)
+        net = _wire_round(vals, chunk_words=16)
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * n
+        # every non-initiator hop ran the fused streaming combine
+        assert net.streamed_combines == n - 1
+        for op in ("post_aggregate", "check_aggregate", "get_aggregate",
+                   "post_average", "get_average", "should_initiate"):
+            assert net.stats[op] == getattr(sim.stats, op), op
+
+    def test_streamed_equals_buffered(self):
+        """stream=True vs stream=False: identical bits, counts, and
+        chunk-frame tallies (streaming reorders frames, never adds)."""
+        vals = _vals(6, 103, seed=31)
+        on = _wire_round(vals, chunk_words=16)
+        off = _wire_round(vals, chunk_words=16, stream=False)
+        assert np.array_equal(on.average, off.average)
+        assert on.stats["aggregation_total"] == off.stats["aggregation_total"]
+        assert on.stats["chunk_frames_in"] == off.stats["chunk_frames_in"]
+        assert on.streamed_combines == 5 and off.streamed_combines == 0
+
+    def test_streamed_weighted_with_failure_closed_form(self):
+        vals = _vals(8, 48, seed=32)
+        w = np.arange(1, 9, dtype=np.float32) * 100
+        sim = run_safe_round(vals, failed_nodes=[3], weights=w)
+        net = _wire_round(vals, failed_nodes=[3], weights=w, chunk_words=16)
+        assert np.array_equal(sim.average, net.average)
+        assert float(sim.weight_avg) == float(net.weight_avg)
+        assert net.stats["aggregation_total"] == 4 * 7 + 2
+        assert net.monitor_reposts == 1
+
+    def test_streamed_under_faults(self):
+        """Latency + drops against the streaming path: chunk frames are
+        retried at-most-once, identities keep assembly straight."""
+        vals = _vals(8, 48, seed=33)
+        sim = run_safe_round(vals)
+        drop = DropInterceptor(p=0.08, seed=11)
+        net = _wire_round(vals, chunk_words=16, interceptor=Chain(
+            LatencyInterceptor(mean=0.001, seed=11), drop))
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 8
+        assert drop.dropped > 0
+
+    @pytest.mark.parametrize("depth", [1, 4])
+    def test_prefetch_depth_is_transport_only(self, depth):
+        """Any prefetch depth yields the same bits and counts — depth
+        moves wall-clock, never semantics (the ablation that picked
+        wire.DEFAULT_PREFETCH_DEPTH lives in benchmarks/streaming.py)."""
+        vals = _vals(6, 103, seed=34)
+        sim = run_safe_round(vals)
+        net = _wire_round(vals, chunk_words=16, prefetch_depth=depth)
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 6
+        assert net.streamed_combines == 5
+
+
+class TestPersistentSessions:
+    """One broker session, R rounds (ISSUE 4): reset_round + RoundCursor
+    counter bases between rounds, key material and connections reused —
+    no key re-derivation after Round 0, per-round §5 closed forms, and
+    crash-resume across round boundaries."""
+
+    def test_five_rounds_bit_identical_no_rederivation(self):
+        from repro.core import machines
+        from repro.net import PersistentNetSession
+
+        n, V, R = 4, 103, 5
+        rng = np.random.RandomState(40)
+        rounds = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
+                  for _ in range(R)]
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=30.0)
+            addr = await broker.start()
+            try:
+                sess = PersistentNetSession(addr, n, chunk_words=16)
+                await sess.open()
+                try:
+                    d0 = machines.key_derivations()
+                    out = []
+                    derivs = []
+                    for vals in rounds:
+                        out.append(await sess.run_round(vals))
+                        derivs.append(machines.key_derivations() - d0)
+                    assert len(broker._sessions) == 1  # ONE tenant alive
+                finally:
+                    await sess.close()
+                assert broker._sessions == {}  # torn down on close
+                return out, derivs
+            finally:
+                await broker.stop()
+
+        out, derivs = asyncio.run(go())
+        # Round 0 derived everything; rounds 1..R-1 derived NOTHING
+        assert derivs[0] > 0
+        assert all(d == derivs[0] for d in derivs[1:]), derivs
+        V_words = rounds[0].shape[1]
+        for r, res in enumerate(out):
+            sim = run_safe_round(rounds[r], counter=r * V_words)
+            assert np.array_equal(sim.average, res.average), f"round {r}"
+            # per-round stats delta still satisfies the closed form
+            assert res.stats["aggregation_total"] == 4 * n, (r, res.stats)
+            assert res.initiator_elections == 0
+            assert res.streamed_combines == n - 1
+
+    def test_undersized_counter_stride_is_refused(self):
+        """A payload wider than the session's words/round stride would
+        overlap the next round's pad words — silent keystream reuse.
+        The session must refuse the round up front, even when
+        words_per_round was pinned explicitly."""
+        from repro.net import PersistentNetSession
+
+        n, V = 4, 32
+
+        async def go():
+            broker = SafeBroker()
+            addr = await broker.start()
+            try:
+                # stride sized for unweighted rounds; a weighted round
+                # needs V+1 words
+                sess = PersistentNetSession(addr, n, words_per_round=V)
+                await sess.open()
+                try:
+                    with pytest.raises(ValueError, match="stride"):
+                        await sess.run_round(
+                            _vals(n, V), weights=np.ones(n, np.float32))
+                    # a correctly-sized round still runs afterwards
+                    res = await sess.run_round(_vals(n, V, seed=60))
+                    assert res.average is not None
+                finally:
+                    await sess.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_crash_resume_across_round_boundary(self):
+        """Node 5 churn-crashes mid-round-0 (partial streamed combine),
+        resumes in round 1: round 0 publishes the survivors' mean
+        (§5.3/§5.4 recovery), round 1 is clean — full average, clean
+        closed form — over the SAME session and fresh counter space."""
+        from repro.net import PersistentNetSession
+
+        n, V = 8, 48
+        rng = np.random.RandomState(41)
+        vals0 = rng.uniform(-1, 1, (n, V)).astype(np.float32)
+        vals1 = rng.uniform(-1, 1, (n, V)).astype(np.float32)
+        churn = ChurnInterceptor({5: 5})
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=2.0)
+            addr = await broker.start()
+            try:
+                sess = PersistentNetSession(addr, n, chunk_words=16,
+                                            interceptor=churn)
+                await sess.open()
+                try:
+                    r0 = await sess.run_round(vals0)
+                    # the org comes back online for the next round
+                    churn.crash_after.pop(5)
+                    r1 = await sess.run_round(vals1)
+                finally:
+                    await sess.close()
+                return r0, r1
+            finally:
+                await broker.stop()
+
+        r0, r1 = asyncio.run(go())
+        assert r0.crashed_nodes == (5,)
+        sim0 = run_safe_round(vals0, failed_nodes=[5])
+        assert np.array_equal(sim0.average, r0.average)
+        # round 1: node 5 resumed — full clean round on the same session
+        assert r1.crashed_nodes == ()
+        sim1 = run_safe_round(vals1, counter=V)
+        assert np.array_equal(sim1.average, r1.average)
+        assert r1.stats["aggregation_total"] == 4 * n
+
+    def test_reset_mid_stream_cannot_corrupt(self):
+        """Races against a partially-combined transfer buffer, raw
+        frames: (a) reset_round mid-upload — the leftover chunks must
+        not complete into a posting; (b) the uploader's own NEWER xfer
+        replaces its abandoned stream; (c) a stale frame of the OLD
+        xfer after the replacement is discarded, never merged."""
+        from repro.net import WireClient
+
+        payload = np.arange(48, dtype=np.uint32)
+        cw = 16  # 3 chunks
+
+        def frame(xfer, seq, arr=payload):
+            return {"session": 0, "op": "post_aggregate", "xfer": xfer,
+                    "seq": seq, "total": 3, "chunk_words": cw,
+                    "from_node": 1, "to_node": 2, "group": 0,
+                    "payload": arr[seq * cw:(seq + 1) * cw]}
+
+        async def go():
+            broker = SafeBroker()
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()
+                await c.request("create_session", {"groups": {0: [1, 2]}})
+                # (a) two chunks up, then the round resets
+                await c.request("post_chunk", frame(7, 0))
+                await c.request("post_chunk", frame(7, 2))
+                await c.request("reset_round", {"session": 0})
+                r = await c.request("post_chunk", frame(7, 1))
+                # the buffer restarted from scratch: one chunk, no post
+                assert not r["complete"] and r["received"] == 1
+                st = await c.request("get_stats", {"session": 0})
+                assert st["post_aggregate"] == 0
+                # (b) the uploader restarts under a newer xfer: replaces
+                # its own half-dead stream even though it is "active"
+                fresh = np.arange(100, 148, dtype=np.uint32)
+                r = await c.request("post_chunk", frame(8, 0, fresh))
+                assert r["received"] == 1
+                # (c) stale duplicate of the OLD stream: discarded
+                r = await c.request("post_chunk", frame(7, 2))
+                assert r.get("superseded") and not r["complete"]
+                r = await c.request("post_chunk", frame(8, 1, fresh))
+                r = await c.request("post_chunk", frame(8, 2, fresh))
+                assert r["complete"]
+                st = await c.request("get_stats", {"session": 0})
+                assert st["post_aggregate"] == 1
+                # the posting holds the NEW stream's bytes, untouched by
+                # the stale frame
+                got = await c.request("get_aggregate", {
+                    "session": 0, "node": 2, "group": 0, "timeout": 5.0})
+                assert np.array_equal(got["aggregate"], fresh)
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_federated_rounds_one_session(self):
+        """run_federated_rounds_net (ISSUE 4 acceptance): R=5 FedAvg
+        rounds on ONE session — no key re-derivation after Round 0, a
+        mid-training dead round recovered via §5.3, state evolution
+        matching the closed-form FedAvg recursion."""
+        from repro.core import machines
+        from repro.net import run_federated_rounds_net
+
+        n, P, R = 4, 103, 5
+        rng = np.random.RandomState(42)
+        grads = {node: rng.uniform(-1, 1, P).astype(np.float32)
+                 for node in range(1, n + 1)}
+        # each learner's "local update": a deterministic function of the
+        # shared state, so every round's expected mean is computable
+        local_fns = {node: (lambda s, g=grads[node]: g - 0.1 * s)
+                     for node in range(1, n + 1)}
+
+        def apply_fn(state, avg):
+            return state + avg
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=30.0)
+            addr = await broker.start()
+            try:
+                # reference: key derivations ONE round costs
+                d0 = machines.key_derivations()
+                await run_federated_rounds_net(
+                    np.zeros(P, np.float32), local_fns, apply_fn, addr,
+                    rounds=1, chunk_words=16)
+                d_single = machines.key_derivations() - d0
+                d1 = machines.key_derivations()
+                state, results = await run_federated_rounds_net(
+                    np.zeros(P, np.float32), local_fns, apply_fn, addr,
+                    rounds=R, chunk_words=16,
+                    failed_by_round={2: [3]})
+                d_multi = machines.key_derivations() - d1
+                return state, results, d_single, d_multi
+            finally:
+                await broker.stop()
+
+        state, results, d_single, d_multi = asyncio.run(go())
+        assert len(results) == R
+        # expected evolution, recomputed in the clear
+        exp = np.zeros(P, np.float32)
+        for r in range(R):
+            live = [nd for nd in range(1, n + 1) if not (r == 2 and nd == 3)]
+            deltas = np.stack([grads[nd] - 0.1 * exp for nd in live])
+            avg = np.asarray(results[r].average)
+            np.testing.assert_allclose(avg, deltas.mean(0), atol=2e-3)
+            exp = exp + avg  # apply the PUBLISHED average (bit-exact path)
+        np.testing.assert_array_equal(state, exp)
+        # round 2 ran 4(n-1)+2 messages (one dead org), others 4n
+        for r, res in enumerate(results):
+            expect = 4 * (n - 1) + 2 if r == 2 else 4 * n
+            assert res.stats["aggregation_total"] == expect, (r, res.stats)
+        # R rounds derive exactly what ONE round derives, plus the two
+        # genuinely NEW pair keys of round 2's §5.3 repost (poster 2 and
+        # receiver 4 each derive the never-before-used 2→4 hop pad) —
+        # nothing already derived in Round 0 is ever derived again
+        assert d_single > 0
+        assert d_multi == d_single + 2
+
+
+class _FakeEngineSession:
+    def __init__(self, sid, values, rounds):
+        self.sid = sid
+        self.values = values
+        self.rounds = rounds
+        self.results = []
+        self.rounds_done = 0
+
+    @property
+    def done(self):
+        return self.rounds_done >= self.rounds
+
+
+class _FakeEngine:
+    """In-process numpy stand-in for serve.AggregationEngine exposing
+    exactly the surface the broker drives (submit/step/queue/active/
+    on_complete, n, V) — lets the engine-plane chunk routing be tested
+    without jax or a device mesh."""
+
+    def __init__(self, n, V):
+        self.n, self.V = n, V
+        self.queue = []
+        self._sids = iter(range(1 << 30))
+        self.on_complete = None
+
+    @property
+    def active(self):
+        return 0
+
+    def submit(self, values, *, rounds=1, **kw):
+        if values.shape != (self.n, self.V):
+            raise ValueError(f"values shape {values.shape} != "
+                             f"({self.n}, {self.V})")
+        sess = _FakeEngineSession(next(self._sids), values, rounds)
+        self.queue.append(sess)
+        return sess
+
+    def step(self):
+        if not self.queue:
+            return 0
+        sess = self.queue.pop(0)
+        while not sess.done:
+            sess.results.append(sess.values.mean(0))
+            sess.rounds_done += 1
+        if self.on_complete is not None:
+            self.on_complete(sess)
+        return 1
+
+
+class TestEngineChunked:
+    """ISSUE 4 satellite: oversized engine payloads route over the §6
+    chunk plane instead of being refused at submit time."""
+
+    def test_chunked_submit_and_wait_roundtrip(self):
+        async def go():
+            n, V = 4, 1000
+            broker = SafeBroker(engine=_FakeEngine(n, V))
+            addr = await broker.start()
+            try:
+                from repro.net import WireClient
+
+                c = await WireClient(*addr).connect()
+                vals = _vals(n, V, seed=50)
+                sub = await c.submit_session_chunked(
+                    {"values": vals, "rounds": 3}, chunk_words=256)
+                res = await c.wait_session_chunked(
+                    sub["sid"], timeout=30.0, chunk_words=512)
+                assert res["status"] == "done" and res["rounds"] == 3
+                for r in res["results"]:
+                    assert np.array_equal(r, vals.mean(0))
+                # idempotent re-fetch until the TTL prune
+                again = await c.wait_session_chunked(
+                    sub["sid"], timeout=5.0, chunk_words=512)
+                assert again["status"] == "done"
+                assert np.array_equal(again["results"][0], vals.mean(0))
+                assert broker.engine_chunk_frames_in > 0
+                assert broker.engine_chunk_frames_out > 0
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_oversized_plain_wait_refused_with_guidance(self, monkeypatch):
+        """A result set beyond one frame is no longer refused at submit:
+        submission succeeds, the UNCHUNKED wait errors with a pointer to
+        the chunked fetch, and the chunked fetch delivers."""
+        from repro.net import WireClient, wire as _w
+
+        async def go():
+            n, V = 4, 1000
+            broker = SafeBroker(engine=_FakeEngine(n, V))
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()
+                vals = _vals(n, V, seed=51)
+                # rounds*V*4 = 80 KB > the shrunken 64 KiB frame cap
+                monkeypatch.setattr(_w, "MAX_FRAME", 1 << 16)
+                sub = await c.request("submit_session",
+                                      {"values": vals, "rounds": 20})
+                with pytest.raises(_w.WireError, match="chunked"):
+                    await c.request("wait_session",
+                                    {"sid": sub["sid"], "timeout": 30.0})
+                res = await c.wait_session_chunked(
+                    sub["sid"], timeout=30.0, chunk_words=1024)
+                assert res["status"] == "done" and res["rounds"] == 20
+                assert np.array_equal(res["results"][19], vals.mean(0))
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_chunked_submit_repeat_final_chunk_idempotent(self):
+        """A re-sent final submit chunk re-acks the SAME sid — never a
+        second engine session (PROTOCOL.md §6 repeat rule, engine
+        flavour)."""
+        from repro.net import WireClient
+
+        async def go():
+            n, V = 2, 64
+            eng = _FakeEngine(n, V)
+            broker = SafeBroker(engine=eng)
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()
+                vals = _vals(n, V, seed=52)
+                flat = vals.ravel()
+
+                def frame(seq):
+                    return {"op": "submit_session", "node": 9, "xfer": 3,
+                            "seq": seq, "total": 2, "chunk_words": 64,
+                            "rounds": 1,
+                            "payload": flat[seq * 64:(seq + 1) * 64]}
+
+                r0 = await c.request("post_chunk", frame(0))
+                assert not r0["complete"]
+                r1 = await c.request("post_chunk", frame(1))
+                assert r1["complete"]
+                r1b = await c.request("post_chunk", frame(1))  # repeat
+                assert r1b["complete"] and r1b["sid"] == r1["sid"]
+                assert len(broker._engine_sessions) == 1
                 await c.close()
             finally:
                 await broker.stop()
