@@ -41,9 +41,10 @@ def main() -> None:
         ("device_aggregation", "device_aggregation", device_aggregation.main),
         ("kernel_bench", "kernel_bench", kernel_bench.main),
         ("multi_session", "multi_session engine (ARCHITECTURE.md)", multi_session.main),
-        ("net_load", "net_load wire-plane broker (repro/net)", net_load.main),
-        ("paper_scale", "paper_scale n=36 wire runs vs BON (§6.1)",
-         paper_scale.main),
+        ("net_load", "net_load wire-plane broker + shard scaling "
+         "(repro/net, ISSUE 6)", net_load.main),
+        ("paper_scale", "paper_scale n=36/n=128 wire runs vs BON (§6.1; "
+         "SAFE_PAPER_N512=1 adds n=512)", paper_scale.main),
         ("streaming", "streaming combine + persistent sessions (§8 wire)",
          streaming.main),
     ]

@@ -7,7 +7,9 @@ over actual sockets: a binary wire codec (``wire``), an asyncio broker
 server with long-poll scheduling and the §5.3 progress monitor
 (``broker``), a learner runtime mapping generator yields onto awaits
 (``client``), pluggable transport faults (``faults``), and a
-multi-tenant load harness (``loadgen``).
+multi-tenant load harness (``loadgen``). ``shard`` scales the broker
+out: N worker processes behind one ``SO_REUSEPORT`` port, sessions
+consistently hashed to shards by session id (PROTOCOL.md §12).
 
 Numpy-only by design (no JAX import) so a broker or learner can run on
 hosts without an accelerator stack; the engine plane takes an already-
@@ -33,6 +35,7 @@ from repro.net.faults import (
     LearnerCrashed,
     deep_edge_faults,
 )
+from repro.net.shard import ShardBroker, ShardedBroker, shard_of
 from repro.net.loadgen import (
     LoadReport,
     run_engine_load,
@@ -42,6 +45,9 @@ from repro.net.loadgen import (
 
 __all__ = [
     "SafeBroker",
+    "ShardBroker",
+    "ShardedBroker",
+    "shard_of",
     "WireClient",
     "NetResult",
     "PersistentNetSession",

@@ -167,6 +167,7 @@ class SafeBroker:
         self._sessions: Dict[int, _Session] = {}
         self._sids = itertools.count()
         self._server: Optional[asyncio.AbstractServer] = None
+        self._extra_servers: list = []
         self._tasks: list = []
         self._conn_tasks: set = set()
         self._t0 = 0.0
@@ -203,12 +204,17 @@ class SafeBroker:
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
-    async def start(self, host: str = "127.0.0.1",
-                    port: int = 0) -> Tuple[str, int]:
-        """Bind and serve; returns the (host, port) actually bound."""
+    async def start(self, host: str = "127.0.0.1", port: int = 0,
+                    *, reuse_port: bool = False) -> Tuple[str, int]:
+        """Bind and serve; returns the (host, port) actually bound.
+
+        ``reuse_port`` sets ``SO_REUSEPORT`` on the listener so several
+        broker processes can share one port (the sharded runtime,
+        repro.net.shard)."""
         loop = asyncio.get_running_loop()
         self._t0 = loop.time()
-        self._server = await asyncio.start_server(self._handle, host, port)
+        self._server = await asyncio.start_server(
+            self._handle, host, port, reuse_port=reuse_port or None)
         self._tasks.append(asyncio.ensure_future(self._monitor_loop()))
         if self.engine is not None:
             self._tasks.append(asyncio.ensure_future(self._engine_loop()))
@@ -216,11 +222,24 @@ class SafeBroker:
         addr = sock.getsockname()
         return addr[0], addr[1]
 
+    async def add_listener(self, host: str, port: int,
+                           *, reuse_port: bool = False) -> Tuple[str, int]:
+        """Serve the same broker on an additional address — a sharded
+        worker answers on its direct per-shard port AND the shared
+        ``SO_REUSEPORT`` port. Closed with the broker on ``stop()``."""
+        server = await asyncio.start_server(
+            self._handle, host, port, reuse_port=reuse_port or None)
+        self._extra_servers.append(server)
+        addr = server.sockets[0].getsockname()
+        return addr[0], addr[1]
+
     async def stop(self) -> None:
         # stop accepting FIRST so no handler can slip in behind the
         # cancellation snapshot below
         if self._server is not None:
             self._server.close()
+        for server in self._extra_servers:
+            server.close()
         # cancel parked connection handlers too: a client long-polling
         # with timeout=None would otherwise leak (and on Python >= 3.12
         # make Server.wait_closed() block forever)
@@ -250,6 +269,9 @@ class SafeBroker:
         if self._server is not None:
             await self._server.wait_closed()
             self._server = None
+        for server in self._extra_servers:
+            await server.wait_closed()
+        self._extra_servers.clear()
 
     def now(self) -> float:
         """Broker wall clock (seconds since start) — the ``now`` every
@@ -268,23 +290,32 @@ class SafeBroker:
                 if body is None:
                     break
                 try:
-                    op, kwargs = wire.decode_request(body)
+                    # zero-copy relay (PROTOCOL.md §12): array values
+                    # decode as read-only views into the frame buffer —
+                    # the broker stores and re-serves payloads, never
+                    # does arithmetic on them (except §5.5 averaging of
+                    # group averages, which allocates fresh output)
+                    op, kwargs = wire.decode_request(body,
+                                                     copy_arrays=False)
                     payload = await self._dispatch(op, kwargs)
-                    out = wire.encode_response(payload)
+                    out = wire.encode_response_parts(payload)
                 except asyncio.CancelledError:
                     raise
                 except wire.WireError as e:
-                    out = wire.encode_error(str(e))
+                    out = [wire.encode_error(str(e))]
                 except Exception as e:  # noqa: BLE001 — report, keep serving
-                    out = wire.encode_error(f"{type(e).__name__}: {e}")
+                    out = [wire.encode_error(f"{type(e).__name__}: {e}")]
                 try:
-                    framed = wire.encode_frame(out)
+                    framed = wire.encode_frame_parts(out)
                 except wire.WireError as e:
                     # response exceeded MAX_FRAME (e.g. a wait_session
                     # result with many large rounds): answer with the
                     # error instead of dying mid-connection
-                    framed = wire.encode_frame(wire.encode_error(str(e)))
-                writer.write(framed)
+                    framed = [wire.encode_frame(wire.encode_error(str(e)))]
+                # scatter-gather: relayed chunk payloads go to the
+                # socket straight from the receive buffer they arrived
+                # in — no per-frame copy on the hot path
+                writer.writelines(framed)
                 await writer.drain()
         except (asyncio.IncompleteReadError, ConnectionResetError,
                 wire.WireDecodeError, asyncio.CancelledError):
@@ -304,7 +335,15 @@ class SafeBroker:
             raise wire.WireError(f"unknown session {sid!r}")
         return sess
 
+    def _shard_map(self) -> dict:
+        """Shard topology for shard-aware clients (PROTOCOL.md §12).
+        The single-process broker is its own sole shard; the sharded
+        runtime (repro.net.shard) overrides this with the real map."""
+        return {"shards": 1, "shard": 0, "ports": []}
+
     async def _dispatch(self, op: str, kwargs: dict):
+        if op == "get_shard_map":
+            return self._shard_map()
         if op == "create_session":
             return self._create_session(kwargs)
         if op == "submit_session":

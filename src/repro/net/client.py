@@ -135,20 +135,23 @@ class WireClient:
     # -- low-level halves (chunk pipelining needs send/recv split) --------
     async def _send(self, op: str, kwargs: dict) -> None:
         """Fire one request frame, interceptor-gated (drops retry here —
-        the frame never left, so resending is at-most-once)."""
-        body = wire.encode_request(op, kwargs)
-        framed = wire.encode_frame(body)
+        the frame never left, so resending is at-most-once). Sent as a
+        scatter-gather parts list (PROTOCOL.md §12): bulk array payloads
+        go to the socket from where they already live, uncopied."""
+        framed = wire.encode_frame_parts(
+            wire.encode_request_parts(op, kwargs))
+        nbytes = wire.parts_nbytes(framed)
         while True:
             if self.interceptor is not None:
                 try:
                     await self.interceptor.on_request(
-                        self.node, op, len(framed))
+                        self.node, op, nbytes)
                 except DropPacket:
                     await asyncio.sleep(self.retry_backoff)
                     continue
-            self._writer.write(framed)
+            self._writer.writelines(framed)
             await self._writer.drain()
-            self.bytes_sent += len(framed)
+            self.bytes_sent += nbytes
             self.requests += 1
             return
 
@@ -161,12 +164,48 @@ class WireClient:
             await self.interceptor.on_response(self.node, op, len(resp) + 4)
         return wire.decode_response(resp)
 
+    async def redirect(self, port: int) -> None:
+        """Move this client (and any aux channel) to another broker
+        port — the §12 shard redirect. Subsequent requests, including
+        the split-send chunk loops, dial the new port."""
+        if self._aux is not None:
+            aux, self._aux = self._aux, None
+            await aux.close()
+            self.bytes_sent += aux.bytes_sent
+            self.bytes_received += aux.bytes_received
+            self.requests += aux.requests
+            self.chunk_frames += aux.chunk_frames
+        if self._writer is not None:
+            self._writer.close()
+            try:
+                await self._writer.wait_closed()
+            except Exception:  # noqa: BLE001
+                pass
+        self.port = int(port)
+        await self.connect()
+
     async def request(self, op: str, kwargs: dict) -> Any:
         """One RPC. A DropPacket from the interceptor loses the frame
         *before* transmission; we back off and retry (safe: the broker
-        never saw it). LearnerCrashed propagates to the runtime."""
+        never saw it). LearnerCrashed propagates to the runtime.
+
+        A ``{"status": "redirect", "port": p}`` response (a sharded
+        broker, PROTOCOL.md §12) reconnects to the owning shard and
+        replays the request — sessions never migrate, so at most one
+        hop settles every subsequent op onto the right worker."""
         await self._send(op, kwargs)
-        return await self._recv(op)
+        res = await self._recv(op)
+        hops = 0
+        while (isinstance(res, dict) and res.get("status") == "redirect"
+               and res.get("port") is not None):
+            hops += 1
+            if hops > 4:
+                raise wire.WireError(
+                    f"redirect loop for {op} (port {res.get('port')})")
+            await self.redirect(int(res["port"]))
+            await self._send(op, kwargs)
+            res = await self._recv(op)
+        return res
 
     # -- chunked transfer plane (docs/PROTOCOL.md §6) ---------------------
     async def post_chunked(self, op: str, kwargs: dict, payload_field: str,
@@ -484,7 +523,7 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
                         chunk_words: Optional[int] = None,
                         payload_words: Optional[int] = None,
                         prefetch_depth: Optional[int] = None,
-                        stream: bool = True) -> Any:
+                        stream: Optional[bool] = None) -> Any:
     """Run one state machine to completion over the wire.
 
     ``timeout`` mapping for ``wait`` yields: ``"aggregation"`` becomes
@@ -498,13 +537,21 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
     length, weighted word included) exceeding it, array traffic takes
     the chunked plane; the machines are driven unchanged either way.
     ``prefetch_depth`` caps in-flight chunk requests (default
-    ``wire.DEFAULT_PREFETCH_DEPTH``); ``stream=False`` disables the
-    chunk-granular combine (the machine's ``("stream", ...)`` yield
-    falls back to reassemble-then-combine — the ablation baseline of
-    ``benchmarks/streaming.py``).
+    ``wire.DEFAULT_PREFETCH_DEPTH``). ``stream`` governs the chunk-
+    granular combine for the machine's ``("stream", ...)`` yield:
+    ``None`` (default) streams only when the payload clears
+    ``wire.MIN_STREAM_WORDS`` — below that the per-chunk overhead loses
+    to the buffered path (the small-n regression in
+    BENCH_streaming.json) and the yield lowers to reassemble-then-
+    combine; ``True`` forces streaming, ``False`` disables it (the
+    ablation baseline of ``benchmarks/streaming.py``). Either path is
+    bit- and count-identical.
     """
     chunked = (chunk_words is not None and payload_words is not None
                and payload_words > chunk_words)
+    if stream is None:
+        stream = (payload_words is not None
+                  and payload_words >= wire.MIN_STREAM_WORDS)
     depth = (wire.DEFAULT_PREFETCH_DEPTH if prefetch_depth is None
              else max(1, int(prefetch_depth)))
     loop = asyncio.get_running_loop()
@@ -582,7 +629,7 @@ async def _drive_round_machines(machines: Dict[int, LearnerGen], acquire,
                                 chunk_words: Optional[int],
                                 payload_words: int,
                                 prefetch_depth: Optional[int],
-                                stream: bool):
+                                stream: Optional[bool]):
     """Drive one round's machines to completion, one task per live
     learner — the round core shared by :func:`run_safe_round_net` and
     :class:`PersistentNetSession`. ``acquire(node)`` supplies the node's
@@ -665,7 +712,7 @@ async def run_safe_round_net(
     compute_scale: float = 0.0,
     chunk_words: Optional[int] = None,
     prefetch_depth: Optional[int] = None,
-    stream: bool = True,
+    stream: Optional[bool] = None,
 ) -> NetResult:
     """One full aggregation round over the wire — the transport twin of
     :func:`repro.core.protocol.run_safe_round` (same signature spirit,
@@ -683,9 +730,16 @@ async def run_safe_round_net(
     longer than that many elements; by default it switches on
     automatically once the payload could not safely fit one frame
     (AUTO_CHUNK_WORDS). Chunked hops run the chunk-granular streaming
-    combine (crypto overlapped with transfer inside each hop) unless
-    ``stream=False``; ``prefetch_depth`` caps each learner's in-flight
-    chunk requests (default ``wire.DEFAULT_PREFETCH_DEPTH``).
+    combine (crypto overlapped with transfer inside each hop) when the
+    payload clears ``wire.MIN_STREAM_WORDS`` — ``stream=True`` forces
+    it, ``stream=False`` disables it (see :func:`drive_learner`);
+    ``prefetch_depth`` caps each learner's in-flight chunk requests
+    (default ``wire.DEFAULT_PREFETCH_DEPTH``).
+
+    Against a sharded broker (:class:`repro.net.shard.ShardedBroker`)
+    the ``create_session`` response names the owning shard's direct
+    port; every learner dials it straight away, so the round never pays
+    a redirect bounce past first contact.
     """
     if mode not in ("safe", "saf"):
         raise ValueError(f"wire plane runs 'safe'/'saf', got {mode!r}")
@@ -714,9 +768,13 @@ async def run_safe_round_net(
             "groups": groups, "aggregation_timeout": aggregation_timeout})
         sid = created["session"]
         wall_agg = created["aggregation_timeout"]
+        # sharded broker: the session lives on one worker — dial its
+        # direct port so learners land on the owner without a bounce
+        learner_addr = ((addr[0], int(created["port"]))
+                        if created.get("port") else addr)
 
         async def acquire(node: int) -> WireClient:
-            return await WireClient(*addr, node=node,
+            return await WireClient(*learner_addr, node=node,
                                     interceptor=interceptor).connect()
 
         async def release(node: int, client: WireClient, _crashed: bool):
@@ -799,7 +857,7 @@ class PersistentNetSession:
                  compute_scale: float = 0.0,
                  chunk_words: Optional[int] = None,
                  prefetch_depth: Optional[int] = None,
-                 stream: bool = True,
+                 stream: Optional[bool] = None,
                  words_per_round: Optional[int] = None,
                  counter0: int = 0):
         if mode not in ("safe", "saf"):
@@ -836,6 +894,7 @@ class PersistentNetSession:
         self._prev_stats: Dict[str, int] = {}
         self._prev_bytes = 0
         self._closed_bytes = 0  # bytes of connections dropped mid-session
+        self._learner_addr: Addr = addr  # owning shard's addr after open()
 
     async def open(self) -> "PersistentNetSession":
         self._admin = await WireClient(*self.addr).connect()
@@ -844,6 +903,10 @@ class PersistentNetSession:
             "aggregation_timeout": self.aggregation_timeout})
         self.sid = created["session"]
         self._wall_agg = created["aggregation_timeout"]
+        # sharded broker: pin every learner connection to the session's
+        # owning shard (see run_safe_round_net)
+        self._learner_addr = ((self.addr[0], int(created["port"]))
+                              if created.get("port") else self.addr)
         return self
 
     async def __aenter__(self) -> "PersistentNetSession":
@@ -855,7 +918,7 @@ class PersistentNetSession:
     async def _client(self, node: int) -> WireClient:
         c = self._clients.get(node)
         if c is None:
-            c = await WireClient(*self.addr, node=node,
+            c = await WireClient(*self._learner_addr, node=node,
                                  interceptor=self.interceptor).connect()
             self._clients[node] = c
         return c

@@ -12,10 +12,19 @@ Three load shapes, matching the broker's planes:
     the paper's distributed system under concurrent sessions.
   * :func:`run_paper_scale` — ONE round at the paper's headline scale
     (n=36, §6.1: where SAFE beats Bonawitz-style masking by 70x/56x
-    with/without failover), with the §5 closed-form message counts
-    asserted inside the harness. ``benchmarks/paper_scale.py`` pairs it
-    with the ``core/bon_protocol.py`` baseline at the same n
+    with/without failover) and beyond it (n=128/512, ISSUE 6), with
+    the §5 closed-form message counts AND sim↔wire bit-identity
+    asserted inside the harness — optionally against a sharded broker
+    fleet, and optionally under mid-round churn instead of pre-round
+    death. ``benchmarks/paper_scale.py`` pairs it with the
+    ``core/bon_protocol.py`` baseline at the same n
     (EXPERIMENTS.md §Paper-scale).
+
+For scale-out measurements ``run_protocol_load`` can spread its tenants
+over spawned worker processes (``client_procs``) so a sharded broker
+(``repro.net.shard``) is measured against a client that can actually
+saturate it; :func:`ensure_fd_headroom` lifts RLIMIT_NOFILE for the
+thousands of sockets an n=512 round opens.
 
 All report into the standard bench harness (``benchmarks/net_load.py``,
 ``benchmarks/paper_scale.py``).
@@ -24,8 +33,9 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import multiprocessing
 import time
-from typing import Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,8 +45,35 @@ from repro.net.client import (
     WireClient,
     run_safe_round_net,
 )
+from repro.net.shard import ShardedBroker
 
 Addr = Tuple[str, int]
+
+
+def ensure_fd_headroom(need: int) -> None:
+    """Raise the soft RLIMIT_NOFILE toward the hard limit if ``need``
+    descriptors would not fit; fail with a clear message otherwise.
+
+    Paper-scale runs open O(n) learner connections on each side of the
+    broker — at n=512 that is thousands of sockets, and the default
+    soft limit of 1024 dies mid-round with a cryptic EMFILE."""
+    try:
+        import resource
+    except ImportError:  # non-POSIX: nothing to tune, let the OS decide
+        return
+    soft, hard = resource.getrlimit(resource.RLIMIT_NOFILE)
+    if soft >= need:
+        return
+    want = min(max(need, soft), hard if hard > 0 else need)
+    try:
+        resource.setrlimit(resource.RLIMIT_NOFILE, (want, hard))
+        soft = want
+    except (ValueError, OSError):
+        pass
+    if soft < need:
+        raise RuntimeError(
+            f"RLIMIT_NOFILE soft limit {soft} < {need} descriptors this "
+            f"run needs (hard limit {hard}); raise it with `ulimit -n`")
 
 
 @dataclasses.dataclass
@@ -150,29 +187,21 @@ def _check_round(t: int, r: int, res, vals: np.ndarray) -> None:
         raise RuntimeError(f"tenant {t} round {r}: wrong average")
 
 
-async def run_protocol_load(addr: Addr, *, tenants: int = 4,
-                            rounds_per_tenant: int = 3, n: int = 8,
-                            V: int = 256, seed: int = 0,
-                            interceptor=None,
-                            chunk_words: Optional[int] = None,
-                            prefetch_depth: Optional[int] = None,
-                            persistent: bool = False) -> LoadReport:
-    """Each tenant runs full n-learner SAFE rounds concurrently with
-    every other tenant — one broker session per round by default, or
-    (``persistent=True``) all of a tenant's rounds on ONE
-    :class:`~repro.net.client.PersistentNetSession` (shared keys,
-    connections and counter space — the amortized path the streaming
-    benchmark compares against the rebuild path).
-
-    ``interceptor`` is either a shared Interceptor instance or a
-    callable ``tenant_index -> Interceptor`` — use the factory form for
-    reproducible per-tenant fault plans (tenants reuse node ids, so a
-    shared instance's per-node RNG streams interleave in scheduler
-    order; see repro.net.faults).
-    """
+async def _drive_tenants(addr: Addr, tenant_indices: Sequence[int], *,
+                         rounds_per_tenant: int, n: int, V: int,
+                         seed: int, interceptor=None,
+                         chunk_words: Optional[int] = None,
+                         prefetch_depth: Optional[int] = None,
+                         persistent: bool = False) -> List[float]:
+    """Drive a subset of tenants against a running broker; the shared
+    core of :func:`run_protocol_load` for both the in-process and the
+    multi-process (``client_procs``) paths. Tenant values are
+    regenerated from ``seed`` in *global* tenant order, so any process
+    driving tenant ``t`` sees the same f32 matrix."""
+    max_t = max(tenant_indices) + 1 if tenant_indices else 0
     rng = np.random.RandomState(seed)
     tenant_vals = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
-                   for _ in range(tenants)]
+                   for _ in range(max_t)]
 
     async def tenant(t: int) -> List[float]:
         ic = interceptor(t) if callable(interceptor) else interceptor
@@ -206,10 +235,109 @@ async def run_protocol_load(addr: Addr, *, tenants: int = 4,
             _check_round(t, r, res, tenant_vals[t])
         return lats
 
-    t0 = time.perf_counter()
-    per_tenant = await asyncio.gather(*(tenant(t) for t in range(tenants)))
-    wall = time.perf_counter() - t0
-    lats = [x for lat in per_tenant for x in lat]
+    per_tenant = await asyncio.gather(*(tenant(t) for t in tenant_indices))
+    return [x for lat in per_tenant for x in lat]
+
+
+def _client_worker_main(addr: Addr, tenant_indices, drive_kw: dict,
+                        conn, start_ev) -> None:
+    """Spawn target for one client-load worker process: signal ready,
+    wait for the synchronized start (so spawn + import time stays out
+    of the measured wall), drive the tenant subset, ship latencies."""
+    try:
+        conn.send("ready")
+        start_ev.wait()
+        lats = asyncio.run(
+            _drive_tenants(addr, list(tenant_indices), **drive_kw))
+        conn.send(("ok", lats))
+    except BaseException as e:  # noqa: BLE001 — parent re-raises
+        conn.send(("error", f"{type(e).__name__}: {e}"))
+    finally:
+        conn.close()
+
+
+async def run_protocol_load(addr: Addr, *, tenants: int = 4,
+                            rounds_per_tenant: int = 3, n: int = 8,
+                            V: int = 256, seed: int = 0,
+                            interceptor=None,
+                            chunk_words: Optional[int] = None,
+                            prefetch_depth: Optional[int] = None,
+                            persistent: bool = False,
+                            client_procs: Optional[int] = None
+                            ) -> LoadReport:
+    """Each tenant runs full n-learner SAFE rounds concurrently with
+    every other tenant — one broker session per round by default, or
+    (``persistent=True``) all of a tenant's rounds on ONE
+    :class:`~repro.net.client.PersistentNetSession` (shared keys,
+    connections and counter space — the amortized path the streaming
+    benchmark compares against the rebuild path).
+
+    ``interceptor`` is either a shared Interceptor instance or a
+    callable ``tenant_index -> Interceptor`` — use the factory form for
+    reproducible per-tenant fault plans (tenants reuse node ids, so a
+    shared instance's per-node RNG streams interleave in scheduler
+    order; see repro.net.faults).
+
+    ``client_procs`` spreads the tenants over that many *worker
+    processes* (spawned, start-synchronized so setup stays out of the
+    wall measurement). With a sharded broker the single client event
+    loop is otherwise the new bottleneck — one process cannot drive
+    more load than one shard can serve, and the scaling curve would
+    measure the client. Interceptors don't cross process boundaries
+    (they are live objects with RNG state), so the two are exclusive.
+    """
+    drive_kw = dict(rounds_per_tenant=rounds_per_tenant, n=n, V=V,
+                    seed=seed, chunk_words=chunk_words,
+                    prefetch_depth=prefetch_depth, persistent=persistent)
+    if not client_procs or client_procs <= 1:
+        t0 = time.perf_counter()
+        lats = await _drive_tenants(addr, range(tenants),
+                                    interceptor=interceptor, **drive_kw)
+        wall = time.perf_counter() - t0
+        return _report("protocol", tenants, lats, wall)
+
+    if interceptor is not None:
+        raise ValueError("interceptor is not supported with client_procs "
+                         "(live fault plans don't cross processes)")
+    procs = min(client_procs, tenants)
+    slices = [list(range(w, tenants, procs)) for w in range(procs)]
+    ctx = multiprocessing.get_context("spawn")
+    start_ev = ctx.Event()
+    workers, pipes = [], []
+    loop = asyncio.get_running_loop()
+    try:
+        for idx in slices:
+            parent, child = ctx.Pipe()
+            proc = ctx.Process(
+                target=_client_worker_main,
+                args=(addr, idx, drive_kw, child, start_ev), daemon=True)
+            proc.start()
+            child.close()
+            workers.append(proc)
+            pipes.append(parent)
+        for pipe in pipes:  # all interpreters up before the clock starts
+            if not await loop.run_in_executor(None, pipe.poll, 120.0):
+                raise RuntimeError("client worker failed to report ready")
+            msg = await loop.run_in_executor(None, pipe.recv)
+            if msg != "ready":
+                raise RuntimeError(f"client worker: {msg}")
+        t0 = time.perf_counter()
+        start_ev.set()
+        lats: List[float] = []
+        for pipe in pipes:
+            status, payload = await loop.run_in_executor(None, pipe.recv)
+            if status != "ok":
+                raise RuntimeError(f"client worker failed: {payload}")
+            lats.extend(payload)
+        wall = time.perf_counter() - t0
+    finally:
+        for proc in workers:
+            await loop.run_in_executor(None, proc.join, 10.0)
+        for proc in workers:
+            if proc.is_alive():
+                proc.terminate()
+        for pipe in pipes:
+            pipe.close()
     return _report("protocol", tenants, lats, wall)
 
 
@@ -218,11 +346,14 @@ async def run_paper_scale(
     n: int = 36,
     V: int = 256,
     failures: Iterable[int] = (),
+    churn: Optional[Dict[int, int]] = None,
     seed: int = 0,
+    shards: int = 1,
     chunk_words: Optional[int] = None,
     prefetch_depth: Optional[int] = None,
-    stream: bool = True,
+    stream: Optional[bool] = True,
     weights: Optional[np.ndarray] = None,
+    bit_identical: bool = True,
     progress_timeout: float = 0.3,
     monitor_interval: float = 0.1,
     aggregation_timeout: float = 60.0,
@@ -235,39 +366,78 @@ async def run_paper_scale(
 
       * MessageStats == §5 closed form 4(n−f) + 2f (4n when f=0);
       * one §5.3 monitor repost per dead node;
-      * the published average equals the survivors' clear-text mean.
+      * the published average equals the survivors' clear-text mean;
+      * (``bit_identical``) the wire average is ``np.array_equal`` to
+        the discrete-event simulation's for the same inputs — the
+        sim↔wire discipline at n=128+, not just test-sized n.
+
+    ``churn`` maps node id → op count after which the node crashes
+    *mid-round* (repro.net.faults.ChurnInterceptor) — failover under
+    live churn instead of pre-round death. Message totals under churn
+    depend on when each crash lands relative to reposting, so the
+    closed form is reported but only bounded (≥ the all-crash-early
+    form), while bit-identity vs. the sim with the same nodes dead
+    still holds exactly. ``shards`` > 1 runs the round against a
+    :class:`~repro.net.shard.ShardedBroker` fleet — same assertions,
+    sharded runtime (redirect + direct-dial paths under load).
 
     Returns a flat row for the bench harness (wall seconds, messages,
     bytes, chunk-plane frame counts). ``chunk_words`` prices the
     chunk-streaming path at the same scale.
     """
+    from repro.net.faults import ChurnInterceptor
+
     rng = np.random.RandomState(seed)
     vals = rng.uniform(-1, 1, (n, V)).astype(np.float32)
     failed = sorted(set(failures))
-    broker = SafeBroker(progress_timeout=progress_timeout,
-                        monitor_interval=monitor_interval,
-                        aggregation_timeout=aggregation_timeout)
+    churn = dict(churn or {})
+    if failed and churn:
+        raise ValueError("pick failures= (pre-round) or churn= "
+                         "(mid-round), not both")
+    # each live learner holds a control + possibly an aux chunk
+    # connection, broker mirrors both; headroom for pipes/listeners
+    ensure_fd_headroom(4 * n + 128)
+    interceptor = ChurnInterceptor(churn) if churn else None
+    broker_kw = dict(progress_timeout=progress_timeout,
+                     monitor_interval=monitor_interval,
+                     aggregation_timeout=aggregation_timeout)
+    if shards > 1:
+        broker = ShardedBroker(shards, **broker_kw)
+    else:
+        broker = SafeBroker(**broker_kw)
     addr = await broker.start()
     try:
         res = await run_safe_round_net(
             vals, addr, failed_nodes=failed, weights=weights,
-            chunk_words=chunk_words, prefetch_depth=prefetch_depth,
-            stream=stream)
+            interceptor=interceptor, chunk_words=chunk_words,
+            prefetch_depth=prefetch_depth, stream=stream)
     finally:
         await broker.stop()
 
-    f = len(failed)
+    dead = sorted(churn) if churn else failed
+    f = len(dead)
     expected = 4 * (n - f) + 2 * f
     got = res.stats["aggregation_total"]
-    if got != expected:
-        raise AssertionError(
-            f"n={n} f={f}: {got} aggregation messages, §5 closed form "
-            f"says {expected}")
-    if res.monitor_reposts != f:
-        raise AssertionError(
-            f"{res.monitor_reposts} monitor reposts for {f} dead nodes")
+    if churn:
+        if res.crashed_nodes != tuple(sorted(churn)):
+            raise AssertionError(
+                f"churn plan {sorted(churn)} but crashed nodes "
+                f"{res.crashed_nodes}")
+        if got < expected:
+            raise AssertionError(
+                f"n={n} churn f={f}: {got} aggregation messages below "
+                f"the §5 floor {expected}")
+    else:
+        if got != expected:
+            raise AssertionError(
+                f"n={n} f={f}: {got} aggregation messages, §5 closed "
+                f"form says {expected}")
+        if res.monitor_reposts != f:
+            raise AssertionError(
+                f"{res.monitor_reposts} monitor reposts for {f} dead "
+                f"nodes")
     mask = np.ones(n, bool)
-    for node in failed:
+    for node in dead:
         mask[node - 1] = False
     if weights is None:
         exp_avg = vals[mask].mean(0)
@@ -276,10 +446,20 @@ async def run_paper_scale(
         exp_avg = (vals[mask] * w[:, None]).sum(0) / w.sum()
     if np.abs(res.average - exp_avg).max() > 1e-2:
         raise AssertionError("published average off the survivors' mean")
+    if bit_identical:
+        from repro.core.protocol import run_safe_round
+
+        sim = run_safe_round(vals, failed_nodes=dead, weights=weights)
+        if not np.array_equal(sim.average, res.average):
+            raise AssertionError(
+                f"n={n} f={f} shards={shards}: wire average is not "
+                f"bit-identical to the simulation")
     return {
         "n": n,
         "V": V,
         "failures": f,
+        "churn": bool(churn),
+        "shards": shards,
         "messages": got,
         "expected_messages": expected,
         "monitor_reposts": res.monitor_reposts,
@@ -289,4 +469,5 @@ async def run_paper_scale(
         "chunk_frames_out": res.stats["chunk_frames_out"],
         "transfers_completed": res.stats["transfers_completed"],
         "streamed_combines": res.streamed_combines,
+        "bit_identical": bool(bit_identical),
     }

@@ -37,12 +37,25 @@ by :class:`ChunkAssembler`. The authoritative spec for the whole layer
 — frames, opcodes, value tags, chunking, versioning — is
 ``docs/PROTOCOL.md``; ``tests/test_docs.py`` asserts its tables match
 the registries below, so the book cannot silently drift from the code.
+
+**Zero-copy discipline** (docs/PROTOCOL.md §12): decoding works over
+any buffer object — ``bytes``, ``bytearray`` or a ``memoryview`` at a
+non-zero offset into a larger receive buffer — without slicing it into
+intermediate ``bytes``. ``decode_request(..., copy_arrays=False)``
+returns array values as read-only ``np.frombuffer`` views straight into
+the frame buffer (the broker's store-and-forward path relays these
+views untouched); the default ``copy_arrays=True`` hands out writable
+copies, which the state machines require. On the encode side the
+``*_parts`` variants return a list of buffer segments — small scalars
+coalesced into ``bytearray`` runs, large arrays/bytes as zero-copy
+``memoryview``s — for ``StreamWriter.writelines`` scatter-gather sends,
+so a relayed chunk is materialized exactly once (at the socket read).
 """
 from __future__ import annotations
 
 import asyncio
 import struct
-from typing import Any, Optional, Tuple
+from typing import Any, Iterable, Optional, Tuple
 
 import numpy as np
 
@@ -93,6 +106,10 @@ OPS: Tuple[str, ...] = (
     # for arrays larger than one frame; never counted in MessageStats
     "post_chunk",
     "get_chunk",
+    # sharded deployments (docs/PROTOCOL.md §12): the shard topology a
+    # client uses to dial a session's owning worker directly. Appended
+    # per the §9 additive-opcode policy — no version bump.
+    "get_shard_map",
 )
 OPCODE = {name: i + 1 for i, name in enumerate(OPS)}
 OPNAME = {i + 1: name for i, name in enumerate(OPS)}
@@ -141,8 +158,24 @@ _DTYPE_CODES = {dt.str: code for code, dt in _DTYPES.items()}
 # Value tree
 # ---------------------------------------------------------------------------
 
+#: arrays / bytes at or above this many bytes travel as their own
+#: zero-copy segment in the parts encoders; smaller ones are coalesced
+#: into the adjacent scalar run (one tiny iovec per int is slower than
+#: one memcpy).
+_SEGMENT_BYTES = 1024
 
-def _enc_value(v: Any, out: bytearray) -> None:
+
+def _tail(parts: list) -> bytearray:
+    """The growable scalar run at the end of ``parts``."""
+    if not parts or not isinstance(parts[-1], bytearray):
+        parts.append(bytearray())
+    return parts[-1]
+
+
+def _enc_value(v: Any, parts: list) -> None:
+    """Append ``v``'s encoding to ``parts`` — bytearray runs for
+    scalars/headers, zero-copy buffer segments for bulk arrays/bytes."""
+    out = _tail(parts)
     if v is None:
         out.append(_T_NONE)
     elif v is True:
@@ -161,10 +194,15 @@ def _enc_value(v: Any, out: bytearray) -> None:
         out += struct.pack(">I", len(raw))
         out += raw
     elif isinstance(v, (bytes, bytearray, memoryview)):
-        raw = bytes(v)
+        raw = memoryview(v)
+        if raw.ndim != 1 or raw.itemsize != 1:
+            raw = raw.cast("B")
         out.append(_T_BYTES)
-        out += struct.pack(">I", len(raw))
-        out += raw
+        out += struct.pack(">I", raw.nbytes)
+        if raw.nbytes >= _SEGMENT_BYTES:
+            parts.append(raw)  # zero-copy: the segment references v
+        else:
+            out += raw
     elif isinstance(v, np.ndarray):
         dt = v.dtype.newbyteorder("<")
         code = _DTYPE_CODES.get(dt.str)
@@ -176,32 +214,48 @@ def _enc_value(v: Any, out: bytearray) -> None:
         out += struct.pack(">BB", code, v.ndim)
         for d in v.shape:
             out += struct.pack(">I", d)
-        out += np.ascontiguousarray(v, dtype=dt).tobytes()
+        arr = np.ascontiguousarray(v, dtype=dt)  # no-op when already so
+        if arr.nbytes >= _SEGMENT_BYTES and arr.ndim > 0:
+            # scatter-gather segment straight over the array's memory —
+            # works for read-only views (relayed chunks) too
+            parts.append(memoryview(arr).cast("B"))
+        else:
+            out += arr.tobytes()
     elif isinstance(v, (list, tuple)):
         out.append(_T_LIST)
         out += struct.pack(">I", len(v))
         for item in v:
-            _enc_value(item, out)
+            _enc_value(item, parts)
     elif isinstance(v, dict):
         out.append(_T_DICT)
         out += struct.pack(">I", len(v))
         for k, item in v.items():
-            _enc_value(k, out)
-            _enc_value(item, out)
+            _enc_value(k, parts)
+            _enc_value(item, parts)
     else:
         raise WireError(f"unencodable value of type {type(v).__name__}")
 
 
+def parts_nbytes(parts: Iterable) -> int:
+    """Total byte length of a parts list (buffers of any itemsize)."""
+    return sum(memoryview(p).nbytes for p in parts)
+
+
 class _Cursor:
-    """Bounds-checked reader over one frame body."""
+    """Bounds-checked reader over one frame body — any buffer object,
+    including a ``memoryview`` at a non-zero offset into a larger
+    receive buffer (the zero-copy decode contract, PROTOCOL.md §12)."""
 
     __slots__ = ("buf", "pos")
 
-    def __init__(self, buf: bytes, pos: int = 0):
-        self.buf = buf
+    def __init__(self, buf, pos: int = 0):
+        mv = memoryview(buf)
+        if mv.ndim != 1 or mv.itemsize != 1:
+            mv = mv.cast("B")
+        self.buf = mv
         self.pos = pos
 
-    def take(self, n: int) -> bytes:
+    def take(self, n: int) -> memoryview:
         if n < 0 or self.pos + n > len(self.buf):
             raise WireDecodeError(
                 f"truncated frame: need {n} bytes at offset {self.pos}, "
@@ -217,7 +271,7 @@ class _Cursor:
         return struct.unpack(">I", self.take(4))[0]
 
 
-def _dec_value(cur: _Cursor) -> Any:
+def _dec_value(cur: _Cursor, copy_arrays: bool = True) -> Any:
     tag = cur.u8()
     if tag == _T_NONE:
         return None
@@ -230,9 +284,9 @@ def _dec_value(cur: _Cursor) -> Any:
     if tag == _T_FLOAT:
         return struct.unpack(">d", cur.take(8))[0]
     if tag == _T_STR:
-        return cur.take(cur.u32()).decode("utf-8")
+        return str(cur.take(cur.u32()), "utf-8")
     if tag == _T_BYTES:
-        return cur.take(cur.u32())
+        return bytes(cur.take(cur.u32()))
     if tag == _T_ARRAY:
         code, ndim = struct.unpack(">BB", cur.take(2))
         dt = _DTYPES.get(code)
@@ -246,37 +300,52 @@ def _dec_value(cur: _Cursor) -> Any:
         if nbytes > len(cur.buf) - cur.pos:
             raise WireDecodeError(
                 f"array shape {shape} claims more bytes than the frame holds")
-        # single-copy decode straight out of the frame buffer (.copy()
-        # because frombuffer views are read-only and the state machines
-        # do arithmetic on received payloads)
+        # decode straight out of the frame buffer: a writable copy by
+        # default (frombuffer views are read-only and the state machines
+        # do arithmetic on received payloads) — or, for relay paths that
+        # never mutate (copy_arrays=False), the view itself, which keeps
+        # the frame buffer alive and is re-encoded as a zero-copy
+        # segment on the way out
         arr = np.frombuffer(cur.buf, dtype=dt, count=count,
-                            offset=cur.pos).reshape(shape).copy()
+                            offset=cur.pos).reshape(shape)
+        if copy_arrays:
+            arr = arr.copy()
+        else:
+            # pin read-only even over writable source buffers
+            # (bytearray receive buffers): relay views must never be
+            # mutated, or the shared frame bytes corrupt under fan-out
+            arr.flags.writeable = False
         cur.pos += nbytes
         return arr
     if tag == _T_LIST:
-        return [_dec_value(cur) for _ in range(cur.u32())]
+        return [_dec_value(cur, copy_arrays) for _ in range(cur.u32())]
     if tag == _T_DICT:
         n = cur.u32()
         out = {}
         for _ in range(n):
-            k = _dec_value(cur)
-            out[k] = _dec_value(cur)
+            k = _dec_value(cur, copy_arrays)
+            out[k] = _dec_value(cur, copy_arrays)
         return out
     raise WireDecodeError(f"unknown value tag {tag}")
 
 
 def encode_value(v: Any) -> bytes:
-    out = bytearray()
-    _enc_value(v, out)
-    return bytes(out)
+    return b"".join(encode_value_parts(v))
 
 
-def decode_value(buf: bytes) -> Any:
+def encode_value_parts(v: Any) -> list:
+    """Encode one value as a list of buffer segments (see module doc)."""
+    parts: list = []
+    _enc_value(v, parts)
+    return parts
+
+
+def decode_value(buf, copy_arrays: bool = True) -> Any:
     cur = _Cursor(buf)
-    v = _dec_value(cur)
-    if cur.pos != len(buf):
+    v = _dec_value(cur, copy_arrays)
+    if cur.pos != len(cur.buf):
         raise WireDecodeError(
-            f"{len(buf) - cur.pos} trailing bytes after value")
+            f"{len(cur.buf) - cur.pos} trailing bytes after value")
     return v
 
 
@@ -285,17 +354,22 @@ def decode_value(buf: bytes) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def encode_request(op: str, kwargs: dict) -> bytes:
-    """Request body (unframed): version, opcode, kwargs value-tree."""
+def encode_request_parts(op: str, kwargs: dict) -> list:
+    """Request body as buffer segments: version, opcode, kwargs tree."""
     code = OPCODE.get(op)
     if code is None:
         raise WireError(f"unknown op {op!r}")
-    out = bytearray(struct.pack(">BB", WIRE_VERSION, code))
-    _enc_value(dict(kwargs), out)
-    return bytes(out)
+    parts: list = [bytearray(struct.pack(">BB", WIRE_VERSION, code))]
+    _enc_value(dict(kwargs), parts)
+    return parts
 
 
-def decode_request(body: bytes) -> Tuple[str, dict]:
+def encode_request(op: str, kwargs: dict) -> bytes:
+    """Request body (unframed): version, opcode, kwargs value-tree."""
+    return b"".join(encode_request_parts(op, kwargs))
+
+
+def decode_request(body, copy_arrays: bool = True) -> Tuple[str, dict]:
     cur = _Cursor(body)
     version, code = struct.unpack(">BB", cur.take(2))
     if version != WIRE_VERSION:
@@ -303,8 +377,8 @@ def decode_request(body: bytes) -> Tuple[str, dict]:
     op = OPNAME.get(code)
     if op is None:
         raise WireDecodeError(f"unknown opcode {code}")
-    kwargs = _dec_value(cur)
-    if cur.pos != len(body):
+    kwargs = _dec_value(cur, copy_arrays)
+    if cur.pos != len(cur.buf):
         raise WireDecodeError("trailing bytes after request")
     if not isinstance(kwargs, dict):
         raise WireDecodeError("request kwargs must decode to a dict")
@@ -315,26 +389,30 @@ _ST_OK = 0
 _ST_ERR = 1
 
 
+def encode_response_parts(payload: Any) -> list:
+    parts: list = [bytearray(struct.pack(">BB", WIRE_VERSION, _ST_OK))]
+    _enc_value(payload, parts)
+    return parts
+
+
 def encode_response(payload: Any) -> bytes:
-    out = bytearray(struct.pack(">BB", WIRE_VERSION, _ST_OK))
-    _enc_value(payload, out)
-    return bytes(out)
+    return b"".join(encode_response_parts(payload))
 
 
 def encode_error(message: str) -> bytes:
-    out = bytearray(struct.pack(">BB", WIRE_VERSION, _ST_ERR))
-    _enc_value(message, out)
-    return bytes(out)
+    parts: list = [bytearray(struct.pack(">BB", WIRE_VERSION, _ST_ERR))]
+    _enc_value(message, parts)
+    return b"".join(parts)
 
 
-def decode_response(body: bytes) -> Any:
+def decode_response(body, copy_arrays: bool = True) -> Any:
     """Decode a response body; raises :class:`WireError` on error status."""
     cur = _Cursor(body)
     version, status = struct.unpack(">BB", cur.take(2))
     if version != WIRE_VERSION:
         raise WireDecodeError(f"wire version {version} != {WIRE_VERSION}")
-    payload = _dec_value(cur)
-    if cur.pos != len(body):
+    payload = _dec_value(cur, copy_arrays)
+    if cur.pos != len(cur.buf):
         raise WireDecodeError("trailing bytes after response")
     if status == _ST_ERR:
         raise WireError(str(payload))
@@ -347,6 +425,17 @@ def encode_frame(body: bytes) -> bytes:
     if len(body) > MAX_FRAME:
         raise WireError(f"frame body {len(body)} exceeds MAX_FRAME")
     return struct.pack(">I", len(body)) + body
+
+
+def encode_frame_parts(body_parts: list) -> list:
+    """Frame a parts-encoded body for ``StreamWriter.writelines``: the
+    u32 length prefix followed by the body segments, no concatenation —
+    bulk segments go to the socket straight from where they already
+    live (the §12 scatter-gather send)."""
+    total = parts_nbytes(body_parts)
+    if total > MAX_FRAME:
+        raise WireError(f"frame body {total} exceeds MAX_FRAME")
+    return [struct.pack(">I", total)] + body_parts
 
 
 # ---------------------------------------------------------------------------
@@ -364,6 +453,17 @@ DEFAULT_CHUNK_WORDS = 1 << 20
 #: (depth 1 leaves the link idle during each combine, depth 4 measured
 #: no further gain on the localhost profile).
 DEFAULT_PREFETCH_DEPTH = 2
+
+
+#: words below which the chunk-granular streaming combine loses to the
+#: buffered reassemble-then-combine path: per-chunk crypto calls, ack
+#: round-trips and the aux connection cost a fixed overhead that short
+#: vectors cannot amortize (BENCH_streaming.json measured the streamed
+#: hop at x0.92 of buffered for V=4096 rounds). Clients resolve a
+#: ``("stream", ...)`` yield to the buffered path below this threshold
+#: unless the caller forces streaming; 16Ki words = 64 KiB of ring
+#: payload, several chunks' worth at every benchmarked chunk size.
+MIN_STREAM_WORDS = 1 << 14
 
 
 def num_chunks(words: int, chunk_words: int) -> int:

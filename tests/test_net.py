@@ -402,6 +402,7 @@ class TestChunkedTransfer:
         vals = _vals(8, 48, seed=26)
         churn = ChurnInterceptor({5: 5})  # dies mid-streamed-combine
         net = _wire_round(vals, chunk_words=16, interceptor=churn,
+                          stream=True,
                           broker_kw=dict(aggregation_timeout=2.0))
         sim = run_safe_round(vals, failed_nodes=[5])
         assert net.crashed_nodes == (5,)
@@ -494,7 +495,7 @@ class TestStreamingCombine:
     def test_streamed_bit_identical_and_counts(self, n):
         vals = _vals(n, 103, seed=30 + n)
         sim = run_safe_round(vals)
-        net = _wire_round(vals, chunk_words=16)
+        net = _wire_round(vals, chunk_words=16, stream=True)
         assert np.array_equal(sim.average, net.average)
         assert net.stats["aggregation_total"] == 4 * n
         # every non-initiator hop ran the fused streaming combine
@@ -507,7 +508,7 @@ class TestStreamingCombine:
         """stream=True vs stream=False: identical bits, counts, and
         chunk-frame tallies (streaming reorders frames, never adds)."""
         vals = _vals(6, 103, seed=31)
-        on = _wire_round(vals, chunk_words=16)
+        on = _wire_round(vals, chunk_words=16, stream=True)
         off = _wire_round(vals, chunk_words=16, stream=False)
         assert np.array_equal(on.average, off.average)
         assert on.stats["aggregation_total"] == off.stats["aggregation_total"]
@@ -543,7 +544,8 @@ class TestStreamingCombine:
         wire.DEFAULT_PREFETCH_DEPTH lives in benchmarks/streaming.py)."""
         vals = _vals(6, 103, seed=34)
         sim = run_safe_round(vals)
-        net = _wire_round(vals, chunk_words=16, prefetch_depth=depth)
+        net = _wire_round(vals, chunk_words=16, prefetch_depth=depth,
+                          stream=True)
         assert np.array_equal(sim.average, net.average)
         assert net.stats["aggregation_total"] == 4 * 6
         assert net.streamed_combines == 5
@@ -569,7 +571,8 @@ class TestPersistentSessions:
                                 aggregation_timeout=30.0)
             addr = await broker.start()
             try:
-                sess = PersistentNetSession(addr, n, chunk_words=16)
+                sess = PersistentNetSession(addr, n, chunk_words=16,
+                                            stream=True)
                 await sess.open()
                 try:
                     d0 = machines.key_derivations()
@@ -649,7 +652,7 @@ class TestPersistentSessions:
             addr = await broker.start()
             try:
                 sess = PersistentNetSession(addr, n, chunk_words=16,
-                                            interceptor=churn)
+                                            stream=True, interceptor=churn)
                 await sess.open()
                 try:
                     r0 = await sess.run_round(vals0)
@@ -790,6 +793,238 @@ class TestPersistentSessions:
         # nothing already derived in Round 0 is ever derived again
         assert d_single > 0
         assert d_multi == d_single + 2
+
+
+class TestAutoStreamThreshold:
+    """ISSUE 6 small-n regression fix: ``stream=None`` (the default)
+    lowers the streamed combine to the buffered path below
+    ``wire.MIN_STREAM_WORDS``, where chunk round-trips dominate and
+    there is nothing to overlap. Either path is bit-identical."""
+
+    def test_small_payload_auto_buffers(self):
+        from repro.net import wire
+
+        V = 103
+        assert V < wire.MIN_STREAM_WORDS
+        vals = _vals(4, V, seed=60)
+        net = _wire_round(vals, chunk_words=16)  # stream unspecified
+        assert net.streamed_combines == 0
+        assert np.array_equal(run_safe_round(vals).average, net.average)
+
+    def test_threshold_payload_auto_streams(self):
+        from repro.net import wire
+
+        V = wire.MIN_STREAM_WORDS  # exactly at the threshold: streams
+        vals = _vals(4, V, seed=61)
+        net = _wire_round(vals, chunk_words=4096)
+        assert net.streamed_combines == 4 - 1
+        assert np.array_equal(run_safe_round(vals).average, net.average)
+
+    def test_force_flags_override_auto(self):
+        from repro.net import wire
+
+        vals = _vals(4, 103, seed=62)
+        on = _wire_round(vals, chunk_words=16, stream=True)
+        assert on.streamed_combines == 3  # forced despite tiny payload
+        big = _vals(4, wire.MIN_STREAM_WORDS, seed=63)
+        off = _wire_round(big, chunk_words=4096, stream=False)
+        assert off.streamed_combines == 0  # disabled despite large
+
+
+class TestShardRouting:
+    """ISSUE 6 sharded broker: sessions consistently hashed to worker
+    processes by session id (``shard_of``), misdirected ops answered
+    with the §12 redirect, rounds bit-identical to the sim through
+    every entry path (shared SO_REUSEPORT port, direct ports, the
+    dispatcher fallback)."""
+
+    BROKER_KW = dict(progress_timeout=0.4, monitor_interval=0.1,
+                     aggregation_timeout=30.0)
+
+    def test_shard_hash_stable_across_processes(self):
+        """The routing table is a pure function of the session id: a
+        fresh interpreter computes the identical mapping (workers never
+        exchange routing state — this IS the consistency guarantee)."""
+        import json
+        import os
+        import subprocess
+        import sys
+
+        from repro.net import shard_of
+
+        local = [shard_of(s, 4) for s in range(64)]
+        code = ("import json; from repro.net.shard import shard_of; "
+                "print(json.dumps([shard_of(s, 4) for s in range(64)]))")
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=60)
+        assert out.returncode == 0, out.stderr
+        assert json.loads(out.stdout) == local
+        # owner allocation invariant: sid % shards == allocating shard
+        assert all(shard_of(s, 4) == s % 4 for s in range(64))
+
+    def test_sessions_pinned_to_one_shard(self):
+        """Every op of a session is served by the worker that allocated
+        it: the owner answers on its direct port, every OTHER worker
+        answers the same op with a redirect naming the owner (it holds
+        no state for the session)."""
+        from repro.net import ShardedBroker, WireClient, shard_of
+
+        async def go():
+            sb = ShardedBroker(3, **self.BROKER_KW)
+            addr = await sb.start()
+            try:
+                for k in range(3):
+                    c = await WireClient(
+                        addr[0], sb.shard_ports[k]).connect()
+                    try:
+                        created = await c.request("create_session", {
+                            "groups": {0: [1, 2, 3]},
+                            "aggregation_timeout": 5.0})
+                        sid = created["session"]
+                        # the allocator owns what it allocated, and
+                        # advertises itself in the response
+                        assert shard_of(sid, 3) == k
+                        assert created["shard"] == k
+                        assert created["port"] == sb.shard_ports[k]
+                        for other in range(3):
+                            if other == k:
+                                continue
+                            c2 = await WireClient(
+                                addr[0], sb.shard_ports[other]).connect()
+                            try:
+                                # raw send/recv: observe the redirect
+                                # itself (request() would follow it)
+                                await c2._send("get_stats",
+                                               {"session": sid})
+                                res = await c2._recv("get_stats")
+                                assert res["status"] == "redirect"
+                                assert res["shard"] == k
+                                assert res["port"] == sb.shard_ports[k]
+                            finally:
+                                await c2.close()
+                        st = await c.request("get_stats", {"session": sid})
+                        assert st["aggregation_total"] == 0
+                        await c.request("delete_session", {"session": sid})
+                    finally:
+                        await c.close()
+            finally:
+                await sb.stop()
+
+        asyncio.run(go())
+
+    def test_wrong_shard_dial_completes_round_bit_identically(self):
+        """Every learner dials the WRONG worker's direct port; the §12
+        redirect settles each onto the owner after one bounce and the
+        round completes — same bits as the sim, same §5 closed form."""
+        from repro.core.machines import build_round_machines
+        from repro.net import ShardedBroker, WireClient, shard_of
+        from repro.net.client import drive_learner
+        from repro.topology import RingTopology
+
+        n, V = 4, 16
+        vals = _vals(n, V, seed=50)
+
+        async def go():
+            sb = ShardedBroker(2, **self.BROKER_KW)
+            addr = await sb.start()
+            try:
+                topo = RingTopology(n, 1)
+                groups = topo.group_chains(node_base=1)
+                initiators = {r + 1 for r in topo.elect_initiators()}
+                machines = build_round_machines(
+                    vals, topo, groups, initiators)
+                admin = await WireClient(
+                    addr[0], sb.shard_ports[0]).connect()
+                try:
+                    created = await admin.request("create_session", {
+                        "groups": groups, "aggregation_timeout": 30.0})
+                    sid = created["session"]
+                    owner = shard_of(sid, 2)
+                    wrong = sb.shard_ports[1 - owner]
+
+                    async def drive(node, gen):
+                        c = await WireClient(
+                            addr[0], wrong, node=node).connect()
+                        try:
+                            await drive_learner(
+                                gen, c, sid,
+                                aggregation_timeout=created[
+                                    "aggregation_timeout"])
+                            # the redirect moved this client's socket to
+                            # the owning worker's direct port
+                            assert c.port == sb.shard_ports[owner]
+                        finally:
+                            await c.close()
+
+                    await asyncio.gather(
+                        *(drive(nd, gen)
+                          for nd, gen in machines.items()))
+                    stats = await admin.request(
+                        "get_stats", {"session": sid})
+                    final = await admin.request(
+                        "peek_average", {"session": sid})
+                    await admin.request(
+                        "delete_session", {"session": sid})
+                    return stats, final
+                finally:
+                    await admin.close()
+            finally:
+                await sb.stop()
+
+        stats, final = asyncio.run(go())
+        sim = run_safe_round(vals)
+        assert np.array_equal(sim.average, final["average"])
+        assert stats["aggregation_total"] == 4 * n
+
+    def test_rounds_via_shared_port_and_dispatcher(self):
+        """Full rounds through both shared-port flavours: SO_REUSEPORT
+        (kernel spreads first contacts) and the accept-and-hand-off
+        dispatcher (``use_reuseport=False``) — bit-identical, closed
+        form intact, and consecutive rounds land on distinct shards
+        (the sid stride walks the workers)."""
+        from repro.net import ShardedBroker
+
+        vals = _vals(6, 16, seed=51)
+        sim = run_safe_round(vals)
+
+        async def go(use_reuseport):
+            sb = ShardedBroker(2, use_reuseport=use_reuseport,
+                               **self.BROKER_KW)
+            addr = await sb.start()
+            try:
+                return [await run_safe_round_net(vals, addr)
+                        for _ in range(2)]
+            finally:
+                await sb.stop()
+
+        for use_reuseport in (True, False):
+            for net in asyncio.run(go(use_reuseport)):
+                assert np.array_equal(sim.average, net.average)
+                assert net.stats["aggregation_total"] == 4 * 6
+
+    def test_get_shard_map_single_broker(self):
+        """The op is additive (§9): an UNsharded broker answers it too,
+        reporting a one-shard world — clients need no capability probe."""
+
+        async def go():
+            broker = SafeBroker(**self.BROKER_KW)
+            addr = await broker.start()
+            try:
+                from repro.net import WireClient
+
+                c = await WireClient(*addr).connect()
+                try:
+                    return await c.request("get_shard_map", {})
+                finally:
+                    await c.close()
+            finally:
+                await broker.stop()
+
+        m = asyncio.run(go())
+        assert m == {"shards": 1, "shard": 0, "ports": []}
 
 
 class _FakeEngineSession:

@@ -156,6 +156,105 @@ class TestValueTree:
         out += 1  # state machines do arithmetic on received payloads
 
 
+class TestZeroCopy:
+    """ISSUE 6 zero-copy relay guards: the codec must be correct when
+    decoding from a ``memoryview`` *slice* of a larger buffer (the
+    broker parses frames in place out of its receive buffer — offsets
+    are never zero in practice), and the parts encoders must emit
+    exactly the bytes of the contiguous encoders."""
+
+    @staticmethod
+    def _embed(body: bytes, pad_front: int, pad_back: int) -> memoryview:
+        """A view into a larger buffer, starting at a non-zero offset."""
+        buf = bytearray(b"\xAA" * pad_front + body + b"\x55" * pad_back)
+        return memoryview(buf)[pad_front:pad_front + len(body)]
+
+    @given(st.integers(1, 64), st.integers(1, 64),
+           st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=64),
+           st.integers(1, 37), st.integers(0, 9))
+    @settings(max_examples=30, deadline=None)
+    def test_request_roundtrip_from_offset_view(self, frm, to, payload,
+                                                pad_front, pad_back):
+        kwargs = dict(session=3, from_node=frm, to_node=to, group=0,
+                      payload=_u32(payload))
+        body = wire.encode_request("post_aggregate", kwargs)
+        view = self._embed(body, pad_front, pad_back)
+        op, got = wire.decode_request(view)
+        assert op == "post_aggregate"
+        assert _eq(got, kwargs)
+        # and the broker's no-copy flavour still yields the exact bits
+        op, got = wire.decode_request(view, copy_arrays=False)
+        assert _eq(got["payload"], kwargs["payload"])
+
+    @given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                    min_size=0, max_size=64),
+           st.integers(1, 37), st.integers(0, 9))
+    @settings(max_examples=30, deadline=None)
+    def test_response_roundtrip_from_offset_view(self, avg, pad_front,
+                                                 pad_back):
+        payload = {"average": np.asarray(avg, np.float32),
+                   "weight_avg": None, "time": 0.5}
+        body = wire.encode_response(payload)
+        got = wire.decode_response(self._embed(body, pad_front, pad_back))
+        assert _eq(got, payload)
+
+    def test_no_copy_decode_views_into_frame(self):
+        """copy_arrays=False returns read-only views aliasing the frame
+        buffer — the zero-copy contract the broker relay relies on."""
+        arr = np.arange(1024, dtype=np.uint32)
+        body = wire.encode_request("post_aggregate", dict(
+            session=0, from_node=1, to_node=2, group=0, payload=arr))
+        buf = bytearray(b"\x00" * 13 + body)  # non-zero start offset
+        view = memoryview(buf)[13:]
+        _, got = wire.decode_request(view, copy_arrays=False)
+        out = got["payload"]
+        assert not out.flags.writeable  # a view, not private storage
+        assert np.array_equal(out, arr)
+        # mutate the underlying buffer through one of out's words:
+        # the decoded array must alias it (no hidden copy)
+        base = np.frombuffer(buf, dtype=np.uint8)
+        probe_off = buf.index(arr[500].tobytes())
+        base[probe_off] ^= 0xFF
+        assert out[500] != arr[500]
+
+    def test_parts_encoders_match_contiguous(self):
+        """encode_*_parts joined == the bytes-returning encoders, for
+        small (coalesced) and large (segmented) arrays alike."""
+        for payload in (np.arange(4, dtype=np.uint32),
+                        np.arange(1 << 16, dtype=np.uint32)):
+            kwargs = dict(session=1, from_node=2, to_node=3, group=0,
+                          payload=payload)
+            parts = wire.encode_request_parts("post_aggregate", kwargs)
+            flat = wire.encode_request("post_aggregate", kwargs)
+            assert b"".join(bytes(p) for p in parts) == flat
+            assert wire.parts_nbytes(parts) == len(flat)
+            resp = {"aggregate": payload, "from_node": 2, "posted": 1,
+                    "time": 0.0}
+            rparts = wire.encode_response_parts(resp)
+            rflat = wire.encode_response(resp)
+            assert b"".join(bytes(p) for p in rparts) == rflat
+            framed = wire.encode_frame_parts(rparts)
+            assert b"".join(bytes(p) for p in framed) == \
+                wire.encode_frame(rflat)
+
+    def test_large_array_segment_is_a_view(self):
+        """Arrays past the coalescing threshold ride as views of the
+        caller's buffer — encoding a big payload must not duplicate it."""
+        arr = np.arange(1 << 16, dtype=np.uint32)
+        parts = wire.encode_request_parts("post_aggregate", dict(
+            session=0, from_node=1, to_node=2, group=0, payload=arr))
+        aliased = [p for p in parts if isinstance(p, memoryview)
+                   and p.nbytes == arr.nbytes]
+        assert aliased, "large payload was copied into the frame"
+        src = np.frombuffer(aliased[0], dtype=np.uint32)
+        assert np.shares_memory(src, arr)
+
+    def test_frame_parts_oversize_rejected(self):
+        big = [b"\x00" * (wire.MAX_FRAME + 1)]
+        with pytest.raises(wire.WireError):
+            wire.encode_frame_parts(big)
+
+
 class TestHardening:
     def test_truncated_frame(self):
         body = wire.encode_request("get_average", {"session": 0})
