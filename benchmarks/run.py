@@ -26,7 +26,7 @@ def main() -> None:
     from benchmarks import (common, constrained, device_aggregation, failover,
                             feature_scalability, hierarchical, kernel_bench,
                             messages, multi_session, net_load,
-                            node_scalability, paper_scale, streaming,
+                            node_scalability, paper_scale, slo, streaming,
                             subgrouping)
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -47,6 +47,8 @@ def main() -> None:
          "SAFE_PAPER_N512=1 adds n=512)", paper_scale.main),
         ("streaming", "streaming combine + persistent sessions (§8 wire)",
          streaming.main),
+        ("slo", "SLO-gated multi-tenant load + admission control "
+         "(repro/obs, ISSUE 7)", slo.main),
     ]
     failures = 0
     matched = 0

@@ -279,6 +279,53 @@ def run() -> dict:
     emit("streaming/auto_path", float(want_stream),
          f"V={V} -> {'streamed' if want_stream else 'buffered'}")
 
+    # ---- adaptive chunk sizing (ISSUE 7 satellite) ---------------------
+    # chunk_words="auto" derives the chunk size from the payload
+    # (client.auto_chunk_words: ~8 chunks, MIN_STREAM_WORDS multiples)
+    # instead of a fixed constant. The ROADMAP's x0.81–x1.02 losses at
+    # smoke/small-n came from fixed chunks far below MIN_STREAM_WORDS;
+    # the adaptive default must never be slower than the fixed one
+    # beyond localhost noise (1.6x — same bound as the auto-path row).
+    from repro.net import auto_chunk_words
+
+    rng = np.random.RandomState(11)
+    vals_ad = rng.uniform(-1, 1, (n0, V)).astype(np.float32)
+    sim_ad = run_safe_round(vals_ad)
+    aw = auto_chunk_words(V)
+    if aw % wire.MIN_STREAM_WORDS:
+        raise AssertionError(
+            f"auto_chunk_words({V})={aw} is not a MIN_STREAM_WORDS "
+            f"({wire.MIN_STREAM_WORDS}) multiple")
+
+    def _best_of_adaptive(k, cw):
+        res = [asyncio.run(_one_round(vals_ad, chunk_words=cw,
+                                      stream=None)) for _ in range(k)]
+        for r in res:
+            if not np.array_equal(sim_ad.average, r.average):
+                raise AssertionError(
+                    "adaptive-chunk bits diverged from sim")
+        return min(r.wall_time for r in res)
+
+    asyncio.run(_one_round(vals_ad, chunk_words="auto",
+                           stream=None))  # warm
+    wall_adaptive = _best_of_adaptive(3, "auto")
+    wall_fixed = _best_of_adaptive(3, CHUNK)
+    if wall_adaptive > wall_fixed * 1.6:
+        raise AssertionError(
+            f"adaptive chunking {wall_adaptive:.4f}s vs fixed "
+            f"chunk_words={CHUNK} {wall_fixed:.4f}s at V={V}: adaptive "
+            f"default slower than fixed beyond noise")
+    out["adaptive_chunk"] = {
+        "auto_chunk_words": aw,
+        "fixed_chunk_words": CHUNK,
+        "adaptive_s": wall_adaptive,
+        "fixed_s": wall_fixed,
+        "adaptive_over_fixed": wall_adaptive / wall_fixed,
+    }
+    emit(f"streaming/adaptive_chunk_n{n0}", wall_adaptive * 1e6,
+         f"x{wall_adaptive / wall_fixed:.2f} vs fixed {CHUNK} at V={V} "
+         f"(auto picked {aw})")
+
     out["bit_equal"] = True  # every row above asserted it first
     emit("streaming/bit_equal", 1.0,
          "streamed == buffered == persistent == sim, bitwise")

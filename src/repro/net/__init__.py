@@ -15,11 +15,13 @@ Numpy-only by design (no JAX import) so a broker or learner can run on
 hosts without an accelerator stack; the engine plane takes an already-
 constructed ``serve.AggregationEngine`` by injection.
 """
-from repro.net.broker import SafeBroker
+from repro.net.broker import DEFAULT_CHUNK_BUDGET_BYTES, SafeBroker
 from repro.net.client import (
     NetResult,
     PersistentNetSession,
     WireClient,
+    auto_chunk_words,
+    backoff_delay,
     drive_learner,
     run_federated_round_net,
     run_federated_rounds_net,
@@ -38,13 +40,18 @@ from repro.net.faults import (
 from repro.net.shard import ShardBroker, ShardedBroker, shard_of
 from repro.net.loadgen import (
     LoadReport,
+    SLOReport,
     run_engine_load,
     run_paper_scale,
     run_protocol_load,
+    run_slo_load,
 )
 
 __all__ = [
     "SafeBroker",
+    "DEFAULT_CHUNK_BUDGET_BYTES",
+    "auto_chunk_words",
+    "backoff_delay",
     "ShardBroker",
     "ShardedBroker",
     "shard_of",
@@ -64,7 +71,9 @@ __all__ = [
     "LearnerCrashed",
     "deep_edge_faults",
     "LoadReport",
+    "SLOReport",
     "run_engine_load",
     "run_protocol_load",
     "run_paper_scale",
+    "run_slo_load",
 ]

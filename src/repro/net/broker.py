@@ -44,6 +44,16 @@ import numpy as np
 
 from repro.core.controller import CALL_OPS, TIMED_OPS, WAIT_KINDS, Controller
 from repro.net import wire
+from repro.obs import MetricsRegistry, Tracer
+
+#: Default per-session in-flight-chunk-bytes budget (ISSUE 7 admission
+#: control): the sum of a session's buffered-but-not-yet-posted
+#: transfer bytes past which new transfers are answered
+#: ``{"status": "busy", "retry_after": t}`` instead of buffered. Sized
+#: far above any legitimate round (4x MAX_FRAME) so only a genuinely
+#: flooding tenant — many concurrent un-posted uploads — is shed, and
+#: only sheds *itself* (the budget is per session). ``None`` disables.
+DEFAULT_CHUNK_BUDGET_BYTES = 4 * wire.MAX_FRAME
 
 
 class _Transfer:
@@ -57,7 +67,7 @@ class _Transfer:
     """
 
     __slots__ = ("owner", "xfer", "op", "kwargs", "asm", "chunk_words",
-                 "posted", "last_chunk_at")
+                 "posted", "last_chunk_at", "created_at", "nbytes")
 
     def __init__(self, owner: int, xfer: int, op: str, kwargs: dict,
                  total: int, chunk_words: int, now: float):
@@ -72,6 +82,8 @@ class _Transfer:
         self.chunk_words = chunk_words
         self.posted = False       # logical op executed (transfer complete)
         self.last_chunk_at = now  # staleness clock for slot ownership
+        self.created_at = now     # trace span start (ISSUE 7)
+        self.nbytes = 0           # buffered payload bytes (backlog series)
 
     def same_transfer(self, owner: int, xfer: int) -> bool:
         return self.owner == owner and self.xfer == xfer
@@ -82,9 +94,12 @@ class _Session:
 
     __slots__ = ("sid", "ctrl", "cond", "closed", "monitor_reposts",
                  "initiator_elections", "transfers", "chunk_frames_in",
-                 "chunk_frames_out", "transfers_completed")
+                 "chunk_frames_out", "transfers_completed",
+                 # observability plane (ISSUE 7) — observes, never alters
+                 "round_t0", "round_published", "rounds_completed",
+                 "pending_bytes", "busy_rejections")
 
-    def __init__(self, sid: int, ctrl: Controller):
+    def __init__(self, sid: int, ctrl: Controller, now: float = 0.0):
         self.sid = sid
         self.ctrl = ctrl
         self.cond = asyncio.Condition()
@@ -96,12 +111,33 @@ class _Session:
         self.chunk_frames_in = 0
         self.chunk_frames_out = 0
         self.transfers_completed = 0
+        # round lifecycle series: round_t0 restarts at create/reset, the
+        # latency histogram observes it on global publication
+        self.round_t0 = now
+        self.round_published = False
+        self.rounds_completed = 0
+        # admission control: buffered-but-un-posted transfer bytes
+        self.pending_bytes = 0
+        self.busy_rejections = 0
+
+    def forget_transfer(self, key: tuple) -> Optional[_Transfer]:
+        """The single transfer-removal path: un-posted buffers leave the
+        backlog accounting when they leave the table (posted buffers
+        already left it at posting time)."""
+        tr = self.transfers.pop(key, None)
+        if tr is not None and not tr.posted:
+            self.pending_bytes -= tr.nbytes
+        return tr
 
     def drop_group_transfers(self, group: int) -> None:
         """Forget every (partial or posted) transfer of one group — the
         round restarted (§5.4), so stale chunks must not be served."""
         for key in [k for k in self.transfers if k[1] == group]:
-            del self.transfers[key]
+            self.forget_transfer(key)
+
+    def clear_transfers(self) -> None:
+        for key in list(self.transfers):
+            self.forget_transfer(key)
 
 
 async def _cond_wait(cond: asyncio.Condition, deadline: Optional[float]) -> bool:
@@ -159,11 +195,44 @@ class SafeBroker:
     def __init__(self, aggregation_timeout: float = 30.0,
                  progress_timeout: float = 1.0,
                  monitor_interval: float = 0.25,
-                 engine=None, engine_session_ttl: float = 300.0):
+                 engine=None, engine_session_ttl: float = 300.0,
+                 chunk_budget_bytes: Optional[int]
+                 = DEFAULT_CHUNK_BUDGET_BYTES,
+                 busy_retry_after: float = 0.05,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.aggregation_timeout = aggregation_timeout
         self.progress_timeout = progress_timeout
         self.monitor_interval = monitor_interval
         self.engine_session_ttl = engine_session_ttl
+        # admission control (ISSUE 7, PROTOCOL.md §13): per-session
+        # budget on buffered-but-un-posted chunk bytes; the suggested
+        # client back-off rides the busy response
+        self.chunk_budget_bytes = chunk_budget_bytes
+        self.busy_retry_after = busy_retry_after
+        # observability plane (ISSUE 7): a per-broker registry (each
+        # shard worker process reports its own series) and a ring-buffer
+        # tracer, disabled unless a caller opts in
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._m_rounds = self.metrics.counter("safe_rounds_completed_total")
+        self._m_round_lat = self.metrics.histogram(
+            "safe_round_latency_seconds")
+        self._m_reposts = self.metrics.counter("safe_monitor_reposts_total")
+        self._m_elections = self.metrics.counter(
+            "safe_initiator_elections_total")
+        self._m_busy = self.metrics.counter("safe_busy_responses_total")
+        self._m_chunks_in = self.metrics.counter(
+            "safe_chunk_frames_in_total")
+        self._m_chunks_out = self.metrics.counter(
+            "safe_chunk_frames_out_total")
+        self._m_transfers = self.metrics.counter(
+            "safe_transfers_completed_total")
+        self._m_sessions_created = self.metrics.counter(
+            "safe_sessions_created_total")
+        self._m_redirects = self.metrics.counter("safe_redirects_total")
+        self._m_active = self.metrics.gauge("safe_active_sessions")
+        self._m_backlog = self.metrics.gauge("safe_chunk_backlog_bytes")
         self._sessions: Dict[int, _Session] = {}
         self._sids = itertools.count()
         self._server: Optional[asyncio.AbstractServer] = None
@@ -339,11 +408,120 @@ class SafeBroker:
         """Shard topology for shard-aware clients (PROTOCOL.md §12).
         The single-process broker is its own sole shard; the sharded
         runtime (repro.net.shard) overrides this with the real map."""
-        return {"shards": 1, "shard": 0, "ports": []}
+        return {"shards": 1, "shard": 0, "ports": [], "shard_alive": [True]}
+
+    # ------------------------------------------------------------------
+    # observability plane (ISSUE 7, docs/PROTOCOL.md §13)
+    # ------------------------------------------------------------------
+    def _refresh_gauges(self) -> None:
+        """Point-in-time gauges are computed at read time (the hot path
+        never sums across sessions)."""
+        self._m_backlog.set(
+            sum(s.pending_bytes for s in self._sessions.values()))
+        self._m_active.set(len(self._sessions))
+
+    def _get_metrics(self, kwargs: dict) -> dict:
+        """Live metrics snapshot (opcode ``get_metrics``, admin-class:
+        uncounted, untimed — MessageStats and the §5 closed forms cannot
+        see it). ``session`` (optional) narrows the per-session map; on
+        a sharded broker a session-addressed request redirects to the
+        owner like any other session op, a sessionless one is answered
+        by whichever worker the socket reached (per-shard series)."""
+        self._refresh_gauges()
+        up = self.now()
+        rate_base = max(up, 1e-9)
+        only = kwargs.get("session")
+        sessions = {}
+        for sid, s in self._sessions.items():
+            if only is not None and sid != only:
+                continue
+            sessions[sid] = {
+                "rounds_completed": s.rounds_completed,
+                "monitor_reposts": s.monitor_reposts,
+                "initiator_elections": s.initiator_elections,
+                "chunk_backlog_bytes": s.pending_bytes,
+                "transfers_completed": s.transfers_completed,
+                "busy_rejections": s.busy_rejections,
+            }
+        shard_map = self._shard_map()
+        return {
+            "uptime_s": up,
+            "shard": shard_map.get("shard"),
+            "shards": shard_map.get("shards"),
+            "rounds_completed": self._m_rounds.value,
+            "rounds_per_s": self._m_rounds.value / rate_base,
+            "round_latency_p50_s": self._m_round_lat.percentile(50.0),
+            "round_latency_p99_s": self._m_round_lat.percentile(99.0),
+            "monitor_reposts": self._m_reposts.value,
+            "initiator_elections": self._m_elections.value,
+            "busy_rejections": self._m_busy.value,
+            "redirects": self._m_redirects.value,
+            "chunk_backlog_bytes": int(self._m_backlog.value),
+            "active_sessions": len(self._sessions),
+            "sessions": sessions,
+            "series": self.metrics.snapshot(),
+            "trace_spans": len(self.tracer),
+        }
+
+    async def start_metrics_http(self, host: str = "127.0.0.1",
+                                 port: int = 0) -> Tuple[str, int]:
+        """Optional plaintext HTTP exporter: ``GET /metrics`` answers
+        the registry in Prometheus text exposition format (stdlib only
+        — a hand-rolled HTTP/1.0 responder, one request per
+        connection). Closed with the broker on ``stop()``."""
+        server = await asyncio.start_server(
+            self._handle_metrics_http, host, port)
+        self._extra_servers.append(server)
+        addr = server.sockets[0].getsockname()
+        return addr[0], addr[1]
+
+    async def _handle_metrics_http(self, reader: asyncio.StreamReader,
+                                   writer: asyncio.StreamWriter) -> None:
+        self._conn_tasks.add(asyncio.current_task())
+        try:
+            request_line = await reader.readline()
+            parts = request_line.decode("latin-1", "replace").split()
+            path = parts[1] if len(parts) >= 2 else "/"
+            while True:  # drain headers until the blank line
+                h = await reader.readline()
+                if h in (b"\r\n", b"\n", b""):
+                    break
+            if path.split("?", 1)[0] == "/metrics":
+                self._refresh_gauges()
+                shard = self._shard_map().get("shard", 0)
+                body = self.metrics.render_prometheus(
+                    labels=f'shard="{shard}"').encode()
+                status = "200 OK"
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            else:
+                body = b"try /metrics\n"
+                status = "404 Not Found"
+                ctype = "text/plain; charset=utf-8"
+            writer.write((
+                f"HTTP/1.0 {status}\r\n"
+                f"Content-Type: {ctype}\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: close\r\n\r\n").encode("latin-1") + body)
+            await writer.drain()
+        except (asyncio.IncompleteReadError, ConnectionResetError,
+                asyncio.CancelledError):
+            pass
+        finally:
+            self._conn_tasks.discard(asyncio.current_task())
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:  # noqa: BLE001
+                pass
 
     async def _dispatch(self, op: str, kwargs: dict):
         if op == "get_shard_map":
             return self._shard_map()
+        if op == "get_metrics":
+            # admin-class (PROTOCOL.md §13): never counted, never
+            # timed, no Controller interaction — answered before the
+            # session lookup so it needs no session to exist
+            return self._get_metrics(kwargs)
         if op == "create_session":
             return self._create_session(kwargs)
         if op == "submit_session":
@@ -367,6 +545,7 @@ class SafeBroker:
             # tear the tenant down: unpark any stragglers, stop the
             # monitor from scanning it, free the Controller state
             self._sessions.pop(sess.sid, None)
+            self._m_active.set(len(self._sessions))
             async with sess.cond:
                 sess.closed = True
                 sess.cond.notify_all()
@@ -393,9 +572,12 @@ class SafeBroker:
                 res = sess.ctrl.call(op, **kwargs)
                 if op == "should_initiate" and res:
                     sess.initiator_elections += 1
+                    self._m_elections.inc()
                     # round restarted (§5.4): stale chunk buffers of the
                     # aborted round must not be served to the new chain
                     sess.drop_group_transfers(kwargs.get("group", 0))
+                elif op == "post_average":
+                    self._note_post_average(sess)
                 sess.cond.notify_all()
             return res
         if op == "peek_average":
@@ -409,14 +591,38 @@ class SafeBroker:
             stats["chunk_frames_in"] = sess.chunk_frames_in
             stats["chunk_frames_out"] = sess.chunk_frames_out
             stats["transfers_completed"] = sess.transfers_completed
+            stats["busy_rejections"] = sess.busy_rejections
             return stats
         if op == "reset_round":
             async with sess.cond:
                 sess.ctrl.reset_round()
-                sess.transfers.clear()
+                sess.clear_transfers()
+                # next round's latency clock starts at the reset
+                sess.round_published = False
+                sess.round_t0 = self.now()
                 sess.cond.notify_all()
             return None
         raise wire.WireError(f"unhandled op {op!r}")
+
+    def _note_post_average(self, sess: _Session) -> None:
+        """Round-lifecycle observation (holds ``sess.cond``): the first
+        post_average after which the *global* average is published
+        completes the session's round — count it and observe its
+        latency. A pure peek (``try_get_average``): the protocol result
+        is untouched."""
+        if sess.round_published:
+            return
+        if sess.ctrl.try_get_average() is None:
+            return
+        sess.round_published = True
+        sess.rounds_completed += 1
+        self._m_rounds.inc()
+        now = self.now()
+        self._m_round_lat.observe(now - sess.round_t0)
+        if self.tracer.enabled:
+            self.tracer.record("round", sess.round_t0, now,
+                               session=sess.sid,
+                               round=sess.rounds_completed - 1)
 
     # ------------------------------------------------------------------
     # protocol plane
@@ -438,7 +644,10 @@ class SafeBroker:
             timeout = self.aggregation_timeout
         sid = next(self._sids)
         self._sessions[sid] = _Session(
-            sid, Controller(groups, aggregation_timeout=float(timeout)))
+            sid, Controller(groups, aggregation_timeout=float(timeout)),
+            now=self.now())
+        self._m_sessions_created.inc()
+        self._m_active.set(len(self._sessions))
         return {"session": sid, "aggregation_timeout": float(timeout)}
 
     async def _long_poll(self, sess: _Session, kind: str, kwargs: dict):
@@ -473,9 +682,8 @@ class SafeBroker:
             if kind == "get_aggregate":
                 # the posting is consumed — its chunk buffer (if it
                 # streamed in) has nothing left to serve
-                sess.transfers.pop(
-                    ("agg", kwargs.get("group", 0), kwargs.get("node")),
-                    None)
+                sess.forget_transfer(
+                    ("agg", kwargs.get("group", 0), kwargs.get("node")))
                 if elide:
                     res = dict(res, aggregate=None, chunked=True)
             elif kind == "get_average" and elide:
@@ -531,6 +739,7 @@ class SafeBroker:
                 # Controller and ack success
                 raise wire.WireError(f"session {sess.sid} deleted")
             sess.chunk_frames_in += 1
+            self._m_chunks_in.inc()
             tr = sess.transfers.get(key)
             if tr is not None and tr.same_transfer(owner, xfer) \
                     and tr.posted:
@@ -566,8 +775,26 @@ class SafeBroker:
                 return {"seq": seq, "received": 0, "total": total,
                         "complete": False, "superseded": True}
             if tr is None or not tr.same_transfer(owner, xfer) or tr.posted:
+                # admission control (ISSUE 7, PROTOCOL.md §13): a NEW
+                # transfer that would push the session's un-posted
+                # backlog past its budget is shed with a retry hint —
+                # the budget is per session, so a flooding tenant
+                # throttles itself, never its neighbors. Continuation
+                # chunks of an admitted transfer are always accepted
+                # (completing a transfer *drains* the backlog), and a
+                # session with an empty backlog is always admitted —
+                # both rules together make the budget deadlock-free.
+                if (self.chunk_budget_bytes is not None
+                        and sess.pending_bytes > 0
+                        and sess.pending_bytes + payload.nbytes
+                        > self.chunk_budget_bytes):
+                    sess.busy_rejections += 1
+                    self._m_busy.inc()
+                    return {"status": "busy",
+                            "retry_after": self.busy_retry_after}
                 # a new transfer identity replaces a posted or gone-
                 # stale buffer for this slot (repost retry, next round)
+                sess.forget_transfer(key)
                 tr = _Transfer(owner, xfer, op, base, total, chunk_words,
                                now)
                 sess.transfers[key] = tr
@@ -576,18 +803,38 @@ class SafeBroker:
                     "chunk total/chunk_words mismatch within transfer "
                     f"{xfer}")
             tr.last_chunk_at = now
+            fresh = seq not in tr.asm.chunks
             done = tr.asm.add(seq, payload)
+            if fresh and not tr.posted:
+                tr.nbytes += payload.nbytes
+                sess.pending_bytes += payload.nbytes
             if done and not tr.posted:
                 tr.posted = True
+                # the buffer leaves the backlog accounting the moment
+                # the logical op executes (it stays in the table only
+                # as the §6 idempotency record)
+                sess.pending_bytes -= tr.nbytes
                 sess.transfers_completed += 1
+                self._m_transfers.inc()
+                if self.tracer.enabled:
+                    self.tracer.record("transfer", tr.created_at,
+                                       self.now(), session=sess.sid,
+                                       op=op, owner=owner, xfer=xfer,
+                                       chunks=tr.asm.total)
                 call_kw = dict(tr.kwargs, now=self.now())
                 field = "payload" if op == "post_aggregate" else "average"
                 call_kw[field] = tr.asm.assemble()
                 sess.ctrl.call(op, **call_kw)
+                if op == "post_average":
+                    self._note_post_average(sess)
                 # the posted buffer stays (for post_average too, even
                 # though averages are served from controller state): it
                 # is the idempotency record that lets a repeated final
                 # chunk be re-acked instead of re-executing the op
+            elif self.tracer.enabled:
+                self.tracer.record("chunk", now, self.now(),
+                                   session=sess.sid, op=op, owner=owner,
+                                   xfer=xfer, seq=seq)
             sess.cond.notify_all()
         return {"seq": seq, "received": len(tr.asm.chunks), "total": total,
                 "complete": tr.posted}
@@ -677,6 +924,7 @@ class SafeBroker:
             res = probe()
             if res is not None:
                 sess.chunk_frames_out += 1
+                self._m_chunks_out.inc()
             return res
 
         res = await _park(sess.cond, guarded, deadline)
@@ -709,9 +957,9 @@ class SafeBroker:
                             sess.ctrl.order_repost(group, poster, failed)
                             # the dead target's chunk buffer dies with
                             # its posting — the repost streams afresh
-                            sess.transfers.pop(("agg", group, failed),
-                                               None)
+                            sess.forget_transfer(("agg", group, failed))
                             sess.monitor_reposts += 1
+                            self._m_reposts.inc()
                             sess.cond.notify_all()
                 except asyncio.CancelledError:
                     raise

@@ -63,7 +63,59 @@ Addr = Tuple[str, int]
 #: half of MAX_FRAME, so headers/retries never graze the frame cap).
 AUTO_CHUNK_WORDS = 8 << 20
 
+#: adaptive chunk sizing targets this many chunks per payload — enough
+#: for the §8 pipeline to overlap transfer and crypto, few enough that
+#: per-chunk framing overhead stays negligible.
+AUTO_CHUNK_TARGET = 8
+
 _xfer_ids = itertools.count(1)
+
+
+def backoff_delay(attempt: int, *, base: float, cap: float = 0.5,
+                  seed: int = 0) -> float:
+    """Capped exponential backoff with deterministic jitter.
+
+    ``base * 2**attempt`` capped at ``cap``, scaled by a multiplicative
+    jitter in ``[0.5, 1.0)`` derived from a Knuth hash of
+    ``(seed, attempt)`` — NOT from a global RNG, so fault-injection
+    tests replay the exact same sleep schedule run after run. Shared by
+    the drop-retry loop (:meth:`WireClient._send`) and the
+    busy/retry-after loop (:meth:`WireClient.request`); ``seed`` is the
+    node id, so co-tenant learners desynchronize instead of
+    thundering-herding the broker on the same tick.
+    """
+    h = ((seed * 1_000_003 + attempt) * 2_654_435_761) & 0xFFFFFFFF
+    return min(cap, base * (1 << min(attempt, 16))) * (0.5 + h / 2**33)
+
+
+def auto_chunk_words(payload_words: int) -> int:
+    """Derive a chunk size from the payload size (ISSUE 7 satellite).
+
+    Targets :data:`AUTO_CHUNK_TARGET` chunks per payload, clamped to a
+    multiple of ``wire.MIN_STREAM_WORDS`` (so the streaming combine's
+    small-chunk regression regime is never entered) and capped at
+    ``wire.DEFAULT_CHUNK_WORDS`` (so no chunk approaches the frame
+    limit). Payloads at or below one ``MIN_STREAM_WORDS`` quantum come
+    back larger than the payload — i.e. unchunked, which is faster for
+    small vectors (BENCH_streaming.json's small-n ablation).
+    """
+    target = -(-int(payload_words) // AUTO_CHUNK_TARGET)  # ceil div
+    quanta = max(1, round(target / wire.MIN_STREAM_WORDS))
+    return min(quanta * wire.MIN_STREAM_WORDS, wire.DEFAULT_CHUNK_WORDS)
+
+
+def _resolve_chunk_words(chunk_words, payload_words: int):
+    """The shared chunk-size defaulting rule: ``"auto"`` derives from
+    the payload; ``None`` stays unchunked until the payload clears
+    ``AUTO_CHUNK_WORDS`` and then derives the same way (which at that
+    scale is exactly ``wire.DEFAULT_CHUNK_WORDS`` — the legacy fixed
+    default, so existing byte-level expectations hold); an int is
+    taken as-is."""
+    if chunk_words == "auto":
+        return auto_chunk_words(payload_words)
+    if chunk_words is None and payload_words > AUTO_CHUNK_WORDS:
+        return auto_chunk_words(payload_words)
+    return chunk_words
 
 
 class WireClient:
@@ -141,13 +193,19 @@ class WireClient:
         framed = wire.encode_frame_parts(
             wire.encode_request_parts(op, kwargs))
         nbytes = wire.parts_nbytes(framed)
+        attempt = 0
         while True:
             if self.interceptor is not None:
                 try:
                     await self.interceptor.on_request(
                         self.node, op, nbytes)
                 except DropPacket:
-                    await asyncio.sleep(self.retry_backoff)
+                    # capped exponential + deterministic jitter: a bursty
+                    # drop schedule stops hammering the loop, and the
+                    # schedule replays exactly (seeded by node id)
+                    await asyncio.sleep(backoff_delay(
+                        attempt, base=self.retry_backoff, seed=self.node))
+                    attempt += 1
                     continue
             self._writer.writelines(framed)
             await self._writer.drain()
@@ -182,7 +240,15 @@ class WireClient:
             except Exception:  # noqa: BLE001
                 pass
         self.port = int(port)
-        await self.connect()
+        try:
+            await self.connect()
+        except OSError as exc:
+            # a dead shard worker's port refuses/RSTs — surface a clear
+            # error instead of letting the raw OSError (or a hang on a
+            # half-open socket) escape to the learner task
+            raise wire.WireError(
+                f"redirect to port {port} failed — shard worker "
+                f"unreachable (dead?): {exc}") from exc
 
     async def request(self, op: str, kwargs: dict) -> Any:
         """One RPC. A DropPacket from the interceptor loses the frame
@@ -192,17 +258,33 @@ class WireClient:
         A ``{"status": "redirect", "port": p}`` response (a sharded
         broker, PROTOCOL.md §12) reconnects to the owning shard and
         replays the request — sessions never migrate, so at most one
-        hop settles every subsequent op onto the right worker."""
+        hop settles every subsequent op onto the right worker.
+
+        A ``{"status": "busy", "retry_after": t}`` response (admission
+        control, PROTOCOL.md §13) sleeps at least ``retry_after`` —
+        raised to the capped-exponential backoff as rejections repeat —
+        then replays the same frame. The broker rejected it wholesale
+        (nothing was buffered), so the replay is exact-once in effect."""
         await self._send(op, kwargs)
         res = await self._recv(op)
         hops = 0
-        while (isinstance(res, dict) and res.get("status") == "redirect"
-               and res.get("port") is not None):
-            hops += 1
-            if hops > 4:
-                raise wire.WireError(
-                    f"redirect loop for {op} (port {res.get('port')})")
-            await self.redirect(int(res["port"]))
+        attempt = 0
+        while isinstance(res, dict):
+            if (res.get("status") == "redirect"
+                    and res.get("port") is not None):
+                hops += 1
+                if hops > 4:
+                    raise wire.WireError(
+                        f"redirect loop for {op} (port {res.get('port')})")
+                await self.redirect(int(res["port"]))
+            elif res.get("status") == "busy":
+                await asyncio.sleep(max(
+                    float(res.get("retry_after") or 0.0),
+                    backoff_delay(attempt, base=self.retry_backoff,
+                                  seed=self.node)))
+                attempt += 1
+            else:
+                break
             await self._send(op, kwargs)
             res = await self._recv(op)
         return res
@@ -219,11 +301,19 @@ class WireClient:
         swallowed, not raised: the state machine's own
         ``check_aggregate`` / timeout path observes that the post never
         landed and recovers through the §5.3/§5.4 machinery — exactly
-        as it would for an unchunked post lost to a reset."""
+        as it would for an unchunked post lost to a reset.
+
+        A chunk refused by admission control (``status: "busy"``,
+        PROTOCOL.md §13 — only possible while this transfer has nothing
+        buffered yet, since continuations are always admitted) is noted
+        and replayed after the pipelined pass: the replay rides
+        :meth:`request`, whose busy loop honors ``retry_after``, and
+        once ONE chunk lands the rest are continuations."""
         arr = np.ascontiguousarray(kwargs[payload_field]).ravel()
         total = wire.num_chunks(arr.size, chunk_words)
         meta = {k: v for k, v in kwargs.items() if k != payload_field}
         xfer = next(_xfer_ids)
+        busy: list = []
 
         def frame(seq: int) -> dict:
             return dict(meta, session=session, op=op, xfer=xfer, seq=seq,
@@ -234,15 +324,26 @@ class WireClient:
         for seq in range(1, total):
             await self._send("post_chunk", frame(seq))
             self.chunk_frames += 1
-            res = await self._recv("post_chunk")
-            if res.get("superseded"):
+            res = await self._recv("post_chunk")  # ack of frame(seq-1)
+            if res.get("status") == "busy":
+                busy.append(seq - 1)
+            elif res.get("superseded"):
                 # drain the frame already in flight, then stop wasting
                 # bytes — this upload lost its slot
                 self.chunk_frames += 1
                 await self._recv("post_chunk")
                 return
         self.chunk_frames += 1
-        await self._recv("post_chunk")
+        res = await self._recv("post_chunk")  # ack of the last frame
+        if res.get("status") == "busy":
+            busy.append(total - 1)
+        elif res.get("superseded"):
+            return
+        for seq in busy:
+            res = await self.request("post_chunk", frame(seq))
+            self.chunk_frames += 1
+            if res.get("superseded"):
+                return
 
     async def _chunk_stream(self, kind: str, kwargs: dict, session: int,
                             chunk_words: int, deadline: Optional[float],
@@ -398,7 +499,11 @@ class WireClient:
             xf = acks.popleft()
             if xf != st["xfer"]:
                 return  # ack of an abandoned stream
-            if ack.get("superseded"):
+            if ack.get("superseded") or ack.get("status") == "busy":
+                # lost the slot — or admission control refused the
+                # stream (§13). Either way stop uploading; the machine
+                # falls back to posting the whole vector itself, and
+                # THAT path retries busy via request()
                 st["dead"] = True
             elif ack.get("complete"):
                 st["complete"] = True
@@ -729,7 +834,9 @@ async def run_safe_round_net(
     ``chunk_words`` enables the chunked transfer plane for payloads
     longer than that many elements; by default it switches on
     automatically once the payload could not safely fit one frame
-    (AUTO_CHUNK_WORDS). Chunked hops run the chunk-granular streaming
+    (AUTO_CHUNK_WORDS). Pass the string ``"auto"`` to derive the chunk
+    size from the payload instead (:func:`auto_chunk_words` — ~8
+    chunks, clamped to ``MIN_STREAM_WORDS`` multiples). Chunked hops run the chunk-granular streaming
     combine (crypto overlapped with transfer inside each hop) when the
     payload clears ``wire.MIN_STREAM_WORDS`` — ``stream=True`` forces
     it, ``stream=False`` disables it (see :func:`drive_learner`);
@@ -746,8 +853,7 @@ async def run_safe_round_net(
     values = np.asarray(values, np.float32)
     n, V = values.shape
     payload_words = V + 1 if weights is not None else V
-    if chunk_words is None and payload_words > AUTO_CHUNK_WORDS:
-        chunk_words = wire.DEFAULT_CHUNK_WORDS
+    chunk_words = _resolve_chunk_words(chunk_words, payload_words)
     topo = RingTopology(n, subgroups)
     topo.validate_privacy()
     groups = topo.group_chains(node_base=1)
@@ -960,9 +1066,7 @@ class PersistentNetSession:
                 f"round up front")
         if counter is None:
             counter = self._cursor.next_round()
-        chunk_words = self.chunk_words
-        if chunk_words is None and payload_words > AUTO_CHUNK_WORDS:
-            chunk_words = wire.DEFAULT_CHUNK_WORDS
+        chunk_words = _resolve_chunk_words(self.chunk_words, payload_words)
 
         failed = set(failed_nodes)
         machines = build_round_machines(

@@ -20,6 +20,12 @@ Three load shapes, matching the broker's planes:
     ``core/bon_protocol.py`` baseline at the same n
     (EXPERIMENTS.md §Paper-scale).
 
+:func:`run_slo_load` closes the observability loop (ISSUE 7): heavy-
+tailed multi-tenant profiles driven against a live ``get_metrics``
+poller, with the SLOs — p99 round latency, zero dropped sessions,
+bounded chunk backlog — evaluated in-harness into a pass/fail the CI
+smoke gate asserts (``benchmarks/slo.py``).
+
 For scale-out measurements ``run_protocol_load`` can spread its tenants
 over spawned worker processes (``client_procs``) so a sharded broker
 (``repro.net.shard``) is measured against a client that can actually
@@ -108,6 +114,267 @@ def _report(plane: str, tenants: int, lats: List[float],
         p50_s=float(np.percentile(arr, 50)),
         p99_s=float(np.percentile(arr, 99)),
         latencies_s=lats)
+
+
+@dataclasses.dataclass
+class SLOReport:
+    """One SLO-gated load run (ISSUE 7): client-observed latencies plus
+    the broker's own metrics plane, with the service-level objectives
+    evaluated in-harness so a regression fails the bench, not just
+    drifts a JSON number."""
+
+    profile: str
+    tenants: int
+    heavy_tenants: int
+    rounds: int
+    wall_s: float
+    rounds_per_s: float
+    p50_s: float
+    p99_s: float
+    dropped_sessions: int
+    busy_rejections: int      # broker-side admissions refused (total)
+    shed_tenants: int         # tenants busy'd >= once that still finished
+    backlog_peak_bytes: int   # max chunk_backlog_bytes seen while polling
+    metrics_samples: int      # live get_metrics polls during the run
+    broker_rounds_completed: int
+    slo_p99_s: float
+    slo_backlog_bytes: int
+    passed: bool
+    error: Optional[str] = None
+
+    def row(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "profile", "tenants", "heavy_tenants", "rounds", "wall_s",
+            "rounds_per_s", "p50_s", "p99_s", "dropped_sessions",
+            "busy_rejections", "shed_tenants", "backlog_peak_bytes",
+            "metrics_samples", "broker_rounds_completed", "slo_p99_s",
+            "slo_backlog_bytes", "passed")}
+
+
+async def run_slo_load(
+    *,
+    profile: str = "steady",
+    tenants: int = 4,
+    rounds_per_tenant: int = 3,
+    n: int = 6,
+    V: int = 256,
+    heavy_tenants: int = 1,
+    heavy_factor: int = 8,
+    heavy_subgroups: int = 2,
+    chunk_words: Optional[int] = None,
+    heavy_chunk_words: Optional[int] = None,
+    chunk_budget_bytes: Optional[int] = "default",  # sentinel, see below
+    seed: int = 0,
+    shards: int = 1,
+    slo_p99_s: float = 60.0,
+    slo_backlog_bytes: Optional[int] = None,
+    metrics_poll_s: float = 0.02,
+    bit_identical: bool = True,
+    progress_timeout: float = 2.0,
+    monitor_interval: float = 0.5,
+    aggregation_timeout: float = 120.0,
+) -> SLOReport:
+    """Heavy-tailed multi-tenant load with asserted SLOs (ISSUE 7).
+
+    Starts its own broker (sharded when ``shards > 1``), drives
+    ``tenants`` concurrent tenants — each running full n-learner SAFE
+    rounds — and polls the live ``get_metrics`` plane the whole time.
+    Three traffic profiles:
+
+      * ``"steady"`` — every tenant ships the same V-word vector; the
+        uniform baseline (no admission pressure expected).
+      * ``"heavy_tail"`` — the first ``heavy_tenants`` tenants ship
+        ``heavy_factor``× larger vectors over the chunk plane while the
+        rest stay small: the many-small/few-huge shape real federations
+        have, under the default (ample) chunk budget.
+      * ``"busy_shed"`` — heavy tail against a deliberately small
+        per-session chunk budget (one chunk), so the flooding tenants'
+        concurrent transfers get ``busy``-shed and must retry-after
+        their way through (the §13 admission loop) while small tenants
+        never see a rejection.
+
+    Heavy tenants run ``heavy_subgroups`` parallel §5.5 group chains
+    (default 2 — the minimum n is then 6, two rings of 3 for the
+    privacy bound): the two chains post concurrently into ONE session,
+    which is what makes admission pressure *deterministic* — with a
+    single chain the SAFE hops are strictly sequential and the backlog
+    drains between transfers, so nothing would ever be refused.
+
+    SLOs evaluated into ``passed``: client-observed p99 round latency
+    ``<= slo_p99_s``; **zero** dropped sessions (every tenant finished
+    every round with the §5 closed-form message count and — when
+    ``bit_identical`` — an average ``np.array_equal`` to the sim's);
+    peak chunk backlog ``<= slo_backlog_bytes`` (default: 2× tenants ×
+    (budget + one full payload) — an admitted transfer's continuations
+    may legitimately overrun the budget, §13, so "bounded" means
+    bounded by that, not by the budget alone). A tenant that was
+    busy'd at least once and still
+    finished all its rounds counts into ``shed_tenants`` — the
+    shed-and-recovered signal CI gates on.
+    """
+    from repro.core.protocol import run_safe_round
+    from repro.net.broker import DEFAULT_CHUNK_BUDGET_BYTES
+
+    if profile not in ("steady", "heavy_tail", "busy_shed"):
+        raise ValueError(f"unknown SLO profile {profile!r}")
+    heavy = set(range(heavy_tenants)) if profile != "steady" else set()
+    heavy_V = V * heavy_factor
+    if heavy_chunk_words is None:
+        # chunk the heavy tenants' traffic so the transfer plane (and
+        # its budget) is actually exercised: ~16 chunks per payload
+        heavy_chunk_words = max(1, heavy_V // 16)
+    if chunk_budget_bytes == "default":
+        if profile == "busy_shed":
+            # ONE chunk of budget: the first in-flight transfer claims
+            # the whole session (its continuations are always admitted —
+            # §13 keeps streams deadlock-free, and an empty backlog
+            # always admits), so the OTHER group chain's first chunk is
+            # refused until it drains — guaranteed shedding
+            chunk_budget_bytes = heavy_chunk_words * 4
+        else:
+            chunk_budget_bytes = DEFAULT_CHUNK_BUDGET_BYTES
+    budget = (DEFAULT_CHUNK_BUDGET_BYTES if chunk_budget_bytes is None
+              else int(chunk_budget_bytes))
+    if slo_backlog_bytes is None:
+        # "bounded" per §13 means: at most ~one over-budget transfer's
+        # continuations per concurrently-admitted chain per session
+        # (continuations are never refused), plus the budget itself —
+        # NOT that backlog never exceeds the budget
+        max_payload = 4 * ((heavy_V if heavy else V) + 1)
+        slo_backlog_bytes = 2 * tenants * (budget + max_payload)
+
+    rng = np.random.RandomState(seed)
+    tenant_vals = [
+        rng.uniform(-1, 1, (n, heavy_V if t in heavy else V))
+        .astype(np.float32) for t in range(tenants)]
+    ensure_fd_headroom(4 * n * tenants + 128)
+
+    broker_kw = dict(progress_timeout=progress_timeout,
+                     monitor_interval=monitor_interval,
+                     aggregation_timeout=aggregation_timeout,
+                     chunk_budget_bytes=chunk_budget_bytes)
+    if shards > 1:
+        broker = ShardedBroker(shards, **broker_kw)
+    else:
+        broker = SafeBroker(**broker_kw)
+    addr = await broker.start()
+    metric_ports = (list(broker.shard_ports) if shards > 1
+                    else [addr[1]])
+
+    peak = {"backlog": 0, "samples": 0}
+    stop_polling = asyncio.Event()
+
+    async def poll_metrics() -> None:
+        clients = [await WireClient(addr[0], p).connect()
+                   for p in metric_ports]
+        try:
+            while not stop_polling.is_set():
+                backlog = 0
+                for c in clients:
+                    m = await c.request("get_metrics", {})
+                    backlog += int(m["chunk_backlog_bytes"])
+                peak["backlog"] = max(peak["backlog"], backlog)
+                peak["samples"] += 1
+                await asyncio.sleep(metrics_poll_s)
+        finally:
+            for c in clients:
+                await c.close()
+
+    async def tenant(t: int) -> Tuple[List[float], int]:
+        vals = tenant_vals[t]
+        tV = vals.shape[1]
+        cw = heavy_chunk_words if t in heavy else chunk_words
+        sg = heavy_subgroups if t in heavy else 1
+        lats: List[float] = []
+        busy = 0
+        for r in range(rounds_per_tenant):
+            t0 = time.perf_counter()
+            res = await run_safe_round_net(
+                vals, addr, subgroups=sg,
+                provisioning_seed=0xC0FFEE + t,
+                learner_master=0x5EED + 17 * t, counter=r * (tV + 1),
+                chunk_words=cw)
+            lats.append(time.perf_counter() - t0)
+            busy += int(res.stats.get("busy_rejections", 0))
+            got = res.stats["aggregation_total"]
+            expected = 4 * n + (sg if sg > 1 else 0)  # §5/§5.5 forms
+            if got != expected:
+                raise RuntimeError(
+                    f"tenant {t} round {r}: {got} aggregation messages, "
+                    f"§5 closed form says {expected}")
+            _check_round(t, r, res, vals)
+            if bit_identical:
+                sim = run_safe_round(
+                    vals, subgroups=sg, provisioning_seed=0xC0FFEE + t,
+                    learner_master=0x5EED + 17 * t, counter=r * (tV + 1))
+                if not np.array_equal(sim.average, res.average):
+                    raise RuntimeError(
+                        f"tenant {t} round {r}: wire average not "
+                        f"bit-identical to the sim")
+        return lats, busy
+
+    poller = asyncio.create_task(poll_metrics())
+    error: Optional[str] = None
+    dropped = 0
+    shed = 0
+    lats: List[float] = []
+    busy_total = 0
+    broker_rounds = 0
+    try:
+        t0 = time.perf_counter()
+        settled = await asyncio.gather(
+            *(tenant(t) for t in range(tenants)), return_exceptions=True)
+        wall = time.perf_counter() - t0
+        for t, res in enumerate(settled):
+            if isinstance(res, BaseException):
+                dropped += 1
+                if error is None:
+                    error = f"tenant {t}: {type(res).__name__}: {res}"
+                continue
+            t_lats, t_busy = res
+            lats.extend(t_lats)
+            busy_total += t_busy
+            if t_busy > 0:
+                shed += 1  # busy'd at least once, still finished
+        # one deterministic post-run snapshot (the poller races rounds)
+        mc = await WireClient(*addr).connect()
+        try:
+            if shards > 1:
+                for p in metric_ports:
+                    await mc.redirect(p)
+                    m = await mc.request("get_metrics", {})
+                    broker_rounds += int(m["rounds_completed"])
+            else:
+                m = await mc.request("get_metrics", {})
+                broker_rounds = int(m["rounds_completed"])
+        finally:
+            await mc.close()
+    finally:
+        stop_polling.set()
+        try:
+            await poller
+        except Exception:  # noqa: BLE001 — a poll race never fails a run
+            pass
+        await broker.stop()
+
+    if profile == "steady" and busy_total:
+        error = error or (f"steady profile saw {busy_total} busy "
+                          f"rejections under the default budget")
+    arr = np.asarray(lats or [0.0], np.float64)
+    p99 = float(np.percentile(arr, 99))
+    passed = (error is None and dropped == 0 and p99 <= slo_p99_s
+              and peak["backlog"] <= slo_backlog_bytes)
+    return SLOReport(
+        profile=profile, tenants=tenants, heavy_tenants=len(heavy),
+        rounds=len(lats), wall_s=wall,
+        rounds_per_s=len(lats) / wall if wall > 0 else float("inf"),
+        p50_s=float(np.percentile(arr, 50)), p99_s=p99,
+        dropped_sessions=dropped, busy_rejections=busy_total,
+        shed_tenants=shed, backlog_peak_bytes=peak["backlog"],
+        metrics_samples=peak["samples"],
+        broker_rounds_completed=broker_rounds,
+        slo_p99_s=slo_p99_s, slo_backlog_bytes=int(slo_backlog_bytes),
+        passed=bool(passed), error=error)
 
 
 async def run_engine_load(addr: Addr, *, tenants: int = 8,

@@ -42,6 +42,7 @@ from typing import Optional, Tuple
 
 from repro.net import wire
 from repro.net.broker import SafeBroker
+from repro.obs import MetricsRegistry
 
 Addr = Tuple[str, int]
 
@@ -91,8 +92,14 @@ class ShardBroker(SafeBroker):
         self.direct_port = ports[self.shard_index]
 
     def _shard_map(self) -> dict:
+        # workers hold no fleet-liveness view (shared-nothing): their
+        # map reports every peer alive; the MANAGER's dispatcher path
+        # (ShardedBroker._dispatch_conn / get_shard_map) is the
+        # authoritative source for shard_alive — it owns the worker
+        # process handles (ISSUE 7 death visibility)
         return {"shards": self.num_shards, "shard": self.shard_index,
-                "ports": list(self.shard_ports)}
+                "ports": list(self.shard_ports),
+                "shard_alive": [True] * self.num_shards}
 
     async def _dispatch(self, op: str, kwargs: dict):
         sid = kwargs.get("session")
@@ -100,6 +107,7 @@ class ShardBroker(SafeBroker):
                 and shard_of(sid, self.num_shards) != self.shard_index:
             owner = shard_of(sid, self.num_shards)
             self.redirects += 1
+            self._m_redirects.inc()
             return {"status": "redirect", "shard": owner,
                     "port": self.shard_ports[owner]}
         res = await super()._dispatch(op, kwargs)
@@ -173,6 +181,29 @@ class ShardedBroker:
         self._reserve_sock: Optional[socket.socket] = None
         self._dispatcher: Optional[asyncio.AbstractServer] = None
         self._rr = itertools.count()
+        # shard-death visibility (ISSUE 7): the manager owns the worker
+        # process handles, so it is the one place liveness is observable
+        # without a heartbeat protocol. Deaths are marked lazily on the
+        # dispatcher/get_shard_map path; full rebalancing stays a future
+        # ROADMAP item — dead shards' sessions error, they don't move.
+        self.metrics = MetricsRegistry()
+        self._m_shard_deaths = self.metrics.counter(
+            "safe_shard_deaths_total")
+        self._dead: set = set()
+
+    def dead_shards(self) -> set:
+        """Re-check worker liveness and return the dead shard indices.
+        A ``stop()``-ed fleet reports whatever was marked before the
+        teardown (the handles are gone)."""
+        for i, proc in enumerate(self._procs):
+            if i not in self._dead and not proc.is_alive():
+                self._dead.add(i)
+                self._m_shard_deaths.inc()
+        return set(self._dead)
+
+    @property
+    def shard_deaths(self) -> int:
+        return self._m_shard_deaths.value
 
     async def _recv(self, pipe, what: str):
         loop = asyncio.get_running_loop()
@@ -239,14 +270,35 @@ class ShardedBroker:
                     op, kwargs = wire.decode_request(body,
                                                      copy_arrays=False)
                     sid = kwargs.get("session")
+                    dead = self.dead_shards()
                     if op == "get_shard_map":
                         out = wire.encode_response_parts(
                             {"shards": self.shards, "shard": None,
-                             "ports": list(self.shard_ports)})
+                             "ports": list(self.shard_ports),
+                             "shard_alive": [i not in dead
+                                             for i in range(self.shards)],
+                             "shard_deaths": len(dead)})
+                    elif isinstance(sid, int):
+                        owner = shard_of(sid, self.shards)
+                        if owner in dead:
+                            # fail fast instead of redirecting the
+                            # client into a dead worker's port (a hang
+                            # or a bare connection refusal): the session
+                            # is gone with its shard — rebalancing is a
+                            # future ROADMAP item
+                            raise wire.WireError(
+                                f"shard {owner} is dead; session {sid} "
+                                f"is unavailable (no rebalancing)")
+                        out = wire.encode_response_parts(
+                            {"status": "redirect", "shard": owner,
+                             "port": self.shard_ports[owner]})
                     else:
-                        owner = (shard_of(sid, self.shards)
-                                 if isinstance(sid, int)
-                                 else next(self._rr) % self.shards)
+                        live = [i for i in range(self.shards)
+                                if i not in dead]
+                        if not live:
+                            raise wire.WireError(
+                                "every shard worker is dead")
+                        owner = live[next(self._rr) % len(live)]
                         out = wire.encode_response_parts(
                             {"status": "redirect", "shard": owner,
                              "port": self.shard_ports[owner]})

@@ -110,6 +110,11 @@ OPS: Tuple[str, ...] = (
     # client uses to dial a session's owning worker directly. Appended
     # per the §9 additive-opcode policy — no version bump.
     "get_shard_map",
+    # observability plane (docs/PROTOCOL.md §13): a live metrics
+    # snapshot — rounds/s, latency percentiles, backlog, per-session
+    # series. Admin-class: never counted in MessageStats, never timed.
+    # Appended per the §9 additive-opcode policy — no version bump.
+    "get_metrics",
 )
 OPCODE = {name: i + 1 for i, name in enumerate(OPS)}
 OPNAME = {i + 1: name for i, name in enumerate(OPS)}

@@ -1,0 +1,24 @@
+"""Observability plane (ISSUE 7): dependency-free metrics + tracing.
+
+``repro.obs`` deliberately imports nothing from ``repro.net`` or
+``repro.core`` — it is the leaf layer both instrument. See
+ARCHITECTURE.md §Observability.
+"""
+from repro.obs.metrics import (
+    DEFAULT_LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import Span, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DEFAULT_LATENCY_BUCKETS",
+    "Span",
+    "Tracer",
+]

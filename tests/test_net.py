@@ -1024,7 +1024,8 @@ class TestShardRouting:
                 await broker.stop()
 
         m = asyncio.run(go())
-        assert m == {"shards": 1, "shard": 0, "ports": []}
+        assert m == {"shards": 1, "shard": 0, "ports": [],
+                     "shard_alive": [True]}
 
 
 class _FakeEngineSession:
@@ -1251,3 +1252,232 @@ def test_engine_plane_over_wire():
     broker (submit_session/wait_session), results correct per tenant."""
     out = run_multidevice(ENGINE_WIRE_CODE, devices=8)
     assert "ENGINE_WIRE_OK" in out
+
+
+class TestObservability:
+    """ISSUE 7: the metrics plane (PROTOCOL.md §13) — live snapshots,
+    admission control, shard-death visibility, adaptive chunking and
+    the deterministic backoff helper."""
+
+    BROKER_KW = dict(progress_timeout=2.0, monitor_interval=0.5,
+                     aggregation_timeout=30.0)
+
+    def test_metrics_monotonic_and_uncounted(self):
+        """Counters rise monotonically round over round; polling
+        ``get_metrics`` mid-stream never perturbs the §5 closed form
+        (admin-class: uncounted, untimed)."""
+        from repro.net import PersistentNetSession, WireClient
+
+        n, V = 4, 64
+        vals = _vals(n, V, seed=70)
+
+        async def go():
+            broker = SafeBroker(**self.BROKER_KW)
+            addr = await broker.start()
+            try:
+                mc = await WireClient(*addr).connect()
+                sess = PersistentNetSession(addr, n, words_per_round=V)
+                await sess.open()
+                try:
+                    m0 = await mc.request("get_metrics", {})
+                    r1 = await sess.run_round(vals)
+                    m1 = await mc.request("get_metrics", {})
+                    for _ in range(5):  # free polls between rounds
+                        await mc.request("get_metrics", {})
+                    r2 = await sess.run_round(vals)
+                    m2 = await mc.request("get_metrics",
+                                          {"session": sess.sid})
+                    return r1, r2, m0, m1, m2, sess.sid
+                finally:
+                    await sess.close()
+                    await mc.close()
+            finally:
+                await broker.stop()
+
+        r1, r2, m0, m1, m2, sid = asyncio.run(go())
+        # snapshots are invisible to MessageStats: exact closed form
+        assert r1.stats["aggregation_total"] == 4 * n
+        assert r2.stats["aggregation_total"] == 4 * n
+        assert np.array_equal(r1.average,
+                              run_safe_round(vals).average)
+        assert (m0["rounds_completed"], m1["rounds_completed"],
+                m2["rounds_completed"]) == (0, 1, 2)
+        hists = [m["series"]["histograms"]["safe_round_latency_seconds"]
+                 for m in (m0, m1, m2)]
+        assert [h["count"] for h in hists] == [0, 1, 2]
+        assert 0.0 < m2["round_latency_p50_s"] <= m2["round_latency_p99_s"]
+        for key in ("safe_rounds_completed_total",
+                    "safe_chunk_frames_in_total"):
+            series = [m["series"]["counters"][key] for m in (m0, m1, m2)]
+            assert series == sorted(series), (key, series)
+        # per-session view for the (still-open) tenant, narrowed by sid
+        assert list(m2["sessions"]) == [sid]
+        assert m2["sessions"][sid]["rounds_completed"] == 2
+        assert m2["sessions"][sid]["chunk_backlog_bytes"] == 0
+        assert m2["active_sessions"] == 1
+        assert m2["rounds_per_s"] > 0
+
+    def test_metrics_snapshot_schema(self):
+        """The wire snapshot keeps a stable shape — dashboards and the
+        SLO harness key into it."""
+        from repro.net import WireClient
+
+        async def go():
+            broker = SafeBroker(**self.BROKER_KW)
+            addr = await broker.start()
+            try:
+                await run_safe_round_net(_vals(4, 16, seed=71), addr)
+                c = await WireClient(*addr).connect()
+                try:
+                    return await c.request("get_metrics", {})
+                finally:
+                    await c.close()
+            finally:
+                await broker.stop()
+
+        m = asyncio.run(go())
+        required = {
+            "uptime_s", "shard", "shards", "rounds_completed",
+            "rounds_per_s", "round_latency_p50_s", "round_latency_p99_s",
+            "monitor_reposts", "initiator_elections", "busy_rejections",
+            "redirects", "chunk_backlog_bytes", "active_sessions",
+            "sessions", "series", "trace_spans"}
+        assert required <= set(m), required - set(m)
+        s = m["series"]
+        assert set(s) == {"counters", "gauges", "histograms"}
+        assert all(isinstance(v, int) for v in s["counters"].values())
+        assert all(isinstance(v, float) for v in s["gauges"].values())
+        h = s["histograms"]["safe_round_latency_seconds"]
+        assert set(h) == {"count", "sum", "p50", "p99", "buckets"}
+        # buckets are [bound, count] pairs ending at +Inf
+        assert h["buckets"][-1][0] == float("inf")
+        assert sum(b[1] for b in h["buckets"]) == h["count"] == 1
+        # the transient round's session is gone again
+        assert m["active_sessions"] == 0 and m["sessions"] == {}
+
+    def test_flooding_tenant_busy_shed_bit_identical(self):
+        """Admission control: a one-chunk budget forces the second
+        parallel §5.5 group chain into busy/retry-after; the client's
+        backoff loop replays it and the round still completes with the
+        exact ``4n + g`` closed form, bit-identical to the sim."""
+        n, V, chunk = 6, 2048, 128
+        vals = _vals(n, V, seed=72)
+        sim = run_safe_round(vals, subgroups=2)
+        net = _wire_round(
+            vals, subgroups=2, chunk_words=chunk,
+            broker_kw=dict(chunk_budget_bytes=chunk * 4,
+                           progress_timeout=2.0, monitor_interval=0.5))
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * n + 2
+        assert net.stats["busy_rejections"] > 0
+
+    def test_busy_never_triggers_with_ample_budget(self):
+        """The default budget never sheds a well-behaved tenant — the
+        steady-profile SLO baseline in miniature."""
+        vals = _vals(6, 2048, seed=73)
+        net = _wire_round(vals, subgroups=2, chunk_words=128)
+        assert net.stats["aggregation_total"] == 4 * 6 + 2
+        assert net.stats["busy_rejections"] == 0
+
+    def test_http_metrics_exporter(self):
+        """GET /metrics answers Prometheus text; other paths 404."""
+
+        async def go():
+            broker = SafeBroker(**self.BROKER_KW)
+            addr = await broker.start()
+            haddr = await broker.start_metrics_http()
+            try:
+                await run_safe_round_net(_vals(4, 16, seed=74), addr)
+
+                async def get(path):
+                    r, w = await asyncio.open_connection(*haddr)
+                    w.write(f"GET {path} HTTP/1.0\r\n\r\n".encode())
+                    await w.drain()
+                    body = (await r.read()).decode()
+                    w.close()
+                    return body
+
+                ok = await get("/metrics")
+                missing = await get("/nope")
+                return ok, missing
+            finally:
+                await broker.stop()
+
+        ok, missing = asyncio.run(go())
+        assert ok.startswith("HTTP/1.0 200")
+        assert 'safe_rounds_completed_total{shard="0"} 1' in ok
+        assert 'safe_round_latency_seconds_bucket{shard="0",le="+Inf"} 1' in ok
+        assert "# TYPE safe_round_latency_seconds histogram" in ok
+        assert missing.startswith("HTTP/1.0 404")
+
+    def test_shard_death_visible_and_survivors_serve(self):
+        """Killing a worker marks it dead in ``get_shard_map``, fails
+        its sessions fast with a clear error, and leaves sessionless
+        traffic flowing to the survivors."""
+        from repro.net import ShardedBroker, WireClient, wire as _w
+
+        async def go():
+            sb = ShardedBroker(2, use_reuseport=False, **self.BROKER_KW)
+            addr = await sb.start()
+            try:
+                loop = asyncio.get_running_loop()
+                sb._procs[0].terminate()
+                await loop.run_in_executor(None, sb._procs[0].join, 10.0)
+                assert not sb._procs[0].is_alive()
+                c = await WireClient(*addr).connect()
+                try:
+                    m = await c.request("get_shard_map", {})
+                    assert m["shard_alive"] == [False, True]
+                    assert m["shard_deaths"] == 1
+                    # session ops owned by the dead shard fail fast
+                    # with a diagnosis, not a hang (sid 0 -> shard 0)
+                    try:
+                        await c.request("get_stats", {"session": 0})
+                        raise AssertionError("expected WireError")
+                    except _w.WireError as e:
+                        assert "dead" in str(e)
+                finally:
+                    await c.close()
+                # new sessions land on the live shard and run clean
+                res = await run_safe_round_net(_vals(4, 8, seed=75), addr)
+                assert res.stats["aggregation_total"] == 4 * 4
+                assert sb.shard_deaths == 1
+                return True
+            finally:
+                await sb.stop()
+
+        assert asyncio.run(go())
+
+    def test_backoff_delay_deterministic_and_capped(self):
+        from repro.net import backoff_delay
+
+        seq = [backoff_delay(a, base=0.02, seed=3) for a in range(12)]
+        assert seq == [backoff_delay(a, base=0.02, seed=3)
+                       for a in range(12)]  # replayable
+        for a, d in enumerate(seq):
+            hi = min(0.5, 0.02 * 2 ** a)
+            assert 0.5 * hi <= d < hi  # jittered into [0.5, 1.0)*hi
+        # capped, and huge attempt counts do not overflow the shift
+        assert backoff_delay(10_000, base=0.02, seed=1) <= 0.5
+        # co-tenants (different seeds) desynchronize
+        assert any(backoff_delay(a, base=0.02, seed=1)
+                   != backoff_delay(a, base=0.02, seed=2)
+                   for a in range(4))
+
+    def test_auto_chunk_words_quantized(self):
+        from repro.net import auto_chunk_words, wire as _w
+
+        for pw in (1, 1000, _w.MIN_STREAM_WORDS, 100_000, 1 << 20,
+                   1 << 23, 1 << 26):
+            aw = auto_chunk_words(pw)
+            assert aw % _w.MIN_STREAM_WORDS == 0
+            assert _w.MIN_STREAM_WORDS <= aw <= _w.DEFAULT_CHUNK_WORDS
+        # small payloads come back whole (no chunk overhead)
+        assert auto_chunk_words(1024) >= 1024
+        # the legacy None path (> AUTO_CHUNK_WORDS) is preserved
+        from repro.net.client import AUTO_CHUNK_WORDS, _resolve_chunk_words
+        assert auto_chunk_words(1 << 26) == _w.DEFAULT_CHUNK_WORDS
+        assert (_resolve_chunk_words(None, AUTO_CHUNK_WORDS + 1)
+                == _w.DEFAULT_CHUNK_WORDS)
+        assert _resolve_chunk_words(None, 64) is None
+        assert _resolve_chunk_words(256, 1 << 26) == 256

@@ -1,0 +1,146 @@
+"""Unit tests for the observability primitives (``repro.obs``, ISSUE 7).
+
+These are pure-python tests for the metrics/tracing building blocks;
+their integration with the wire plane (``get_metrics``, the HTTP
+exporter, admission control) is covered by
+``test_net.py::TestObservability``.
+"""
+import math
+
+import pytest
+
+from repro.obs import (
+    DEFAULT_LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Span,
+    Tracer,
+)
+
+
+class TestCounterGauge:
+    def test_counter_monotonic(self):
+        c = Counter("x")
+        assert c.value == 0
+        c.inc()
+        c.inc(5)
+        assert c.value == 6
+        assert not hasattr(c, "set")  # monotonic by construction
+
+    def test_gauge_set_inc_dec(self):
+        g = Gauge("y")
+        g.set(3.5)
+        g.inc()
+        g.dec(0.5)
+        assert g.value == 4.0
+
+
+class TestHistogram:
+    def test_percentiles_on_known_distribution(self):
+        # 100 observations spread uniformly over (0, 1] against bounds
+        # at every 0.1: p50 lands ~0.5, p99 ~0.99 (within one bucket)
+        h = Histogram("lat", bounds=[i / 10 for i in range(1, 11)])
+        for i in range(1, 101):
+            h.observe(i / 100)
+        assert h.count == 100
+        assert h.sum == pytest.approx(50.5)
+        assert h.percentile(50) == pytest.approx(0.5, abs=0.1)
+        assert h.percentile(99) == pytest.approx(0.99, abs=0.1)
+        assert h.percentile(50) <= h.percentile(99)
+
+    def test_empty_and_tail(self):
+        h = Histogram("lat", bounds=[0.1, 1.0])
+        assert h.percentile(50) == 0.0  # empty -> 0, not NaN
+        h.observe(100.0)  # +Inf bucket
+        assert h.counts[-1] == 1
+        # tail percentile floors at the largest finite bound
+        assert h.percentile(99) == 1.0
+
+    def test_unsorted_bounds_rejected(self):
+        with pytest.raises(ValueError):
+            Histogram("bad", bounds=[1.0, 0.1])
+
+    def test_to_dict_schema(self):
+        h = Histogram("lat")
+        h.observe(0.003)
+        d = h.to_dict()
+        assert set(d) == {"count", "sum", "p50", "p99", "buckets"}
+        assert d["count"] == 1 and d["sum"] == pytest.approx(0.003)
+        # one [bound, count] pair per finite bound plus the +Inf tail
+        assert len(d["buckets"]) == len(DEFAULT_LATENCY_BUCKETS) + 1
+        assert d["buckets"][-1][0] == math.inf
+        assert sum(c for _, c in d["buckets"]) == 1
+
+
+class TestMetricsRegistry:
+    def test_get_or_create_returns_same_series(self):
+        r = MetricsRegistry()
+        assert r.counter("a") is r.counter("a")
+        assert r.gauge("b") is r.gauge("b")
+        assert r.histogram("c") is r.histogram("c")
+
+    def test_snapshot_wire_safe(self):
+        r = MetricsRegistry()
+        r.counter("hits").inc(3)
+        r.gauge("depth").set(2)
+        r.histogram("lat", bounds=[0.1, 1.0]).observe(0.05)
+        s = r.snapshot()
+        assert s["counters"] == {"hits": 3}
+        assert s["gauges"] == {"depth": 2.0}
+        assert isinstance(s["gauges"]["depth"], float)
+        assert s["histograms"]["lat"]["count"] == 1
+
+    def test_render_prometheus(self):
+        r = MetricsRegistry()
+        r.counter("hits").inc(3)
+        r.histogram("lat", bounds=[0.1, 1.0]).observe(0.05)
+        r.histogram("lat").observe(50.0)  # +Inf tail
+        text = r.render_prometheus(labels='shard="2"')
+        assert "# TYPE hits counter" in text
+        assert 'hits{shard="2"} 3' in text
+        # bucket counts are cumulative and end at +Inf == count
+        assert 'lat_bucket{shard="2",le="0.1"} 1' in text
+        assert 'lat_bucket{shard="2",le="1.0"} 1' in text
+        assert 'lat_bucket{shard="2",le="+Inf"} 2' in text
+        assert 'lat_count{shard="2"} 2' in text
+        assert text.endswith("\n")
+
+    def test_render_prometheus_unlabelled(self):
+        r = MetricsRegistry()
+        r.counter("hits").inc()
+        text = r.render_prometheus()
+        assert "hits 1" in text
+
+
+class TestTracer:
+    def test_disabled_by_default_records_nothing(self):
+        t = Tracer()
+        assert not t.enabled
+        t.record("round", 0.0, 1.0, session=7)
+        assert len(t) == 0 and t.export() == []
+
+    def test_enabled_records_spans(self):
+        t = Tracer(enabled=True)
+        t.record("round", 1.0, 3.5, session=7, n=4)
+        (s,) = t.spans("round")
+        assert isinstance(s, Span)
+        assert s.duration == 2.5
+        assert s.to_dict() == {"name": "round", "t0": 1.0, "t1": 3.5,
+                               "duration": 2.5, "session": 7, "n": 4}
+        assert t.spans("other") == []
+
+    def test_ring_capacity_bounds_memory(self):
+        t = Tracer(capacity=4, enabled=True)
+        for i in range(10):
+            t.record("chunk", i, i + 1, seq=i)
+        assert len(t) == 4
+        assert t.dropped == 6  # wrapped, and says so
+        assert [s.attrs["seq"] for s in t.spans()] == [6, 7, 8, 9]
+        t.clear()
+        assert len(t) == 0 and t.dropped == 0
+
+    def test_bad_capacity_rejected(self):
+        with pytest.raises(ValueError):
+            Tracer(capacity=0)
