@@ -1,0 +1,261 @@
+"""BON-over-the-wire bake-off + WAN-calibrated cost model (ISSUE 8).
+
+The §6.1 comparison so far rested on one real leg and one simulated
+leg: SAFE rounds ran over real TCP (``benchmarks/paper_scale``) while
+the Bonawitz-style baseline existed only as a discrete-event simulation
+(``core/bon_protocol``). This module closes the gap — BON runs through
+the *same* asyncio broker, wire codec and learner runtime as SAFE
+(opcodes 20–27, docs/PROTOCOL.md §14), so both protocols are measured
+on identical transport under identical fault schedules:
+
+  * ``safe_nN`` / ``bon_nN`` (clean and ``_fK``) — head-to-head rounds
+    at n ∈ {8, 36, 128}. Closed-form message counts (SAFE 4n /
+    4(n−f)+2f, BON 2n + 2n(n−1) + ℓ(n+2)) and sim↔wire bit-identity
+    are asserted *inside* :func:`repro.net.loadgen.run_paper_scale` /
+    :func:`~repro.net.loadgen.run_bon_scale` — a row that prints has
+    already validated itself. BON at n=128 is ~33k RPCs, so it runs
+    only on the clean localhost transport (and never under SMOKE).
+  * ``wan/<profile>`` — both protocols at n=36 under the calibrated
+    WAN profiles of ``repro.net.faults.WAN_PROFILES`` (10–200 ms RTT,
+    loss, heavy-tail lognormal jitter). Rows carry the declared link
+    metadata (rtt_ms/loss/kind) and the host cpu count next to the
+    measured wall time — localhost asyncio sleeps model the link, the
+    CPU is real and shared, so the annotation states what was actually
+    measured (the PR 5 honesty convention).
+  * ``fit/*`` — per-op micro-latencies measured on this host (RPC echo
+    at two payload sizes → t_msg/t_byte; Shamir share/reconstruct →
+    t_share; PRF keystream → t_prf_word; vector add → t_add_elem), fed
+    to :meth:`repro.core.costs.CostModel.fit`. The fitted model re-runs
+    both §6.1 simulations, and the payload lands measured-vs-modeled
+    ratios side by side with the fit residuals — the cost model becomes
+    a calibrated instrument with an error bar instead of a constant
+    table.
+
+``SAFE_SMOKE=1`` shrinks to n=8 and one WAN profile for CI. Measured
+numbers and regeneration commands live in EXPERIMENTS.md §BON-wire.
+"""
+from __future__ import annotations
+
+import asyncio
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, standalone_bench
+
+SMOKE = bool(os.environ.get("SAFE_SMOKE"))
+FAILED = (4, 5, 6)  # the paper's failover experiment takes out nodes 4-6
+WAN_N = 8 if SMOKE else 36
+WAN_PROFILES_RUN = ("continental",) if SMOKE else (
+    "continental", "intercontinental_tail")
+
+
+def _emit_row(key: str, row: dict) -> None:
+    emit(f"bon_wire/{key}", row["wall_s"] * 1e6,
+         f"msgs={row['messages']} (closed form {row['expected_messages']}) "
+         f"bytes={row['bytes_sent']} bit_identical={row['bit_identical']}")
+
+
+async def _measure_rpc(samples: list) -> None:
+    """RPC echo at two payload sizes → (t_msg, t_byte) fit samples.
+
+    A throwaway BON session gives us both shapes on the real wire:
+    ``get_stats`` is a ~100-byte round trip (pure t_msg), and
+    ``bon_post_masked`` carries a V-word uint32 vector (t_byte leg) —
+    each node id accepts exactly one masked post, so a session with K
+    nodes yields K independent big-payload RPCs.
+    """
+    from repro.net.broker import SafeBroker
+    from repro.net.client import WireClient
+
+    K, V_BIG = 12, 65536
+    broker = SafeBroker()
+    host, port = await broker.start()
+    cli = await WireClient(host, port, node=1).connect()
+    try:
+        sid = (await cli.request("create_session", {
+            "groups": {0: list(range(1, K + 1))}, "protocol": "bon",
+            "aggregation_timeout": 60.0}))["session"]
+        small_b = 128   # approx frame bytes both ways (header-dominated)
+        for _ in range(K):
+            t0 = time.perf_counter()
+            await cli.request("get_stats", {"session": sid})
+            samples.append(({"t_msg": 1.0, "t_byte": small_b},
+                            time.perf_counter() - t0))
+        payload = np.zeros(V_BIG, np.uint32)
+        for node in range(1, K + 1):
+            t0 = time.perf_counter()
+            await cli.request("bon_post_masked", {
+                "session": sid, "node": node, "payload": payload})
+            samples.append(({"t_msg": 1.0, "t_byte": 4.0 * V_BIG},
+                            time.perf_counter() - t0))
+        await cli.request("delete_session", {"session": sid})
+    finally:
+        await cli.close()
+        await broker.stop()
+
+
+def _measure_compute(samples: list) -> None:
+    """Local micro-ops → t_share / t_prf_word / t_add_elem samples."""
+    import random
+
+    from repro.core.shamir import reconstruct, share
+    from repro.crypto.np_impl import keystream_pair_lanes_np
+
+    rng = random.Random(11)
+    reps = 3 if SMOKE else 8
+    for _ in range(reps):
+        secret = rng.getrandbits(64)
+        t0 = time.perf_counter()
+        shares = share(secret, 5, 9, rng)
+        samples.append(({"t_share": 9.0}, time.perf_counter() - t0))
+        t0 = time.perf_counter()
+        reconstruct(shares[:5])
+        samples.append(({"t_share": 5.0}, time.perf_counter() - t0))
+    W = 1 << 16
+    key = np.array([0x5AFE, 0xB04E], np.uint32)
+    for i in range(reps):
+        t0 = time.perf_counter()
+        keystream_pair_lanes_np(key, W, i * W)
+        samples.append(({"t_prf_word": float(W)}, time.perf_counter() - t0))
+    a = np.arange(W, dtype=np.uint32)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.add(a, a)
+        samples.append(({"t_add_elem": float(W)}, time.perf_counter() - t0))
+    # the wire's "key agreement" is the toy seed draw of bon_secrets (the
+    # §14 fidelity note), not an RSA keygen — measure what this
+    # implementation pays so the fitted model predicts *this* system
+    # rather than inheriting EDGE's 100 ms RSA constant
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(64):
+            rng.getrandbits(64)
+        samples.append(({"t_keyagree": 64.0}, time.perf_counter() - t0))
+    st = np.random.RandomState(5)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        st.randint(0, 1 << 32, W, dtype=np.uint64)
+        samples.append(({"t_rng_word": float(W)}, time.perf_counter() - t0))
+
+
+def run() -> dict:
+    from repro.core.bon_protocol import run_bon_round
+    from repro.core.costs import EDGE, CostModel
+    from repro.core.protocol import run_safe_round
+    from repro.net.faults import WAN_PROFILES, make_wan_interceptor
+    from repro.net.loadgen import run_bon_scale, run_paper_scale
+
+    out: dict = {"cpu_count": os.cpu_count() or 1}
+
+    # ---- head-to-head on clean localhost transport --------------------
+    sizes = (8,) if SMOKE else (8, 36, 128)
+    big_kw = dict(progress_timeout=2.0, monitor_interval=0.5)
+    for n in sizes:
+        f = FAILED if n > 8 else (2, 7)
+        safe_kw = big_kw if n >= 128 else {}
+        out[f"safe_n{n}"] = asyncio.run(
+            run_paper_scale(n=n, V=256, **safe_kw))
+        out[f"safe_n{n}_f{len(f)}"] = asyncio.run(
+            run_paper_scale(n=n, V=256, failures=f, **safe_kw))
+        out[f"bon_n{n}"] = asyncio.run(run_bon_scale(n=n, V=256))
+        if n < 128:  # BON failover at n=128 adds ~1 min of unmask RPCs
+            out[f"bon_n{n}_f{len(f)}"] = asyncio.run(
+                run_bon_scale(n=n, V=256, failures=f))
+    for key in sorted(k for k in out if k.startswith(("safe_n", "bon_n"))):
+        _emit_row(key, out[key])
+
+    # ---- the same pair under calibrated WAN profiles ------------------
+    out["wan"] = {}
+    for profile in WAN_PROFILES_RUN:
+        meta = WAN_PROFILES[profile]
+        rtt = meta["rtt_ms"] / 1e3
+        # a slow WAN hop must not trip the §5.3 monitor or a long-poll
+        # deadline: scale both by the nominal RTT (tail profiles run
+        # several RTTs beyond nominal on p99 draws)
+        wan_kw = dict(timeout_scale=max(1.0, 60.0 * rtt),
+                      aggregation_timeout=240.0)
+        safe = asyncio.run(run_paper_scale(
+            n=WAN_N, V=256, interceptor=make_wan_interceptor(profile, seed=1),
+            progress_timeout=max(0.3, 30.0 * rtt),
+            monitor_interval=max(0.1, 5.0 * rtt), **wan_kw))
+        # the roster settles the moment all n masked inputs arrive, so a
+        # generous timeout costs a clean round nothing — but a short one
+        # misdeclares live nodes dropped when WAN draws spread the n
+        # posts beyond it (each node's serial R0/R1 chain is ~2n RPCs of
+        # latency draws, so the spread grows with both n and RTT)
+        bon = asyncio.run(run_bon_scale(
+            n=WAN_N, V=256, interceptor=make_wan_interceptor(profile, seed=2),
+            roster_timeout=max(5.0, 100.0 * rtt), **wan_kw))
+        row = {"profile": profile, "rtt_ms": meta["rtt_ms"],
+               "loss": meta["loss"], "kind": meta["kind"],
+               "cpu_count": out["cpu_count"],
+               "safe": safe, "bon": bon,
+               "wall_ratio": bon["wall_s"] / safe["wall_s"]}
+        out["wan"][profile] = row
+        emit(f"bon_wire/wan_{profile}", safe["wall_s"] * 1e6,
+             f"rtt={meta['rtt_ms']:.0f}ms loss={meta['loss']} "
+             f"kind={meta['kind']} cpus={out['cpu_count']} "
+             f"safe={safe['wall_s']:.2f}s bon={bon['wall_s']:.2f}s "
+             f"bon/safe x{row['wall_ratio']:.1f}")
+
+    # ---- calibrate the cost model from this host's micro-latencies ----
+    samples: list = []
+    asyncio.run(_measure_rpc(samples))
+    _measure_compute(samples)
+    fitted, resid = CostModel.fit(samples, base=EDGE, name="localhost_fit")
+    out["fit"] = {
+        "constants": {k: getattr(fitted, k) for k in
+                      ("t_msg", "t_byte", "t_share", "t_prf_word",
+                       "t_add_elem", "t_keyagree", "t_rng_word")},
+        "residuals": resid,
+        "n_samples": len(samples),
+    }
+    emit("bon_wire/fit", fitted.t_msg * 1e6,
+         f"t_msg={fitted.t_msg:.2e}s t_byte={fitted.t_byte:.2e}s "
+         f"t_share={fitted.t_share:.2e}s rms={resid['rms']:.2e} "
+         f"r2={resid['r2']:.4f}")
+
+    # ---- §6.1 ratio, three ways: measured wire wall-clock, the fitted
+    # model's virtual time, and the stock EDGE model ---------------------
+    n_ratio = 8 if SMOKE else 36
+    f_ratio = (2, 7) if SMOKE else FAILED
+    rng = np.random.RandomState(0)
+    vals = rng.uniform(-1, 1, (n_ratio, 256)).astype(np.float32)
+    ratios: dict = {}
+    for label, model in (("fitted_model", fitted), ("edge_model", EDGE)):
+        s = run_safe_round(vals, cost=model)
+        s_f = run_safe_round(vals, failed_nodes=list(f_ratio), cost=model)
+        b = run_bon_round(vals, cost=model)
+        b_f = run_bon_round(vals, failed_nodes=list(f_ratio), cost=model)
+        ratios[label] = {
+            "time_clean": b.virtual_time / s.virtual_time,
+            "time_failover": b_f.virtual_time / s_f.virtual_time,
+        }
+    fk = f"f{len(f_ratio)}"
+    ratios["measured_wire"] = {
+        "time_clean": (out[f"bon_n{n_ratio}"]["wall_s"]
+                       / out[f"safe_n{n_ratio}"]["wall_s"]),
+        "time_failover": (out[f"bon_n{n_ratio}_{fk}"]["wall_s"]
+                          / out[f"safe_n{n_ratio}_{fk}"]["wall_s"]),
+        "messages_clean": (out[f"bon_n{n_ratio}"]["messages"]
+                           / out[f"safe_n{n_ratio}"]["messages"]),
+    }
+    out["ratios_61"] = ratios
+    emit("bon_wire/ratio_61", ratios["measured_wire"]["time_clean"] * 1e6,
+         f"n={n_ratio} bon/safe measured x"
+         f"{ratios['measured_wire']['time_clean']:.1f} clean, fitted model "
+         f"x{ratios['fitted_model']['time_clean']:.1f}, edge model "
+         f"x{ratios['edge_model']['time_clean']:.1f}; msgs x"
+         f"{ratios['measured_wire']['messages_clean']:.1f}")
+    save_json("bon_wire", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    standalone_bench("bon_wire", run)

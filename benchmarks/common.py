@@ -10,6 +10,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "benchmarks")
 
 _rows: list[tuple] = []
+_payloads: dict = {}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -23,6 +24,19 @@ def rows():
 
 
 def save_json(name: str, payload) -> str:
+    """Record a module's detailed result payload.
+
+    Unprefixed names no longer write their own ``<name>.json`` — that
+    produced stale twins drifting beside the schema'd files (ISSUE 8).
+    Instead the payload is stashed and folded into the module's
+    ``BENCH_<module>.json`` under the ``payloads`` key by the next
+    :func:`save_bench_json` (the ``run.py --bench-json`` harness or a
+    ``standalone_bench`` run). Only ``BENCH_``-prefixed names touch
+    disk; tests/test_benchmarks.py rejects any other write.
+    """
+    if not name.startswith("BENCH_"):
+        _payloads[name] = payload
+        return ""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
@@ -41,7 +55,13 @@ def save_bench_json(name: str, bench_rows: list, status: str,
     """Write results/benchmarks/BENCH_<name>.json with the stable schema:
 
     {"schema": "safe-bench/v1", "name": ..., "status": "ok"|"failed",
-     "wall_s": ..., "rows": [{"name", "us_per_call", "derived"}, ...]}
+     "wall_s": ..., "rows": [{"name", "us_per_call", "derived"}, ...],
+     "payloads": {<save_json name>: <payload>, ...}}
+
+    ``payloads`` drains every :func:`save_json` stash accumulated since
+    the previous drain — the module's detailed dicts travel inside its
+    schema'd file instead of as unprefixed twins. Additive to
+    ``safe-bench/v1``: readers of ``rows`` are unaffected.
     """
     payload = {
         "schema": BENCH_SCHEMA,
@@ -51,6 +71,9 @@ def save_bench_json(name: str, bench_rows: list, status: str,
         "rows": [{"name": n, "us_per_call": us, "derived": d}
                  for (n, us, d) in bench_rows],
     }
+    if _payloads:
+        payload["payloads"] = dict(_payloads)
+        _payloads.clear()
     return save_json(f"BENCH_{name}", payload)
 
 

@@ -23,9 +23,9 @@ def main() -> None:
                         help="run only modules whose key contains this")
     args = parser.parse_args()
 
-    from benchmarks import (common, constrained, device_aggregation, failover,
-                            feature_scalability, hierarchical, kernel_bench,
-                            messages, multi_session, net_load,
+    from benchmarks import (bon_wire, common, constrained, device_aggregation,
+                            failover, feature_scalability, hierarchical,
+                            kernel_bench, messages, multi_session, net_load,
                             node_scalability, paper_scale, slo, streaming,
                             subgrouping)
     print("name,us_per_call,derived")
@@ -49,6 +49,8 @@ def main() -> None:
          streaming.main),
         ("slo", "SLO-gated multi-tenant load + admission control "
          "(repro/obs, ISSUE 7)", slo.main),
+        ("bon_wire", "bon_wire SAFE-vs-BON bake-off + WAN-calibrated "
+         "cost model (§6.1; ISSUE 8)", bon_wire.main),
     ]
     failures = 0
     matched = 0

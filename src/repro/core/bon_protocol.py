@@ -36,6 +36,59 @@ def _seed_to_key(seed: int) -> np.ndarray:
     return np.array([seed & _MASK32, (seed >> 32) & _MASK32], np.uint32)
 
 
+def bon_secrets(n: int, threshold: int, seed: int):
+    """The round's secret material, in the canonical draw order.
+
+    One ``random.Random(seed)`` stream drawn in a fixed global order —
+    all b seeds, all s seeds, all b shares, all s shares — so *any*
+    runtime (this sim, the wire learners of ``core/bon_machines.py``)
+    that replays the same order derives identical secrets, and the
+    published averages can be compared bit-for-bit.
+
+    Returns ``(b_seed, s_seed, b_shares, s_shares)``; the share dicts
+    map node -> the ``share()`` list for that node's secret (entry
+    ``v - 1`` is the share addressed to node v).
+    """
+    rng = random.Random(seed)
+    b_seed = {u: rng.getrandbits(64) for u in range(1, n + 1)}
+    s_seed = {u: rng.getrandbits(64) for u in range(1, n + 1)}
+    b_shares = {u: share(b_seed[u], threshold, n, rng)
+                for u in range(1, n + 1)}
+    s_shares = {u: share(s_seed[u], threshold, n, rng)
+                for u in range(1, n + 1)}
+    return b_seed, s_seed, b_shares, s_shares
+
+
+def bon_pair_pad(s_u: int, s_v: int, u: int, v: int, V: int) -> np.ndarray:
+    """Pairwise pad between nodes u and v (symmetric in the pair)."""
+    lo, hi = (u, v) if u < v else (v, u)
+    s_lo, s_hi = (s_u, s_v) if u < v else (s_v, s_u)
+    k = _seed_to_key(
+        s_lo ^ ((s_hi << 1) & ((1 << 64) - 1)) ^ (lo * 0x9E3779B9 + hi))
+    return keystream_pair_lanes_np(k, V, 0)
+
+
+def bon_self_pad(b_u: int, V: int) -> np.ndarray:
+    """Node u's self-mask pad from its b seed."""
+    return keystream_pair_lanes_np(_seed_to_key(b_u), V, 0)
+
+
+def bon_expected_messages(n: int, f: int = 0) -> int:
+    """Closed-form BON message count, f dropouts after Round 1.
+
+    Per node: R0 advertise + key fetch (2), R1 share posts + fetches
+    (2(n−1)); per survivor: masked post (1), roster/consistency fetch +
+    unmask share posts (n), average fetch (1). With ℓ = n − f:
+
+        M_BON(n, f) = 2n + 2n(n−1) + ℓ(n+2) = 2n² + ℓ(n+2)
+
+    Asserted against both the sim's counters and the wire BonStats
+    (tests/test_conformance.py) — the BON analogue of SAFE's §5 forms.
+    """
+    live = n - f
+    return 2 * n + 2 * n * (n - 1) + live * (n + 2)
+
+
 @dataclasses.dataclass
 class BonResult:
     average: Optional[np.ndarray]
@@ -69,7 +122,6 @@ def run_bon_round(
     live = [u for u in range(1, n + 1) if u not in failed]
     if len(live) < t:
         raise ValueError("not enough survivors to reach the threshold")
-    rng = random.Random(seed)
     codec = NpFixedPoint(scale_bits)
 
     msgs = 0
@@ -96,15 +148,14 @@ def run_bon_round(
     # recovery stays possible — (n-1) agreements per node per round.
     barrier(cost.t_rsa_encrypt + cost.t_keyagree * (n - 1), 2, 128, n)
 
-    # secrets: per-node self-mask seed b_u and pairwise secret s_u
-    b_seed = {u: rng.getrandbits(64) for u in range(1, n + 1)}
-    s_seed = {u: rng.getrandbits(64) for u in range(1, n + 1)}
+    # secrets: per-node self-mask seed b_u and pairwise secret s_u, plus
+    # their Shamir shares — canonical draw order shared with the wire
+    # learners (bon_secrets), so sim and wire derive identical material
+    b_seed, s_seed, b_shares, s_shares = bon_secrets(n, t, seed)
 
     # ---- Round 1: Shamir-share b_u and s_u to all peers -------------------
     for u in range(1, n + 1):
         shares_created += 2 * (n - 1)
-    b_shares = {u: share(b_seed[u], t, n, rng) for u in range(1, n + 1)}
-    s_shares = {u: share(s_seed[u], t, n, rng) for u in range(1, n + 1)}
     # each node posts n-1 encrypted share pairs and fetches its n-1
     # incoming shares — individually relayed via the server (the O(n²)
     # message traffic the paper's §2 point 1 complains about)
@@ -114,14 +165,12 @@ def run_bon_round(
     # ---- Round 2: masked input collection --------------------------------
     # pairwise pad between u,v: PRF(s_min XOR s_max tagged) — symmetric.
     def pair_pad(u: int, v: int) -> np.ndarray:
-        lo, hi = min(u, v), max(u, v)
-        k = _seed_to_key(s_seed[lo] ^ ((s_seed[hi] << 1) & ((1 << 64) - 1)) ^ (lo * 0x9E3779B9 + hi))
-        return keystream_pair_lanes_np(k, V, 0)
+        return bon_pair_pad(s_seed[u], s_seed[v], u, v, V)
 
     y_sum = np.zeros(V, np.uint32)
     for u in live:
         yu = codec.encode(values[u - 1])
-        yu = NpFixedPoint.add(yu, keystream_pair_lanes_np(_seed_to_key(b_seed[u]), V, 0))
+        yu = NpFixedPoint.add(yu, bon_self_pad(b_seed[u], V))
         for v in range(1, n + 1):
             if v == u:
                 continue
@@ -135,9 +184,11 @@ def run_bon_round(
         vtime += global_timeout  # server waits out the dropouts
 
     # ---- Rounds 3/4: consistency + unmasking ------------------------------
-    # Every survivor posts, per peer, one share: b_v shares for live v,
-    # s_v shares for dead v — again one message per share.
-    barrier(cost.t_share * (n - 1), n - 1, 64 * (n - 1), len(live))
+    # Every survivor fetches the settled roster (the consistency check —
+    # which peers made Round 2) and posts, per peer, one share: b_v
+    # shares for live v, s_v shares for dead v — one message per share,
+    # n messages per survivor in all (bon_expected_messages).
+    barrier(cost.t_share * (n - 1), n, 64 * (n - 1) + 4 * n, len(live))
 
     correction = np.zeros(V, np.uint32)
     for v in live:  # reconstruct b_v from t shares, cancel it
@@ -145,7 +196,7 @@ def run_bon_round(
         shares_reconstructed += t
         assert rec == b_seed[v]
         correction = NpFixedPoint.add(
-            correction, keystream_pair_lanes_np(_seed_to_key(rec), V, 0))
+            correction, bon_self_pad(rec, V))
     for v in failed:  # reconstruct s_v, regenerate v's pads with survivors
         rec = reconstruct(s_shares[v][: t])
         shares_reconstructed += t

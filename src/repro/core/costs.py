@@ -15,6 +15,7 @@ model parameters, not measurements.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Iterable, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +73,59 @@ class CostModel:
 
     def message(self, nbytes: int = 256) -> float:
         return self.t_msg + self.t_byte * nbytes
+
+    @classmethod
+    def fit(cls, samples: Iterable[Tuple[Dict[str, float], float]],
+            base: "CostModel" = None, name: str = "fitted"
+            ) -> Tuple["CostModel", Dict[str, float]]:
+        """Calibrate cost constants from measured timings.
+
+        ``samples`` is an iterable of ``(features, seconds)`` pairs where
+        ``features`` maps constant names (``t_msg``, ``t_byte``, ...) to
+        their multiplier in that measurement — e.g. an RPC echo of a
+        1 KiB payload under a model ``t = t_msg + nbytes*t_byte`` is
+        ``({"t_msg": 1, "t_byte": 1024}, measured_seconds)``. Solves the
+        nonnegative least-squares system over the union of feature names
+        (plain lstsq, negatives clipped to 0 — adequate for the
+        well-separated micro-benchmarks this calibrates), returning a
+        new model with fitted fields replacing ``base``'s (default
+        :data:`EDGE`) and a residual report::
+
+            {"rms": ..., "max": ..., "r2": ..., "n_samples": ...}
+
+        so benchmark output can state how well the linear model explains
+        the measurements instead of asserting it.
+        """
+        import numpy as np
+
+        base = base if base is not None else EDGE
+        samples = list(samples)
+        if not samples:
+            raise ValueError("need at least one sample to fit")
+        names = sorted({k for feats, _ in samples for k in feats})
+        valid = {f.name for f in dataclasses.fields(cls)} - {"name"}
+        unknown = set(names) - valid
+        if unknown:
+            raise ValueError(f"unknown cost constants: {sorted(unknown)}")
+        A = np.array([[feats.get(k, 0.0) for k in names]
+                      for feats, _ in samples], dtype=np.float64)
+        y = np.array([t for _, t in samples], dtype=np.float64)
+        coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+        coef = np.maximum(coef, 0.0)
+        pred = A @ coef
+        resid = y - pred
+        ss_tot = float(np.sum((y - y.mean()) ** 2))
+        report = {
+            "rms": float(np.sqrt(np.mean(resid ** 2))),
+            "max": float(np.max(np.abs(resid))),
+            "r2": (1.0 - float(np.sum(resid ** 2)) / ss_tot
+                   if ss_tot > 0 else 1.0),
+            "n_samples": len(samples),
+        }
+        fitted = dataclasses.replace(
+            base, name=name,
+            **{k: float(v) for k, v in zip(names, coef)})
+        return fitted, report
 
 
 EDGE = CostModel(name="edge")

@@ -17,30 +17,36 @@ constructed ``serve.AggregationEngine`` by injection.
 """
 from repro.net.broker import DEFAULT_CHUNK_BUDGET_BYTES, SafeBroker
 from repro.net.client import (
+    BonNetResult,
     NetResult,
     PersistentNetSession,
     WireClient,
     auto_chunk_words,
     backoff_delay,
     drive_learner,
+    run_bon_round_net,
     run_federated_round_net,
     run_federated_rounds_net,
     run_safe_round_net,
 )
 from repro.net.faults import (
+    WAN_PROFILES,
     Chain,
     ChurnInterceptor,
     DropInterceptor,
     DropPacket,
+    HeavyTailLatencyInterceptor,
     Interceptor,
     LatencyInterceptor,
     LearnerCrashed,
     deep_edge_faults,
+    make_wan_interceptor,
 )
 from repro.net.shard import ShardBroker, ShardedBroker, shard_of
 from repro.net.loadgen import (
     LoadReport,
     SLOReport,
+    run_bon_scale,
     run_engine_load,
     run_paper_scale,
     run_protocol_load,
@@ -57,9 +63,11 @@ __all__ = [
     "shard_of",
     "WireClient",
     "NetResult",
+    "BonNetResult",
     "PersistentNetSession",
     "drive_learner",
     "run_safe_round_net",
+    "run_bon_round_net",
     "run_federated_round_net",
     "run_federated_rounds_net",
     "Interceptor",
@@ -67,13 +75,17 @@ __all__ = [
     "LatencyInterceptor",
     "DropInterceptor",
     "ChurnInterceptor",
+    "HeavyTailLatencyInterceptor",
     "DropPacket",
     "LearnerCrashed",
     "deep_edge_faults",
+    "WAN_PROFILES",
+    "make_wan_interceptor",
     "LoadReport",
     "SLOReport",
     "run_engine_load",
     "run_protocol_load",
     "run_paper_scale",
+    "run_bon_scale",
     "run_slo_load",
 ]

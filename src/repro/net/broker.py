@@ -42,6 +42,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.bon_controller import BON_CALL_OPS, BON_TIMED_OPS, \
+    BON_WAIT_KINDS, BonController
 from repro.core.controller import CALL_OPS, TIMED_OPS, WAIT_KINDS, Controller
 from repro.net import wire
 from repro.obs import MetricsRegistry, Tracer
@@ -92,16 +94,20 @@ class _Transfer:
 class _Session:
     """One tenant: a Controller plus the broker-side wait machinery."""
 
-    __slots__ = ("sid", "ctrl", "cond", "closed", "monitor_reposts",
+    __slots__ = ("sid", "ctrl", "bon", "cond", "closed", "monitor_reposts",
                  "initiator_elections", "transfers", "chunk_frames_in",
                  "chunk_frames_out", "transfers_completed",
                  # observability plane (ISSUE 7) — observes, never alters
                  "round_t0", "round_published", "rounds_completed",
                  "pending_bytes", "busy_rejections")
 
-    def __init__(self, sid: int, ctrl: Controller, now: float = 0.0):
+    def __init__(self, sid: int, ctrl: Controller, now: float = 0.0,
+                 bon: Optional[BonController] = None):
         self.sid = sid
         self.ctrl = ctrl
+        # BON tenant (PROTOCOL.md §14): the session speaks the baseline
+        # protocol instead; SAFE ops still see a (quiescent) Controller
+        self.bon = bon
         self.cond = asyncio.Condition()
         self.closed = False
         self.monitor_reposts = 0
@@ -550,6 +556,16 @@ class SafeBroker:
                 sess.closed = True
                 sess.cond.notify_all()
             return None
+        if op in BON_WAIT_KINDS:
+            return await self._bon_long_poll(sess, op, kwargs)
+        if op in BON_CALL_OPS:
+            bon = self._require_bon(sess)
+            if op in BON_TIMED_OPS:
+                kwargs = dict(kwargs, now=self.now())
+            async with sess.cond:
+                res = bon.call(op, **kwargs)
+                sess.cond.notify_all()
+            return res
         if op in WAIT_KINDS:
             return await self._long_poll(sess, op, kwargs)
         if op in CALL_OPS:
@@ -581,8 +597,13 @@ class SafeBroker:
                 sess.cond.notify_all()
             return res
         if op == "peek_average":
+            if sess.bon is not None:
+                avg = sess.bon.average
+                return None if avg is None else {"average": avg}
             return sess.ctrl.try_get_average()
         if op == "get_stats":
+            if sess.bon is not None:
+                return sess.bon.stats_dict()
             stats = dataclasses.asdict(sess.ctrl.stats)
             stats["aggregation_total"] = sess.ctrl.stats.aggregation_total
             stats["key_exchange_total"] = sess.ctrl.stats.key_exchange_total
@@ -642,10 +663,23 @@ class SafeBroker:
         timeout = kwargs.get("aggregation_timeout")
         if timeout is None:
             timeout = self.aggregation_timeout
+        protocol = kwargs.get("protocol", "safe")
+        bon = None
+        if protocol == "bon":
+            # BON tenant (additive kwarg, PROTOCOL.md §14): one flat
+            # node set (the union of the groups map keeps the call
+            # shape), its own threshold and dropout wait
+            nodes = sorted({x for chain in groups.values() for x in chain})
+            bon = BonController(
+                nodes, threshold=kwargs.get("threshold"),
+                roster_timeout=float(kwargs.get("roster_timeout", 1.0)),
+                scale_bits=int(kwargs.get("scale_bits", 16)))
+        elif protocol != "safe":
+            raise wire.WireError(f"unknown protocol {protocol!r}")
         sid = next(self._sids)
         self._sessions[sid] = _Session(
             sid, Controller(groups, aggregation_timeout=float(timeout)),
-            now=self.now())
+            now=self.now(), bon=bon)
         self._m_sessions_created.inc()
         self._m_active.set(len(self._sessions))
         return {"session": sid, "aggregation_timeout": float(timeout)}
@@ -692,6 +726,35 @@ class SafeBroker:
             # check_aggregate — wake its waiter
             sess.cond.notify_all()
             return res
+
+        res = await _park(sess.cond, probe, deadline)
+        return res if res is not None else {"status": "timeout"}
+
+    # ------------------------------------------------------------------
+    # BON baseline plane (docs/PROTOCOL.md §14)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _require_bon(sess: _Session) -> BonController:
+        if sess.bon is None:
+            raise wire.WireError(
+                f"session {sess.sid} is not a BON session")
+        return sess.bon
+
+    async def _bon_long_poll(self, sess: _Session, kind: str, kwargs: dict):
+        """BON waits under the same park/probe/consume discipline as the
+        SAFE long-polls: only consumption counts (in BonStats), a lapsed
+        deadline answers {"status": "timeout"} and counts nothing."""
+        bon = self._require_bon(sess)
+        timeout = kwargs.pop("timeout", None)
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + float(timeout)
+
+        def probe():
+            if sess.closed:
+                raise wire.WireError(f"session {sess.sid} deleted")
+            if bon.probe(kind, **kwargs) is None:
+                return None
+            return bon.consume(kind, **kwargs)
 
         res = await _park(sess.cond, probe, deadline)
         return res if res is not None else {"status": "timeout"}
@@ -947,6 +1010,14 @@ class SafeBroker:
                 # the monitor task and silently disable §5.3 failover
                 # for every other tenant
                 try:
+                    if sess.bon is not None:
+                        # BON tenants: the roster settles by wall time
+                        # when dropouts leave Round 2 short — nothing
+                        # else wakes the parked roster waits
+                        async with sess.cond:
+                            if sess.bon.maybe_close_roster(now):
+                                sess.cond.notify_all()
+                        continue
                     async with sess.cond:
                         for group in sess.ctrl.groups:
                             stuck = sess.ctrl.stuck_posting(

@@ -49,6 +49,8 @@ from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.core.bon_machines import build_bon_machines
+from repro.core.bon_protocol import bon_expected_messages
 from repro.core.costs import CostModel, EDGE
 from repro.core.machines import LearnerCrypto, LearnerGen, build_round_machines
 from repro.core.session import RoundCursor
@@ -917,6 +919,113 @@ async def run_safe_round_net(
         initiator_elections=stats["initiator_elections"],
         crashed_nodes=crashed,
         streamed_combines=streamed,
+    )
+
+
+@dataclasses.dataclass
+class BonNetResult:
+    """One BON round over the wire (the baseline's NetResult twin).
+    ``stats`` is the broker's BonStats as a dict (one counter per
+    ``bon_*`` op plus ``total`` and ``shares_reconstructed``)."""
+
+    average: Optional[np.ndarray]
+    wall_time: float
+    stats: Dict[str, int]
+    bytes_sent: int
+    messages: int
+    expected_messages: int
+    crashed_nodes: tuple = ()
+
+
+async def run_bon_round_net(
+    values: np.ndarray,
+    addr: Addr,
+    *,
+    failed_nodes: Iterable[int] = (),
+    threshold: Optional[int] = None,
+    seed: int = 7,
+    scale_bits: int = 16,
+    roster_timeout: float = 0.5,
+    aggregation_timeout: Optional[float] = None,
+    interceptor: Optional[Interceptor] = None,
+    timeout_scale: float = 1.0,
+) -> BonNetResult:
+    """One BON aggregation over the real broker — the transport twin of
+    :func:`repro.core.bon_protocol.run_bon_round`, so the Bonawitz-style
+    baseline and SAFE are measured on the *same* wire (ISSUE 8; the
+    paper's §6.1 comparison was half cost-model before this).
+
+    Unlike SAFE, ``failed_nodes`` here run Rounds 0–1 over real sockets
+    (advertise, share secrets) and then vanish — the protocol's
+    designed-for worst case. The broker's BON session declares them
+    dropped ``roster_timeout`` wall-seconds after the first masked
+    input, and the server-side recovery (Shamir reconstruction + pad
+    regeneration — the compute SAFE's "mere message broker" never does)
+    runs inside the broker process.
+
+    Per-op traffic is counted in ``BonStats`` with the same only-
+    consumption-counts discipline as MessageStats; a completed clean
+    round totals exactly ``bon_expected_messages(n, f)``. Payloads are
+    single-frame by design (a masked vector at BON's practical n is far
+    below MAX_FRAME); the chunk plane is not wired to ``bon_*`` ops.
+    """
+    values = np.asarray(values, np.float32)
+    n, V = values.shape
+    t = int(threshold) if threshold else (n // 2 + 1)
+    failed = {int(x) for x in failed_nodes}
+    if n - len(failed) < t:
+        raise ValueError("not enough survivors to reach the threshold")
+
+    machines = build_bon_machines(
+        values, failed_nodes=failed, threshold=t, seed=seed,
+        scale_bits=scale_bits)
+
+    admin = await WireClient(*addr).connect()
+    sid = None
+    try:
+        created = await admin.request("create_session", {
+            "groups": {0: list(range(1, n + 1))},
+            "aggregation_timeout": aggregation_timeout,
+            "protocol": "bon", "threshold": t,
+            "roster_timeout": roster_timeout, "scale_bits": scale_bits})
+        sid = created["session"]
+        wall_agg = created["aggregation_timeout"]
+        learner_addr = ((addr[0], int(created["port"]))
+                        if created.get("port") else addr)
+
+        async def acquire(node: int) -> WireClient:
+            return await WireClient(*learner_addr, node=node,
+                                    interceptor=interceptor).connect()
+
+        async def release(node: int, client: WireClient, _crashed: bool):
+            await client.close()
+            admin.bytes_sent += client.bytes_sent
+
+        wall, crashed, _ = await _drive_round_machines(
+            machines, acquire, release, sid,
+            aggregation_timeout=wall_agg, timeout_scale=timeout_scale,
+            compute_scale=0.0, chunk_words=None, payload_words=V,
+            prefetch_depth=None, stream=False)
+
+        stats = await admin.request("get_stats", {"session": sid})
+        final = await admin.request("peek_average", {"session": sid})
+    finally:
+        if sid is not None:
+            try:
+                await admin.request("delete_session", {"session": sid})
+            except Exception:  # noqa: BLE001
+                pass
+        await admin.close()
+
+    return BonNetResult(
+        average=None if final is None else final["average"],
+        wall_time=wall,
+        stats=stats,
+        bytes_sent=admin.bytes_sent,
+        messages=stats["total"],
+        expected_messages=bon_expected_messages(n, len(failed) +
+                                                len(crashed)),
+        crashed_nodes=crashed,
     )
 
 

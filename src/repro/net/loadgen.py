@@ -49,6 +49,7 @@ from repro.net.broker import SafeBroker
 from repro.net.client import (
     PersistentNetSession,
     WireClient,
+    run_bon_round_net,
     run_safe_round_net,
 )
 from repro.net.shard import ShardedBroker
@@ -621,6 +622,8 @@ async def run_paper_scale(
     stream: Optional[bool] = True,
     weights: Optional[np.ndarray] = None,
     bit_identical: bool = True,
+    interceptor=None,
+    timeout_scale: float = 1.0,
     progress_timeout: float = 0.3,
     monitor_interval: float = 0.1,
     aggregation_timeout: float = 60.0,
@@ -647,12 +650,16 @@ async def run_paper_scale(
     still holds exactly. ``shards`` > 1 runs the round against a
     :class:`~repro.net.shard.ShardedBroker` fleet — same assertions,
     sharded runtime (redirect + direct-dial paths under load).
+    ``interceptor`` layers extra transport faults (e.g. a WAN profile
+    from ``repro.net.faults.make_wan_interceptor``) under any churn
+    schedule; pair it with ``timeout_scale`` and generous
+    ``progress_timeout`` so a slow WAN hop doesn't read as a dead node.
 
     Returns a flat row for the bench harness (wall seconds, messages,
     bytes, chunk-plane frame counts). ``chunk_words`` prices the
     chunk-streaming path at the same scale.
     """
-    from repro.net.faults import ChurnInterceptor
+    from repro.net.faults import Chain, ChurnInterceptor
 
     rng = np.random.RandomState(seed)
     vals = rng.uniform(-1, 1, (n, V)).astype(np.float32)
@@ -664,7 +671,10 @@ async def run_paper_scale(
     # each live learner holds a control + possibly an aux chunk
     # connection, broker mirrors both; headroom for pipes/listeners
     ensure_fd_headroom(4 * n + 128)
-    interceptor = ChurnInterceptor(churn) if churn else None
+    if churn:
+        churn_icpt = ChurnInterceptor(churn)
+        interceptor = (Chain(interceptor, churn_icpt) if interceptor
+                       else churn_icpt)
     broker_kw = dict(progress_timeout=progress_timeout,
                      monitor_interval=monitor_interval,
                      aggregation_timeout=aggregation_timeout)
@@ -676,7 +686,8 @@ async def run_paper_scale(
     try:
         res = await run_safe_round_net(
             vals, addr, failed_nodes=failed, weights=weights,
-            interceptor=interceptor, chunk_words=chunk_words,
+            interceptor=interceptor, timeout_scale=timeout_scale,
+            chunk_words=chunk_words,
             prefetch_depth=prefetch_depth, stream=stream)
     finally:
         await broker.stop()
@@ -736,5 +747,106 @@ async def run_paper_scale(
         "chunk_frames_out": res.stats["chunk_frames_out"],
         "transfers_completed": res.stats["transfers_completed"],
         "streamed_combines": res.streamed_combines,
+        "bit_identical": bool(bit_identical),
+    }
+
+
+async def run_bon_scale(
+    *,
+    n: int = 36,
+    V: int = 256,
+    failures: Iterable[int] = (),
+    churn: Optional[Dict[int, int]] = None,
+    seed: int = 0,
+    threshold: Optional[int] = None,
+    interceptor=None,
+    bit_identical: bool = True,
+    roster_timeout: float = 0.5,
+    monitor_interval: float = 0.1,
+    aggregation_timeout: float = 60.0,
+    timeout_scale: float = 1.0,
+) -> dict:
+    """One BON baseline round over real TCP, closed form checked.
+
+    The Bonawitz-style twin of :func:`run_paper_scale` (ISSUE 8): starts
+    a fresh broker, drives ``run_bon_round_net`` with n learners (every
+    node connects — BON dropouts fail *after* Rounds 0–1, unlike SAFE's
+    pre-round deaths), and asserts:
+
+      * BonStats == the closed form ``2n + 2n(n−1) + ℓ(n+2)`` with
+        ``ℓ = n − f`` (docs/PROTOCOL.md §14) — exact even under
+        ``churn``, because a BON crash schedule of ``2n`` ops lands
+        precisely on the R1/R2 boundary, the point where the sim's
+        ``failed_nodes`` semantics place dropouts;
+      * the published average equals the survivors' clear-text mean;
+      * (``bit_identical``) the wire average is ``np.array_equal`` to
+        ``run_bon_round``'s for the same inputs and dropout set.
+
+    ``failures`` marks nodes that stop cooperatively after Round 1;
+    ``churn`` maps node → op budget for
+    :class:`~repro.net.faults.ChurnInterceptor` (pass ``2n`` per victim
+    for the sim-equivalent point). ``interceptor`` layers WAN faults
+    (``repro.net.faults.make_wan_interceptor``) on clean runs. Returns
+    a flat bench row like ``run_paper_scale``'s.
+    """
+    from repro.core.bon_protocol import run_bon_round
+    from repro.net.faults import Chain, ChurnInterceptor
+
+    rng = np.random.RandomState(seed)
+    vals = rng.uniform(-1, 1, (n, V)).astype(np.float32)
+    failed = sorted(set(failures))
+    churn = dict(churn or {})
+    if failed and churn:
+        raise ValueError("pick failures= (post-R1) or churn= "
+                         "(op schedule), not both")
+    ensure_fd_headroom(4 * n + 128)
+    icpt = interceptor
+    if churn:
+        churn_icpt = ChurnInterceptor(churn)
+        icpt = Chain(icpt, churn_icpt) if icpt else churn_icpt
+    broker = SafeBroker(monitor_interval=monitor_interval,
+                        aggregation_timeout=aggregation_timeout)
+    addr = await broker.start()
+    try:
+        res = await run_bon_round_net(
+            vals, addr, failed_nodes=failed, threshold=threshold,
+            seed=seed, roster_timeout=roster_timeout,
+            interceptor=icpt, timeout_scale=timeout_scale)
+    finally:
+        await broker.stop()
+
+    dead = sorted(set(res.crashed_nodes) | set(failed))
+    f = len(dead)
+    if churn and sorted(churn) != dead:
+        raise AssertionError(
+            f"churn plan {sorted(churn)} but crashed nodes {dead}")
+    if res.messages != res.expected_messages:
+        raise AssertionError(
+            f"BON n={n} f={f}: {res.messages} messages, closed form "
+            f"says {res.expected_messages}")
+    mask = np.ones(n, bool)
+    for node in dead:
+        mask[node - 1] = False
+    exp_avg = vals[mask].mean(0)
+    if np.abs(res.average - exp_avg).max() > 1e-2:
+        raise AssertionError("BON average off the survivors' mean")
+    if bit_identical:
+        sim = run_bon_round(vals, failed_nodes=dead, threshold=threshold,
+                            seed=seed)
+        if not np.array_equal(sim.average, res.average):
+            raise AssertionError(
+                f"BON n={n} f={f}: wire average is not bit-identical "
+                f"to the simulation")
+    return {
+        "protocol": "bon",
+        "n": n,
+        "V": V,
+        "failures": f,
+        "churn": bool(churn),
+        "messages": res.messages,
+        "expected_messages": res.expected_messages,
+        "wall_s": res.wall_time,
+        "bytes_sent": res.bytes_sent,
+        "shares_reconstructed": res.stats.get("shares_reconstructed", 0),
         "bit_identical": bool(bit_identical),
     }

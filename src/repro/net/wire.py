@@ -115,6 +115,18 @@ OPS: Tuple[str, ...] = (
     # series. Admin-class: never counted in MessageStats, never timed.
     # Appended per the §9 additive-opcode policy — no version bump.
     "get_metrics",
+    # BON baseline plane (docs/PROTOCOL.md §14): the Bonawitz-style
+    # 4-round protocol (core/bon_controller.py) on the same transport,
+    # for the head-to-head bake-off of benchmarks/bon_wire.py. Counted
+    # in BonStats (never MessageStats). Appended per §9 — no bump.
+    "bon_advertise",
+    "bon_post_share",
+    "bon_post_masked",
+    "bon_post_unmask",
+    "bon_get_keys",
+    "bon_get_share",
+    "bon_get_roster",
+    "bon_get_average",
 )
 OPCODE = {name: i + 1 for i, name in enumerate(OPS)}
 OPNAME = {i + 1: name for i, name in enumerate(OPS)}

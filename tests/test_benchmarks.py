@@ -1,0 +1,76 @@
+"""Benchmark result hygiene (ISSUE 8): one schema'd file per module.
+
+``results/benchmarks/`` used to hold both ``BENCH_<module>.json``
+(schema ``safe-bench/v1``) and stale unprefixed twins (``slo.json``,
+``paper_scale.json``, …) that drifted out of date the moment a module
+evolved. The contract now: :func:`benchmarks.common.save_json` stashes
+unprefixed payloads in memory and the next ``save_bench_json`` folds
+them into the module's BENCH file under ``payloads`` — only
+``BENCH_``-prefixed names ever touch disk. These tests reject any
+regression to twin-writing, in code and in the checked-in tree.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "results", "benchmarks")
+
+sys.path.insert(0, REPO)  # `import benchmarks` from any pytest rootdir
+
+from benchmarks import common  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _clean_stash():
+    """Isolate each test from module-level row/payload accumulators."""
+    common._payloads.clear()
+    rows_before = list(common._rows)
+    yield
+    common._payloads.clear()
+    common._rows[:] = rows_before
+
+
+def test_results_dir_holds_only_bench_prefixed_files():
+    """The checked-in tree must contain no unprefixed twins."""
+    offenders = [f for f in os.listdir(RESULTS)
+                 if not f.startswith("BENCH_")]
+    assert offenders == [], (
+        f"unprefixed benchmark outputs in results/benchmarks/: "
+        f"{offenders} — route payloads through save_json + "
+        f"save_bench_json (they land under the 'payloads' key)")
+
+
+def test_unprefixed_save_json_writes_no_file(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    path = common.save_json("rogue_module", {"x": 1})
+    assert path == ""
+    assert os.listdir(tmp_path) == []  # nothing hit disk
+    assert common._payloads == {"rogue_module": {"x": 1}}
+
+
+def test_save_bench_json_folds_payload_stash(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    common.save_json("mod", {"detail": [1, 2]})
+    common.save_json("mod_extra", {"more": True})
+    path = common.save_bench_json("mod", [("mod/row", 1.0, "d")], "ok", 0.5)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == common.BENCH_SCHEMA
+    assert doc["payloads"] == {"mod": {"detail": [1, 2]},
+                               "mod_extra": {"more": True}}
+    assert doc["rows"] == [{"name": "mod/row", "us_per_call": 1.0,
+                            "derived": "d"}]
+    # the stash drained: the next module's BENCH file starts clean
+    assert common._payloads == {}
+    assert sorted(os.listdir(tmp_path)) == ["BENCH_mod.json"]
+
+
+def test_checked_in_bench_files_parse_with_schema():
+    for fname in sorted(os.listdir(RESULTS)):
+        with open(os.path.join(RESULTS, fname)) as f:
+            doc = json.load(f)
+        assert doc.get("schema") == common.BENCH_SCHEMA, fname
+        assert "rows" in doc and "status" in doc, fname

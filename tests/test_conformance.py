@@ -1,0 +1,259 @@
+"""Protocol conformance matrix (ISSUE 8).
+
+One table-driven suite pinning the wire-plane contract for BOTH
+protocols across fault patterns and transport shapes:
+
+    protocol  ∈ {safe, bon}
+    fault     ∈ {clean, f1 (one dead), fq (n/4 dead), churn (mid-round)}
+    transport ∈ {buffered, streamed, persistent}
+
+Every cell asserts the §5 / §14 closed-form message count (exact, or
+the documented floor under SAFE mid-round churn) AND bit-identity of
+the wire average against the discrete-event simulation for the same
+inputs — the sim↔wire discipline as a conformance matrix rather than a
+scatter of individual regressions.
+
+Two cells degrade by design, with the degradation itself asserted:
+
+  * BON × streamed — the chunk plane is not wired to ``bon_*`` ops
+    (docs/PROTOCOL.md §14): BON runs buffered and its stats must show
+    no streamed/chunk activity at all.
+  * BON × persistent — BON re-runs key agreement every round (§2 point
+    1; the cost SAFE's persistent sessions amortize), so "persistent"
+    BON is two independent rounds, each paying the full n advertise
+    ops, while SAFE's second round derives zero new keys.
+
+Smoke-sized (n=8) so the matrix is tier-1; each test carries the
+test_net.py SIGALRM deadline so a hung broker aborts instead of
+stalling the suite.
+"""
+import asyncio
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import machines
+from repro.core.bon_protocol import bon_expected_messages, run_bon_round
+from repro.core.protocol import run_safe_round
+from repro.net import (
+    ChurnInterceptor,
+    PersistentNetSession,
+    SafeBroker,
+    run_bon_round_net,
+    run_safe_round_net,
+)
+
+N = 8
+V = 16
+DEADLINE_S = 90
+
+#: fault pattern → nodes dead for the closed form (churn schedules are
+#: built per protocol: op budgets differ between SAFE and BON rounds)
+FAULTS = {
+    "clean": (),
+    "f1": (3,),
+    "fq": (3, 6),  # n/4 dead — the paper's heavy-dropout flavour
+    "churn": (5,),
+}
+
+#: deterministic input seed per cell (str hashes are per-process salted)
+SEEDS = {
+    ("safe", "clean", "buffered"): 100, ("safe", "clean", "streamed"): 101,
+    ("safe", "f1", "buffered"): 102, ("safe", "f1", "streamed"): 103,
+    ("safe", "fq", "buffered"): 104, ("safe", "fq", "streamed"): 105,
+    ("safe", "churn", "buffered"): 106, ("safe", "churn", "streamed"): 107,
+    ("bon", "clean", "buffered"): 110, ("bon", "f1", "buffered"): 111,
+    ("bon", "fq", "buffered"): 112, ("bon", "churn", "buffered"): 113,
+}
+
+
+@pytest.fixture(autouse=True)
+def _hard_deadline():
+    def _expired(signum, frame):
+        raise TimeoutError(f"conformance test exceeded {DEADLINE_S}s")
+
+    old = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(DEADLINE_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def _vals(seed):
+    return np.random.RandomState(seed).uniform(
+        -1, 1, (N, V)).astype(np.float32)
+
+
+def _safe_expected(f: int) -> int:
+    return 4 * (N - f) + 2 * f if f else 4 * N
+
+
+async def _with_broker(coro_fn, **broker_kw):
+    broker = SafeBroker(**dict(
+        dict(progress_timeout=0.4, monitor_interval=0.1,
+             aggregation_timeout=30.0), **broker_kw))
+    addr = await broker.start()
+    try:
+        return await coro_fn(addr)
+    finally:
+        await broker.stop()
+
+
+class TestSafeMatrix:
+    @pytest.mark.parametrize("fault", ["clean", "f1", "fq", "churn"])
+    @pytest.mark.parametrize("transport", ["buffered", "streamed"])
+    def test_cell(self, fault, transport):
+        dead = FAULTS[fault]
+        vals = _vals(SEEDS[("safe", fault, transport)])
+        kw = dict(stream=False) if transport == "buffered" else dict(
+            stream=True, chunk_words=V // 2)
+        if fault == "churn":
+            # node 5 dies after ONE op — keys are pre-provisioned
+            # (zero RPCs), so the budget must land before the node can
+            # consume or post an aggregate; §5.3 recovery then reposts
+            # around it and the result matches the sim with node 5 dead
+            kw["interceptor"] = ChurnInterceptor({5: 1})
+        else:
+            kw["failed_nodes"] = dead
+
+        # churn recovery completes within ~3x progress_timeout; a tight
+        # aggregation deadline keeps the stragglers' final long-polls
+        # from pinning the wall clock at the default 30 s
+        broker_kw = dict(aggregation_timeout=3.0) if fault == "churn" else {}
+        res = asyncio.run(_with_broker(
+            lambda addr: run_safe_round_net(vals, addr, **kw), **broker_kw))
+
+        sim = run_safe_round(vals, failed_nodes=list(dead))
+        assert res.crashed_nodes == (dead if fault == "churn" else ())
+        assert np.array_equal(sim.average, res.average)  # bit-identical
+        expected = _safe_expected(len(dead))
+        got = res.stats["aggregation_total"]
+        if fault == "churn":
+            # mid-round crash timing makes the total depend on when the
+            # crash lands relative to reposting: floor-bounded (the
+            # all-crash-early form), not exact — same contract as
+            # loadgen.run_paper_scale
+            assert got >= expected, (got, expected)
+        else:
+            assert got == expected, (got, expected)
+        if transport == "streamed" and fault == "clean":
+            assert res.streamed_combines == N - 1
+
+    @pytest.mark.parametrize("fault", ["clean", "f1", "fq", "churn"])
+    def test_persistent_cell(self, fault):
+        """Three rounds on ONE live session: round 0 clean (derives all
+        key material), round 1 under the fault, round 2 clean again.
+        key_derivations() must be flat outside failover — round 1 may
+        derive exactly the 2 skip-pad keys per dead node that §5.3
+        recovery requires, and round 2 derives ZERO (everything,
+        including the skip pads, is cached). Each round still meets its
+        closed form and matches the sim at its counter base."""
+        dead = FAULTS[fault]
+        vals0, vals1, vals2 = _vals(70), _vals(71), _vals(72)
+        churn = ChurnInterceptor({}) if fault == "churn" else None
+
+        async def go(addr):
+            sess = PersistentNetSession(
+                addr, N, interceptor=churn,
+                aggregation_timeout=3.0 if churn else None)
+            await sess.open()
+            try:
+                r0 = await sess.run_round(vals0)
+                d0 = machines.key_derivations()
+                if churn is not None:
+                    # arm the schedule only now: node 5 gets ONE more op
+                    # in round 1 — enough to re-enter the round, not
+                    # enough to consume or post — so the crash lands
+                    # mid-round-1 on the SAME live session
+                    churn.crash_after[5] = churn._ops.get(5, 0) + 1
+                r1 = await sess.run_round(
+                    vals1, failed_nodes=() if churn else dead)
+                d1 = machines.key_derivations()
+                if churn is not None:
+                    churn.crash_after.pop(5)  # node 5 rejoins
+                r2 = await sess.run_round(vals2)
+                d2 = machines.key_derivations()
+                return r0, r1, r2, d1 - d0, d2 - d1
+            finally:
+                await sess.close()
+
+        r0, r1, r2, derivs_r1, derivs_r2 = asyncio.run(_with_broker(go))
+        # flat outside failover; failover derives only the skip pads
+        if fault == "churn":
+            assert derivs_r1 <= 2 * len(dead)
+        else:
+            assert derivs_r1 == 2 * len(dead)
+        assert derivs_r2 == 0
+        assert np.array_equal(run_safe_round(vals0).average, r0.average)
+        assert r0.stats["aggregation_total"] == 4 * N
+        sim1 = run_safe_round(vals1, failed_nodes=list(dead), counter=V)
+        assert np.array_equal(sim1.average, r1.average)
+        if fault == "churn":
+            assert r1.crashed_nodes == dead
+            assert r1.stats["aggregation_total"] >= _safe_expected(len(dead))
+        else:
+            assert r1.stats["aggregation_total"] == _safe_expected(len(dead))
+        sim2 = run_safe_round(vals2, counter=2 * V)
+        assert np.array_equal(sim2.average, r2.average)
+        assert r2.stats["aggregation_total"] == 4 * N
+
+
+class TestBonMatrix:
+    def _run(self, vals, **kw):
+        return asyncio.run(_with_broker(
+            lambda addr: run_bon_round_net(vals, addr, **kw)))
+
+    @pytest.mark.parametrize("fault", ["clean", "f1", "fq", "churn"])
+    def test_buffered_cell(self, fault):
+        dead = FAULTS[fault]
+        vals = _vals(SEEDS[("bon", fault, "buffered")])
+        kw = {}
+        if fault == "churn":
+            # a 2n op budget lands the crash exactly on the R1/R2
+            # boundary — the point where the sim's failed_nodes
+            # semantics place dropouts, so the count stays EXACT
+            kw["interceptor"] = ChurnInterceptor({5: 2 * N})
+        else:
+            kw["failed_nodes"] = dead
+
+        res = self._run(vals, **kw)
+
+        sim = run_bon_round(vals, failed_nodes=list(dead))
+        assert res.crashed_nodes == (dead if fault == "churn" else ())
+        assert np.array_equal(sim.average, res.average)  # bit-identical
+        expected = bon_expected_messages(N, len(dead))
+        assert res.messages == expected
+        assert res.expected_messages == expected
+        assert sim.messages == expected
+
+    def test_streamed_cell_degrades_to_buffered(self):
+        """The chunk plane is not wired to ``bon_*`` ops (§14): a BON
+        round under any transport shape is buffered, and its stats must
+        show zero streamed/chunk activity."""
+        vals = _vals(80)
+        res = self._run(vals)
+        assert res.stats["protocol"] == "bon"
+        # BonStats has no chunk/stream fields — nothing chunk-shaped may
+        # appear; the counted ops are exactly the 8 bon_* opcodes
+        for key in res.stats:
+            assert "chunk" not in key and "stream" not in key, key
+        assert res.messages == bon_expected_messages(N)
+        assert np.array_equal(run_bon_round(vals).average, res.average)
+
+    def test_persistent_cell_pays_keyagree_per_round(self):
+        """BON's "persistent" shape is two independent rounds: every
+        round re-runs the full key agreement (n advertises, 2n(n−1)
+        share messages) — the per-round cost SAFE's persistent sessions
+        amortize to zero (TestSafeMatrix.test_persistent_cell)."""
+        vals0, vals1 = _vals(81), _vals(82)
+        r0 = self._run(vals0, seed=5)
+        r1 = self._run(vals1, seed=6)
+        for r, vals, seed in ((r0, vals0, 5), (r1, vals1, 6)):
+            assert r.stats["bon_advertise"] == N
+            assert r.stats["bon_post_share"] == N * (N - 1)
+            assert r.messages == bon_expected_messages(N)
+            assert np.array_equal(
+                run_bon_round(vals, seed=seed).average, r.average)

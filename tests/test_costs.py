@@ -1,0 +1,132 @@
+"""CostModel calibration (ISSUE 8): fit round-trip + §6.1 ratio pins.
+
+``CostModel.fit`` turns measured (features, seconds) samples into a
+calibrated model with a residual report — benchmarks/bon_wire.py uses
+it to re-derive the paper's §6.1 BON/SAFE ratio from this host's
+measured per-op latencies. Here: the solver recovers known constants
+exactly from noise-free samples, clips unphysical negatives, inherits
+unfitted fields from its base, and the stock EDGE model's re-derived
+§6.1 ratios stay pinned (a constant-table edit that silently moves the
+headline reproduction number fails here, not in a benchmark row).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.bon_protocol import bon_expected_messages, run_bon_round
+from repro.core.costs import DEEP_EDGE, EDGE, CostModel
+from repro.core.protocol import run_safe_round
+
+N, V = 36, 256
+FAILED = (4, 5, 6)
+
+
+class TestFit:
+    def test_noise_free_round_trip(self):
+        true = {"t_msg": 0.004, "t_byte": 3e-7, "t_share": 5e-5}
+
+        def t(feats):
+            return sum(true[k] * v for k, v in feats.items())
+
+        samples = []
+        for nb in (64, 1024, 65536):
+            samples.append(({"t_msg": 1.0, "t_byte": float(nb)},
+                            t({"t_msg": 1.0, "t_byte": float(nb)})))
+        for k in (5, 9, 36):
+            samples.append(({"t_share": float(k)},
+                            t({"t_share": float(k)})))
+        fitted, resid = CostModel.fit(samples)
+        for k, v in true.items():
+            assert getattr(fitted, k) == pytest.approx(v, rel=1e-9), k
+        assert resid["rms"] == pytest.approx(0.0, abs=1e-12)
+        assert resid["r2"] == pytest.approx(1.0)
+        assert resid["n_samples"] == len(samples)
+
+    def test_unfitted_fields_inherit_base(self):
+        fitted, _ = CostModel.fit(
+            [({"t_msg": 1.0}, 0.01)], base=DEEP_EDGE, name="x")
+        assert fitted.name == "x"
+        assert fitted.t_msg == pytest.approx(0.01)
+        # everything not in the samples keeps the base's value
+        for f in dataclasses.fields(CostModel):
+            if f.name in ("name", "t_msg"):
+                continue
+            assert getattr(fitted, f.name) == getattr(DEEP_EDGE, f.name), \
+                f.name
+
+    def test_negative_coefficients_clip_to_zero(self):
+        # two colinear-ish samples forcing one coefficient negative:
+        # a (1,1) feature pair cheaper than the t_msg-only sample
+        samples = [
+            ({"t_msg": 1.0}, 0.010),
+            ({"t_msg": 1.0}, 0.010),
+            ({"t_msg": 1.0, "t_share": 1.0}, 0.002),
+        ]
+        fitted, _ = CostModel.fit(samples)
+        assert fitted.t_share == 0.0  # not negative
+
+    def test_rejects_unknown_constants_and_empty(self):
+        with pytest.raises(ValueError, match="unknown cost constants"):
+            CostModel.fit([({"t_warp_drive": 1.0}, 1.0)])
+        with pytest.raises(ValueError, match="at least one sample"):
+            CostModel.fit([])
+
+    def test_fit_is_usable_by_the_simulations(self):
+        """A fitted model drops straight into both protocol sims."""
+        fitted, _ = CostModel.fit(
+            [({"t_msg": 1.0, "t_byte": 256.0}, 2e-4),
+             ({"t_msg": 1.0, "t_byte": 65536.0}, 5e-4),
+             ({"t_share": 9.0}, 1e-4)],
+            base=EDGE, name="host")
+        vals = np.random.RandomState(1).uniform(
+            -1, 1, (8, 32)).astype(np.float32)
+        s = run_safe_round(vals, cost=fitted)
+        b = run_bon_round(vals, cost=fitted)
+        assert s.virtual_time > 0 and b.virtual_time > s.virtual_time
+        assert np.array_equal(s.average, run_safe_round(vals).average)
+
+
+class TestRatio61Pins:
+    """The re-derived §6.1 comparison on the stock models, pinned.
+
+    Regression ranges, not paper-exact values: the EDGE constants are
+    calibrated to the paper's *order of magnitude* (costs.py docstring)
+    and the ratio moves smoothly with them. The message ratio is exact
+    arithmetic and pinned exactly.
+    """
+
+    @pytest.fixture(scope="class")
+    def rounds(self):
+        rng = np.random.RandomState(0)
+        vals = rng.uniform(-1, 1, (N, V)).astype(np.float32)
+        return {
+            "safe": run_safe_round(vals),
+            "safe_f": run_safe_round(vals, failed_nodes=list(FAILED)),
+            "bon": run_bon_round(vals),
+            "bon_f": run_bon_round(vals, failed_nodes=list(FAILED)),
+        }
+
+    def test_clean_time_ratio_range(self, rounds):
+        ratio = rounds["bon"].virtual_time / rounds["safe"].virtual_time
+        assert 18.0 < ratio < 28.0, ratio
+
+    def test_failover_time_ratio_range(self, rounds):
+        # conservative by construction: BON's dropout wait is excluded
+        # (global_timeout=0) while SAFE still pays its §5.3 discovery
+        # timeouts — a lower bound on the paper's advantage
+        ratio = (rounds["bon_f"].virtual_time
+                 / rounds["safe_f"].virtual_time)
+        assert 1.3 < ratio < 4.0, ratio
+
+    def test_message_ratio_exact(self, rounds):
+        assert rounds["bon"].messages == bon_expected_messages(N)
+        assert rounds["safe"].stats.aggregation_total == 4 * N
+        assert rounds["bon"].messages / rounds[
+            "safe"].stats.aggregation_total == pytest.approx(27.5)
+
+    def test_failover_messages_closed_form(self, rounds):
+        f = len(FAILED)
+        assert rounds["bon_f"].messages == bon_expected_messages(N, f)
+        assert (rounds["safe_f"].stats.aggregation_total
+                == 4 * (N - f) + 2 * f)
