@@ -21,6 +21,14 @@ just drift a JSON number):
 were refused at least once and still finished every round — admission
 control degrading the flooder, not its neighbors.
 
+A fourth row, ``wan_continental`` (ISSUE 9), is the SLO *calibration*
+gate: every tenant runs behind the 50 ms-RTT / 1 % loss
+``WAN_PROFILES["continental"]`` emulation, and the declared p99 is
+derived from first principles — a SAFE round's critical path is ~4n
+sequential RPCs (§5), each paying ~one nominal RTT on average, with a
+2x factor for exponential jitter and loss-retry backoff — so the row
+fails if the harness cannot actually HOLD the latency it declares.
+
 ``SAFE_SMOKE=1`` shrinks tenant/round counts for CI. Rows land in the
 standard harness; standalone runs also write BENCH_slo.json.
 """
@@ -39,13 +47,20 @@ V = 128 if SMOKE else 256
 PROFILES = ("steady", "heavy_tail", "busy_shed")
 
 
+def _wan_slo_p99_s() -> float:
+    """Declared p99 for the WAN calibration row: nominal RTT × the §5
+    critical-path depth (~4n sequential RPCs per round) × 2 for
+    exponential jitter and the 1 % loss-retry backoff."""
+    from repro.net.faults import WAN_PROFILES
+
+    rtt_s = WAN_PROFILES["continental"]["rtt_ms"] / 1e3
+    return rtt_s * (4 * N + 8) * 2.0
+
+
 async def _rows(out: dict) -> None:
     from repro.net.loadgen import run_slo_load
 
-    for profile in PROFILES:
-        rep = await run_slo_load(
-            profile=profile, tenants=TENANTS, rounds_per_tenant=ROUNDS,
-            n=N, V=V, slo_p99_s=60.0)
+    def _row(rep) -> dict:
         row = rep.row()
         # instrumentation cross-check: the broker's own metrics plane
         # counted exactly the rounds the clients completed
@@ -53,18 +68,32 @@ async def _rows(out: dict) -> None:
             rep.broker_rounds_completed == rep.rounds)
         if rep.error:
             row["error"] = rep.error
-        out[profile] = row
+        return row
+
+    for profile in PROFILES:
+        rep = await run_slo_load(
+            profile=profile, tenants=TENANTS, rounds_per_tenant=ROUNDS,
+            n=N, V=V, slo_p99_s=60.0)
+        out[profile] = _row(rep)
+    # WAN calibration (ISSUE 9): uniform tenants behind the continental
+    # profile, gated on the first-principles p99 — not a generous 60 s
+    rep = await run_slo_load(
+        profile="steady", tenants=TENANTS, rounds_per_tenant=ROUNDS,
+        n=N, V=V, wan_profile="continental", wan_seed=7,
+        slo_p99_s=_wan_slo_p99_s())
+    out["wan_continental"] = _row(rep)
 
 
 def run() -> dict:
     out: dict = {"tenants": TENANTS, "rounds_per_tenant": ROUNDS,
                  "n": N, "V": V}
     asyncio.run(_rows(out))
+    gated = PROFILES + ("wan_continental",)
     out["slo_pass"] = all(
         out[p]["passed"] and out[p]["broker_rounds_match"]
-        for p in PROFILES)
+        for p in gated)
     out["shed_recovered_tenants"] = out["busy_shed"]["shed_tenants"]
-    for profile in PROFILES:
+    for profile in gated:
         row = out[profile]
         emit(f"slo/{profile}", row["p50_s"] * 1e6,
              f"p99={row['p99_s']*1e3:.1f}ms rps={row['rounds_per_s']:.1f} "

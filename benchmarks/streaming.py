@@ -21,7 +21,18 @@ PR 3's baseline:
   * **auto path selection** (ISSUE 6): ``stream=None`` picks streamed
     vs. buffered by payload size (``wire.MIN_STREAM_WORDS``); asserted
     here that the fallback engages below the threshold and the chosen
-    path is never slower than buffered beyond wall-clock noise.
+    path is never slower than buffered beyond wall-clock noise — at
+    EVERY n, including the n=4 smoke point where fixed sub-threshold
+    chunking used to cost x0.81 (ISSUE 9: frame-sized payloads now skip
+    the chunk plane and its per-chunk consume handshakes wholesale).
+  * **cross-round pipelining** (ISSUE 9, §11): rebuild vs persistent vs
+    ``pipelined`` (window-2 ``run_rounds_pipelined``) rounds/s — round
+    r+1's chunk streams upload while round r's tail drains, proven by
+    ``chunk_frames_future > 0`` on the broker, with per-round 4n closed
+    forms and bit-identity intact. Wall-clock wins are cpu-gated on
+    bare localhost (1 core serializes both legs; ``host_cpus`` rides in
+    the payload) and demonstrated under a 10 ms-RTT WAN profile, where
+    rounds are latency-bound and overlap pays even single-core.
 
 Bit-exactness is asserted in-harness at every n: the streamed, the
 buffered, and every persistent round's published average must equal the
@@ -43,6 +54,7 @@ import numpy as np
 from benchmarks.common import emit, save_json, standalone_bench
 
 SMOKE = bool(os.environ.get("SAFE_SMOKE"))
+HOST_CPUS = os.cpu_count() or 1
 NS = (4, 8) if SMOKE else (8, 36)
 V = 4096 if SMOKE else 65536
 CHUNK = 512 if SMOKE else 8192
@@ -81,14 +93,15 @@ async def _rebuild_rounds(addr, rounds_vals, *, stream):
     return out, time.perf_counter() - t0
 
 
-async def _persistent_rounds(addr, rounds_vals):
-    """This PR's path: one session, R rounds, streaming combine on."""
+async def _persistent_rounds(addr, rounds_vals, *, interceptor=None):
+    """One session, R rounds back-to-back, streaming combine on."""
     from repro.core import machines
     from repro.net import PersistentNetSession
 
     n = rounds_vals[0].shape[0]
     t0 = time.perf_counter()
-    sess = PersistentNetSession(addr, n, chunk_words=CHUNK, stream=True)
+    sess = PersistentNetSession(addr, n, chunk_words=CHUNK, stream=True,
+                                interceptor=interceptor)
     await sess.open()
     try:
         d0 = machines.key_derivations()
@@ -106,8 +119,32 @@ async def _persistent_rounds(addr, rounds_vals):
     return out, wall
 
 
+async def _pipelined_rounds(addr, rounds_vals, *, interceptor=None,
+                            window=2):
+    """ISSUE 9's path: one session, R rounds with §11 cross-round
+    overlap — round r+1's chunk streams upload while round r's tail
+    drains. Returns the per-round results, the wall time, and the
+    broker's raw session stats (``chunk_frames_future`` is the direct
+    proof that frames of round r+1 arrived while round r was current)."""
+    from repro.net import PersistentNetSession
+
+    n = rounds_vals[0].shape[0]
+    t0 = time.perf_counter()
+    sess = PersistentNetSession(addr, n, chunk_words=CHUNK, stream=True,
+                                interceptor=interceptor)
+    await sess.open()
+    try:
+        out = await sess.run_rounds_pipelined(rounds_vals, window=window)
+        wall = time.perf_counter() - t0
+        raw = await sess._admin.request("get_stats",
+                                        {"session": sess.sid})
+    finally:
+        await sess.close()
+    return out, wall, raw
+
+
 async def _compare_rounds(rounds_vals):
-    """The R-round A/B on one shared broker: warm one pass of each
+    """The R-round A/B/C on one shared broker: warm one pass of each
     config first, then take each config's best of two timed passes —
     localhost wall times on a loaded box jitter at the 2x level and a
     single cold pass routinely inverts the ranking (the measured
@@ -120,15 +157,23 @@ async def _compare_rounds(rounds_vals):
         warm = rounds_vals[:1]
         await _rebuild_rounds(addr, warm, stream=False)
         await _persistent_rounds(addr, warm)
+        await _pipelined_rounds(addr, warm)
         rebuild, wall_rebuild = await _rebuild_rounds(
             addr, rounds_vals, stream=False)
         persistent, wall_persist = await _persistent_rounds(
             addr, rounds_vals)
+        pipelined, wall_pipe, raw = await _pipelined_rounds(
+            addr, rounds_vals)
         _, wall_rebuild2 = await _rebuild_rounds(
             addr, rounds_vals, stream=False)
         _, wall_persist2 = await _persistent_rounds(addr, rounds_vals)
+        _, wall_pipe2, raw2 = await _pipelined_rounds(addr, rounds_vals)
+        if int(raw2["chunk_frames_future"]) > int(
+                raw["chunk_frames_future"]):
+            raw = raw2
         return (rebuild, min(wall_rebuild, wall_rebuild2),
-                persistent, min(wall_persist, wall_persist2))
+                persistent, min(wall_persist, wall_persist2),
+                pipelined, min(wall_pipe, wall_pipe2), raw)
     finally:
         await broker.stop()
 
@@ -136,7 +181,8 @@ async def _compare_rounds(rounds_vals):
 def run() -> dict:
     from repro.core.protocol import run_safe_round
 
-    out: dict = {"smoke": SMOKE, "V": V, "chunk_words": CHUNK, "rounds": R}
+    out: dict = {"smoke": SMOKE, "V": V, "chunk_words": CHUNK,
+                 "rounds": R, "host_cpus": HOST_CPUS}
 
     for n in NS:
         rng = np.random.RandomState(n)
@@ -170,27 +216,70 @@ def run() -> dict:
              f"x{out[f'n{n}']['stream_speedup_1round']:.2f} vs buffered, "
              f"{streamed.streamed_combines} streamed hops")
 
-        # ---- R rounds: per-round rebuild (PR 3) vs persistent ----------
+        # ---- auto (stream=None) never loses to buffered at ANY n -------
+        # the ISSUE 9 small-n fix: below MIN_STREAM_WORDS a frame-sized
+        # payload now posts unchunked (no per-chunk consume handshakes),
+        # so the auto path must hold the 1.6x noise bound even at the
+        # n=4 smoke point that used to measure x0.81
+        auto1 = asyncio.run(_one_round(vals, stream=None))
+        auto2 = asyncio.run(_one_round(vals, stream=None))
+        for res in (auto1, auto2):
+            if not np.array_equal(sim.average, res.average):
+                raise AssertionError(f"auto n={n}: bits diverged from sim")
+        wall_auto_n = min(auto1.wall_time, auto2.wall_time)
+        if wall_auto_n > buffered.wall_time * 1.6:
+            raise AssertionError(
+                f"auto path {wall_auto_n:.4f}s vs buffered "
+                f"{buffered.wall_time:.4f}s at n={n}, V={V}: auto slower "
+                f"than buffered beyond noise")
+        out[f"n{n}"]["auto_1round_s"] = wall_auto_n
+        out[f"n{n}"]["auto_over_buffered_1round"] = (
+            wall_auto_n / buffered.wall_time)
+        auto_path = "streamed" if auto1.streamed_combines else "fell back"
+        emit(f"streaming/auto_1round_n{n}", wall_auto_n * 1e6,
+             f"x{wall_auto_n / buffered.wall_time:.2f} vs buffered "
+             f"(auto {auto_path})")
+
+        # ---- R rounds: rebuild (PR 3) vs persistent vs pipelined -------
         rounds_vals = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
                        for _ in range(R)]
-        rebuild, wall_rebuild, persistent, wall_persist = asyncio.run(
+        (rebuild, wall_rebuild, persistent, wall_persist,
+         pipelined, wall_pipe, raw_pipe) = asyncio.run(
             _compare_rounds(rounds_vals))
+        pipe_msgs = []
         for r in range(R):
             sim_r = run_safe_round(rounds_vals[r], counter=r * V)
             for tag, res in (("rebuild", rebuild[r]),
-                             ("persistent", persistent[r])):
+                             ("persistent", persistent[r]),
+                             ("pipelined", pipelined[r])):
                 if not np.array_equal(sim_r.average, res.average):
                     raise AssertionError(
                         f"{tag} n={n} round {r}: bits diverged from sim")
-            if persistent[r].stats["aggregation_total"] != 4 * n:
-                raise AssertionError(
-                    f"persistent n={n} round {r}: closed form 4n broken")
+            for tag, res in (("persistent", persistent[r]),
+                             ("pipelined", pipelined[r])):
+                if res.stats["aggregation_total"] != 4 * n:
+                    raise AssertionError(
+                        f"{tag} n={n} round {r}: closed form 4n broken")
+            pipe_msgs.append(pipelined[r].stats["aggregation_total"])
+        # direct §11 overlap proof: the broker accepted round r+1 chunk
+        # frames while round r was still current
+        if int(raw_pipe["chunk_frames_future"]) <= 0:
+            raise AssertionError(
+                f"pipelined n={n}: no future-round chunk frames — rounds "
+                f"never overlapped on the wire")
         rps_rebuild = R / wall_rebuild
         rps_persist = R / wall_persist
+        rps_pipe = R / wall_pipe
         out[f"n{n}"].update({
             "rebuild_rounds_per_s": rps_rebuild,
             "persistent_rounds_per_s": rps_persist,
             "persistent_speedup": rps_persist / rps_rebuild,
+            "pipelined_rounds_per_s": rps_pipe,
+            "pipelined_over_persistent": rps_pipe / rps_persist,
+            "pipelined_chunk_frames_future":
+                int(raw_pipe["chunk_frames_future"]),
+            "pipelined_messages_per_round": pipe_msgs,
+            "pipelined_bit_equal": True,
         })
         emit(f"streaming/rebuild_{R}rounds_n{n}",
              wall_rebuild / R * 1e6, f"{rps_rebuild:.2f} rounds/s (PR3 "
@@ -199,6 +288,12 @@ def run() -> dict:
              wall_persist / R * 1e6,
              f"{rps_persist:.2f} rounds/s, "
              f"x{rps_persist / rps_rebuild:.2f} vs rebuild")
+        emit(f"streaming/pipelined_{R}rounds_n{n}",
+             wall_pipe / R * 1e6,
+             f"{rps_pipe:.2f} rounds/s, "
+             f"x{rps_pipe / rps_persist:.2f} vs persistent, "
+             f"future_frames={int(raw_pipe['chunk_frames_future'])} "
+             f"cpus={HOST_CPUS}")
         # strict win required at the largest n (the amortization target);
         # at small n the zero-copy relay shrank the rebuild cost enough
         # that the margin sits inside 1-core localhost noise, so those
@@ -209,6 +304,16 @@ def run() -> dict:
                 f"persistent+streaming ({rps_persist:.2f} rounds/s) did "
                 f"not beat {floor:.1f}x the rebuild path "
                 f"({rps_rebuild:.2f}) at n={n}")
+        # pipelining's bare-localhost win is cpu-gated: with 1 core the
+        # overlapped round contends for the same CPU the draining round
+        # needs, and wall clock can only tie — the WAN row below is
+        # where a 1-core box demonstrates the §11 overlap honestly
+        if (not SMOKE and n == max(NS) and HOST_CPUS >= 4
+                and rps_pipe < 1.25 * rps_persist):
+            raise AssertionError(
+                f"pipelined ({rps_pipe:.2f} rounds/s) below x1.25 the "
+                f"persistent path ({rps_persist:.2f}) at n={n} with "
+                f"{HOST_CPUS} cpus")
 
     # ---- prefetch-depth ablation (picks DEFAULT_PREFETCH_DEPTH) --------
     n0 = NS[0]
@@ -326,9 +431,82 @@ def run() -> dict:
          f"x{wall_adaptive / wall_fixed:.2f} vs fixed {CHUNK} at V={V} "
          f"(auto picked {aw})")
 
+    # ---- §11 pipelining under WAN latency (ISSUE 9) --------------------
+    # On bare localhost a 1-core box cannot demonstrate cross-round
+    # overlap in wall clock — both legs contend for the same CPU and the
+    # honest rows above only gate where cores exist. Under a 10 ms-RTT
+    # metro profile the round is latency-bound (asyncio sleeps model the
+    # link, the shared CPU is real — the PR 5 honesty convention), so
+    # uploading round r+1 while round r's tail drains buys real wall
+    # clock even single-core; that is the §11 claim, and here it is
+    # asserted at x1.25 (full runs; smoke records).
+    from repro.net.faults import make_wan_interceptor
+
+    rngw = np.random.RandomState(23)
+    wan_vals = [rngw.uniform(-1, 1, (NS[0], V)).astype(np.float32)
+                for _ in range(R)]
+
+    async def _wan_pair():
+        from repro.net import SafeBroker
+
+        broker = SafeBroker(**BROKER_KW)
+        addr = await broker.start()
+        try:
+            icpt = make_wan_interceptor("metro", seed=3)
+            await _persistent_rounds(addr, wan_vals[:1], interceptor=icpt)
+            await _pipelined_rounds(addr, wan_vals[:1], interceptor=icpt)
+            pers, wall_p = await _persistent_rounds(
+                addr, wan_vals, interceptor=icpt)
+            pipe, wall_q, raw = await _pipelined_rounds(
+                addr, wan_vals, interceptor=icpt)
+            _, wall_p2 = await _persistent_rounds(
+                addr, wan_vals, interceptor=icpt)
+            _, wall_q2, _ = await _pipelined_rounds(
+                addr, wan_vals, interceptor=icpt)
+            return (pers, min(wall_p, wall_p2),
+                    pipe, min(wall_q, wall_q2), raw)
+        finally:
+            await broker.stop()
+
+    wan_pers, wan_wall_p, wan_pipe, wan_wall_q, wan_raw = asyncio.run(
+        _wan_pair())
+    for r in range(R):
+        sim_r = run_safe_round(wan_vals[r], counter=r * V)
+        for tag, res in (("persistent", wan_pers[r]),
+                         ("pipelined", wan_pipe[r])):
+            if not np.array_equal(sim_r.average, res.average):
+                raise AssertionError(
+                    f"wan {tag} round {r}: bits diverged from sim")
+            if res.stats["aggregation_total"] != 4 * NS[0]:
+                raise AssertionError(
+                    f"wan {tag} round {r}: closed form 4n broken")
+    wan_speedup = wan_wall_p / wan_wall_q
+    if int(wan_raw["chunk_frames_future"]) <= 0:
+        raise AssertionError("wan pipelined: rounds never overlapped")
+    if not SMOKE and wan_speedup < 1.25:
+        raise AssertionError(
+            f"pipelined under 10 ms WAN only x{wan_speedup:.2f} vs "
+            f"persistent (need >= x1.25: latency-bound rounds must "
+            f"overlap)")
+    out["pipelined_wan"] = {
+        "profile": "metro",
+        "rtt_ms": 10.0,
+        "n": NS[0],
+        "persistent_rounds_per_s": R / wan_wall_p,
+        "pipelined_rounds_per_s": R / wan_wall_q,
+        "pipelined_over_persistent": wan_speedup,
+        "chunk_frames_future": int(wan_raw["chunk_frames_future"]),
+        "host_cpus": HOST_CPUS,
+        "bit_equal": True,
+    }
+    emit(f"streaming/pipelined_wan_n{NS[0]}", wan_wall_q / R * 1e6,
+         f"x{wan_speedup:.2f} vs persistent at 10ms RTT, "
+         f"future_frames={int(wan_raw['chunk_frames_future'])} "
+         f"cpus={HOST_CPUS}")
+
     out["bit_equal"] = True  # every row above asserted it first
     emit("streaming/bit_equal", 1.0,
-         "streamed == buffered == persistent == sim, bitwise")
+         "streamed == buffered == persistent == pipelined == sim, bitwise")
     save_json("streaming", out)
     return out
 

@@ -105,6 +105,10 @@ class Controller:
         self._keys: Dict[int, Any] = {}
         # Registered public/symmetric keys: node -> key blob (opaque).
         self._global_average: Optional[dict] = None
+        # Monotone round index: bumped by advance_round() (cross-round
+        # pipelining, PROTOCOL.md §11). reset_round() restarts the SAME
+        # logical round and leaves it untouched.
+        self.round_index: int = 0
 
     # ------------------------------------------------------------------
     # Uniform op dispatch (shared by the sim kernel and the wire broker)
@@ -301,6 +305,22 @@ class Controller:
             self._skipped[g] = set()
             self._initiator[g] = None
         self._global_average = None
+
+    def advance_round(self) -> Optional[dict]:
+        """Complete the current round and open the next (§11 pipelining).
+
+        Same controller-state effect as :meth:`reset_round`, but bumps
+        ``round_index`` and returns the outgoing round's published
+        global average — the caller (the broker's ``advance_round``
+        handler) uses the index to deliver transfer buffers that were
+        parked for the new round. Non-destructive at the transport
+        layer: the broker keeps round r+1 buffers across the boundary,
+        whereas ``reset_round`` drops every transfer.
+        """
+        published = self._global_average
+        self.reset_round()
+        self.round_index += 1
+        return published
 
 
 class HierarchicalController:

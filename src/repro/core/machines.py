@@ -26,6 +26,23 @@ plus the streaming-combine form of the §5.1.2 hot path,
                                              decrypt/add/encrypt/post —
                                              same bits, same §5 counts,
 
+and the streaming form of the §5.1.1 initiator unmask,
+
+  ("unmask", kwargs, nbytes, timeout)        fused receive+unmask+publish:
+                                             a chunk-capable runtime
+                                             decrypt-subtract-decodes
+                                             chunk k (kwargs carries the
+                                             closure) and publishes the
+                                             average slice while chunk
+                                             k+1 is still on its last
+                                             hop, resuming with
+                                             {"status": "unmasked", ...};
+                                             any other runtime treats it
+                                             as a plain get_aggregate
+                                             wait — same bits, same
+                                             counts (exactly one
+                                             post_average either way),
+
 and the final result is returned via StopIteration. Two runtimes drive
 the identical coroutines:
 
@@ -128,6 +145,13 @@ class LearnerCrypto:
 
     def mask_r(self, n: int, counter: int) -> np.ndarray:
         return keystream_pair_lanes_np(self._own, n, counter)
+
+    def mask_r_slice(self, start: int, n: int, counter: int) -> np.ndarray:
+        """Words [start, start+n) of the initiator mask R — bit-identical
+        to ``mask_r(total, counter)[start:start+n]`` (the same keystream
+        seekability the chunk-granular combine runs on), so the
+        streaming unmask can subtract R chunk by chunk."""
+        return keystream_slice_np(self._own, n, start, counter)
 
     def hop_encrypt(self, plain_ring: np.ndarray, dst: int, counter: int) -> np.ndarray:
         if not self.encrypt_enabled:
@@ -263,6 +287,8 @@ def safe_learner(
                 initiator_now = verdict == "initiator"
                 continue
 
+            dec = None
+            published = False
             if st["status"] == "self":
                 # Lone survivor (§5.3 degenerate case): every repost
                 # target was dead, the aggregate never left this node —
@@ -271,7 +297,26 @@ def safe_learner(
                 posted = st["posted"]
             else:
                 # -- §5.1.1 steps 3-4: receive final aggregate, unmask.
-                res = yield ("wait", "get_aggregate", dict(node=node, group=group),
+                # Yielded as "unmask" so a chunk-capable runtime can
+                # decrypt-subtract-decode chunk k (the pad and R are
+                # both seekable) and publish the average slice while
+                # chunk k+1 is still on its last hop — §8's "publication
+                # overlaps the final relay". Elementwise over Z/2^32Z,
+                # so any chunking produces the same bits as the whole-
+                # vector path below, which every other runtime takes by
+                # resolving the yield as a plain get_aggregate wait.
+                def _unmask_chunk(start: int, cipher_chunk: np.ndarray,
+                                  src: int) -> np.ndarray:
+                    plain = crypto.hop_decrypt_slice(cipher_chunk, src,
+                                                     counter, start)
+                    return codec.decode(NpFixedPoint.sub(
+                        plain, crypto.mask_r_slice(
+                            start, cipher_chunk.size, counter)))
+
+                res = yield ("unmask",
+                             dict(node=node, group=group,
+                                  unmask=_unmask_chunk, payload_words=V,
+                                  weighted=weight is not None),
                              nbytes, "aggregation")
                 if res.get("status") == "timeout":
                     verdict = yield from _election()
@@ -279,20 +324,32 @@ def safe_learner(
                         return
                     initiator_now = verdict == "initiator"
                     continue
-                yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
-                total = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
-                posted = res["posted"]  # §5.3: contributor count from controller
-            yield ("compute", cost.t_add_elem * V * 2)
-            total = NpFixedPoint.sub(total, R)
-            dec = codec.decode(total)
+                if res.get("status") == "unmasked":
+                    # chunk-granular unmask done on the fly; `decoded`
+                    # is the assembled plaintext sum, `published` says
+                    # whether the streamed post_average landed (a
+                    # superseded upload falls back to a whole post).
+                    dec = res["decoded"]
+                    posted = res["posted"]
+                    published = res.get("published", False)
+                else:
+                    yield ("compute", cost.decrypt(nbytes, crypto.symmetric_only))
+                    total = crypto.hop_decrypt(res["aggregate"], res["from_node"], counter)
+                    posted = res["posted"]  # §5.3: contributor count from controller
+            if dec is None:
+                yield ("compute", cost.t_add_elem * V * 2)
+                total = NpFixedPoint.sub(total, R)
+                dec = codec.decode(total)
             if weight is not None:
                 avg = dec[:-1] / max(dec[-1], 1e-12)
                 wavg = dec[-1] / posted
             else:
                 avg = dec / posted
                 wavg = None
-            yield ("call", "post_average",
-                   dict(node=node, average=avg, group=group, weight_avg=wavg), nbytes)
+            if not published:
+                yield ("call", "post_average",
+                       dict(node=node, average=avg, group=group,
+                            weight_avg=wavg), nbytes)
             if subgroups > 1:
                 # §5.5: group initiators must fetch the cross-group average.
                 yield ("wait", "get_average", dict(), nbytes, None)

@@ -264,6 +264,18 @@ class ProtocolSimulation:
                             dict(node=skwargs["node"],
                                  group=skwargs["group"]), nbytes, timeout)
                     kind = "wait"
+                if kind == "unmask":
+                    # the fused receive+unmask+publish yield (§5.1.1
+                    # streaming form): lowered to the plain
+                    # get_aggregate wait for the same reason as
+                    # "stream" above — the machine sees no "unmasked"
+                    # status and takes the whole-vector fallback,
+                    # keeping bits, counts and timing exact
+                    _, ukwargs, nbytes, timeout = item
+                    item = ("wait", "get_aggregate",
+                            dict(node=ukwargs["node"],
+                                 group=ukwargs["group"]), nbytes, timeout)
+                    kind = "wait"
                 if kind == "wait":
                     _, wkind, kwargs, nbytes, timeout = item
                     deadline = None

@@ -61,11 +61,17 @@ DEFAULT_CHUNK_BUDGET_BYTES = 4 * wire.MAX_FRAME
 class _Transfer:
     """One in-flight chunked upload (docs/PROTOCOL.md §6).
 
-    Keyed on the session by the *destination* of the eventual logical op
-    — ``("agg", group, to_node)`` for post_aggregate, ``("avg", group)``
-    for post_average — so the receiving side can stream chunks out of a
-    partially-arrived transfer (the §8-style pipelining: the broker
-    relays chunk k downstream while chunk k+1 is still uploading).
+    Keyed on the session by the round and the *destination* of the
+    eventual logical op — ``("agg", round, group, to_node)`` for
+    post_aggregate, ``("avg", round, group)`` for post_average — so the
+    receiving side can stream chunks out of a partially-arrived transfer
+    (the §8-style pipelining: the broker relays chunk k downstream while
+    chunk k+1 is still uploading), and so round r+1's transfers coexist
+    with round r's while the tail drains (§11 cross-round pipelining).
+    A transfer for a round ahead of the session's current one buffers
+    and relays normally but its logical op is *deferred*: ``posted``
+    stays False (with ``asm.complete`` True) until ``advance_round``
+    delivers it — MessageStats only ever moves for the current round.
     """
 
     __slots__ = ("owner", "xfer", "op", "kwargs", "asm", "chunk_words",
@@ -97,6 +103,8 @@ class _Session:
     __slots__ = ("sid", "ctrl", "bon", "cond", "closed", "monitor_reposts",
                  "initiator_elections", "transfers", "chunk_frames_in",
                  "chunk_frames_out", "transfers_completed",
+                 # cross-round pipelining (PROTOCOL.md §11)
+                 "round", "chunk_frames_future",
                  # observability plane (ISSUE 7) — observes, never alters
                  "round_t0", "round_published", "rounds_completed",
                  "pending_bytes", "busy_rejections")
@@ -117,6 +125,14 @@ class _Session:
         self.chunk_frames_in = 0
         self.chunk_frames_out = 0
         self.transfers_completed = 0
+        # cross-round pipelining (§11): the session's current round —
+        # ops tagged with a later round park/buffer until advance_round
+        # catches up; untagged ops always address the current round
+        self.round = 0
+        #: chunk frames accepted for a round AHEAD of the current one —
+        #: the direct evidence that round r+1's bytes moved while round
+        #: r was still open (asserted by the pipelining tests/bench)
+        self.chunk_frames_future = 0
         # round lifecycle series: round_t0 restarts at create/reset, the
         # latency histogram observes it on global publication
         self.round_t0 = now
@@ -136,9 +152,13 @@ class _Session:
         return tr
 
     def drop_group_transfers(self, group: int) -> None:
-        """Forget every (partial or posted) transfer of one group — the
-        round restarted (§5.4), so stale chunks must not be served."""
-        for key in [k for k in self.transfers if k[1] == group]:
+        """Forget every (partial or posted) transfer of one group in the
+        CURRENT round — the round restarted (§5.4), so its stale chunks
+        must not be served. Buffers already accepted for later rounds
+        survive the restart (cross-round pipelining, §11): the restart
+        replays only the round that aborted."""
+        for key in [k for k in self.transfers
+                    if k[1] == self.round and k[2] == group]:
             self.forget_transfer(key)
 
     def clear_transfers(self) -> None:
@@ -205,12 +225,18 @@ class SafeBroker:
                  chunk_budget_bytes: Optional[int]
                  = DEFAULT_CHUNK_BUDGET_BYTES,
                  busy_retry_after: float = 0.05,
+                 inflight_rounds: int = 2,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None):
         self.aggregation_timeout = aggregation_timeout
         self.progress_timeout = progress_timeout
         self.monitor_interval = monitor_interval
         self.engine_session_ttl = engine_session_ttl
+        # cross-round pipelining window (PROTOCOL.md §11): chunk frames
+        # tagged for rounds [current, current + inflight_rounds) are
+        # accepted; frames beyond the window answer busy (the client's
+        # ordinary backoff retries until advance_round opens it)
+        self.inflight_rounds = max(1, int(inflight_rounds))
         # admission control (ISSUE 7, PROTOCOL.md §13): per-session
         # budget on buffered-but-un-posted chunk bytes; the suggested
         # client back-off rides the busy response
@@ -569,6 +595,19 @@ class SafeBroker:
         if op in WAIT_KINDS:
             return await self._long_poll(sess, op, kwargs)
         if op in CALL_OPS:
+            # cross-round pipelining (§11): a call tagged for a FUTURE
+            # round parks until advance_round opens that round — the
+            # controller only ever sees current-round ops, so the §5
+            # closed forms hold per round boundary. A call tagged for a
+            # PAST round is a straggler of a round that already closed:
+            # executing it would poison the new round's state, so it is
+            # dropped (None; should_initiate answers False).
+            rnd = kwargs.pop("round", None)
+            if rnd is not None:
+                rnd = int(rnd)
+                parked = await self._park_for_round(sess, rnd)
+                if not parked:
+                    return False if op == "should_initiate" else None
             if op == "post_aggregate":
                 # transport-boundary hygiene: a posting addressed outside
                 # the session's chain could never be consumed or reposted
@@ -611,10 +650,15 @@ class SafeBroker:
             stats["initiator_elections"] = sess.initiator_elections
             stats["chunk_frames_in"] = sess.chunk_frames_in
             stats["chunk_frames_out"] = sess.chunk_frames_out
+            stats["chunk_frames_future"] = sess.chunk_frames_future
             stats["transfers_completed"] = sess.transfers_completed
             stats["busy_rejections"] = sess.busy_rejections
+            stats["round"] = sess.round
             return stats
         if op == "reset_round":
+            # destructive restart of the SAME logical round: every
+            # transfer dies, including any future-round buffers — a
+            # pipelined driver uses advance_round instead
             async with sess.cond:
                 sess.ctrl.reset_round()
                 sess.clear_transfers()
@@ -623,7 +667,54 @@ class SafeBroker:
                 sess.round_t0 = self.now()
                 sess.cond.notify_all()
             return None
+        if op == "advance_round":
+            # non-destructive round boundary (§11): complete the current
+            # round, open the next, keep round r+1's buffers — then
+            # deliver any transfer that finished uploading while parked
+            # (its logical op executes NOW, on the new round's clean
+            # controller, which is what keeps per-round stats deltas and
+            # the §5 closed forms exact under pipelining)
+            async with sess.cond:
+                if sess.closed:
+                    raise wire.WireError(f"session {sess.sid} deleted")
+                sess.ctrl.advance_round()
+                sess.round += 1
+                for key in [k for k in sess.transfers if k[1] < sess.round]:
+                    sess.forget_transfer(key)
+                sess.round_published = False
+                sess.round_t0 = self.now()
+                for key in sorted(k for k in sess.transfers
+                                  if k[1] == sess.round):
+                    tr = sess.transfers[key]
+                    if tr.asm.complete and not tr.posted:
+                        self._deliver_transfer(sess, tr)
+                sess.cond.notify_all()
+            return {"round": sess.round}
         raise wire.WireError(f"unhandled op {op!r}")
+
+    async def _park_for_round(self, sess: _Session, rnd: int) -> bool:
+        """Hold a round-tagged call until the session's round catches up
+        (woken by advance_round). True when the call may execute, False
+        for a stale round. The deadline scales with the round gap: each
+        in-flight round ahead of this op may legitimately consume a full
+        aggregation timeout (churn recovery runs the stragglers' polls
+        to expiry), and the op then deserves its own budget once its
+        round opens — but a driver that dies without advancing must
+        still not pin its learners' connections forever."""
+        loop = asyncio.get_running_loop()
+        gap = max(0, rnd - sess.round)
+        deadline = loop.time() + (gap + 1) * sess.ctrl.aggregation_timeout
+
+        def ready():
+            if sess.closed:
+                raise wire.WireError(f"session {sess.sid} deleted")
+            return True if sess.round >= rnd else None
+
+        ok = await _park(sess.cond, ready, deadline)
+        if ok is None:
+            raise wire.WireError(
+                f"round {rnd} never opened (session at {sess.round})")
+        return sess.round == rnd
 
     def _note_post_average(self, sess: _Session) -> None:
         """Round-lifecycle observation (holds ``sess.cond``): the first
@@ -700,12 +791,30 @@ class SafeBroker:
         timeout = kwargs.pop("timeout", None)
         elide = bool(kwargs.pop("elide_payload", False))
         expect_time = kwargs.pop("expect_time", None)
+        # §11: a wait tagged for a future round parks until advance_round
+        # opens it (the controller holds nothing for that round yet) —
+        # and its OWN timeout budget only starts then, because a full
+        # predecessor round may legitimately stand between arrival and
+        # eligibility. One tagged for a PAST round can never be
+        # satisfied — its round's state is gone — so it answers the
+        # ordinary timeout
+        rnd = kwargs.pop("round", None)
+        if rnd is not None and int(rnd) > sess.round:
+            try:
+                if not await self._park_for_round(sess, int(rnd)):
+                    return {"status": "timeout"}
+            except wire.WireError:
+                if sess.closed:
+                    raise
+                return {"status": "timeout"}  # round never opened
         loop = asyncio.get_running_loop()
         deadline = None if timeout is None else loop.time() + float(timeout)
 
         def probe():
             if sess.closed:
                 raise wire.WireError(f"session {sess.sid} deleted")
+            if rnd is not None and sess.round != int(rnd):
+                return None
             probed = sess.ctrl.probe(kind, **kwargs)
             if probed is not None and expect_time is not None \
                     and float(probed.get("time", 0.0)) != float(expect_time):
@@ -717,7 +826,8 @@ class SafeBroker:
                 # the posting is consumed — its chunk buffer (if it
                 # streamed in) has nothing left to serve
                 sess.forget_transfer(
-                    ("agg", kwargs.get("group", 0), kwargs.get("node")))
+                    ("agg", sess.round, kwargs.get("group", 0),
+                     kwargs.get("node")))
                 if elide:
                     res = dict(res, aggregate=None, chunked=True)
             elif kind == "get_average" and elide:
@@ -786,14 +896,14 @@ class SafeBroker:
                 # same transport-boundary hygiene as the unchunked RPC
                 raise wire.WireError(
                     f"to_node {to_node!r} is not in group {group}'s chain")
-            key = ("agg", group, to_node)
             owner = int(kwargs.get("from_node"))
             base = {"from_node": owner, "to_node": to_node, "group": group}
         else:
-            key = ("avg", group)
+            to_node = None
             owner = int(kwargs.get("node"))
             base = {"node": owner, "group": group,
                     "weight_avg": kwargs.get("weight_avg")}
+        round_kw = kwargs.get("round")
         now = self.now()
         async with sess.cond:
             if sess.closed:
@@ -803,6 +913,26 @@ class SafeBroker:
                 raise wire.WireError(f"session {sess.sid} deleted")
             sess.chunk_frames_in += 1
             self._m_chunks_in.inc()
+            # §11 round routing: untagged frames address the current
+            # round; frames within the in-flight window buffer (and
+            # relay) with their logical op deferred to advance_round;
+            # frames past the window are shed with the ordinary busy
+            # backoff; frames for a CLOSED round are superseded — that
+            # round's slot will never be consumed
+            rnd = sess.round if round_kw is None else int(round_kw)
+            if rnd < sess.round:
+                return {"seq": seq, "received": 0, "total": total,
+                        "complete": False, "superseded": True,
+                        "stale_round": True}
+            if rnd >= sess.round + self.inflight_rounds:
+                sess.busy_rejections += 1
+                self._m_busy.inc()
+                return {"status": "busy",
+                        "retry_after": self.busy_retry_after}
+            if rnd > sess.round:
+                sess.chunk_frames_future += 1
+            key = (("agg", rnd, group, to_node) if op == "post_aggregate"
+                   else ("avg", rnd, group))
             tr = sess.transfers.get(key)
             if tr is not None and tr.same_transfer(owner, xfer) \
                     and tr.posted:
@@ -871,36 +1001,48 @@ class SafeBroker:
             if fresh and not tr.posted:
                 tr.nbytes += payload.nbytes
                 sess.pending_bytes += payload.nbytes
-            if done and not tr.posted:
-                tr.posted = True
-                # the buffer leaves the backlog accounting the moment
-                # the logical op executes (it stays in the table only
-                # as the §6 idempotency record)
-                sess.pending_bytes -= tr.nbytes
-                sess.transfers_completed += 1
-                self._m_transfers.inc()
-                if self.tracer.enabled:
-                    self.tracer.record("transfer", tr.created_at,
-                                       self.now(), session=sess.sid,
-                                       op=op, owner=owner, xfer=xfer,
-                                       chunks=tr.asm.total)
-                call_kw = dict(tr.kwargs, now=self.now())
-                field = "payload" if op == "post_aggregate" else "average"
-                call_kw[field] = tr.asm.assemble()
-                sess.ctrl.call(op, **call_kw)
-                if op == "post_average":
-                    self._note_post_average(sess)
-                # the posted buffer stays (for post_average too, even
-                # though averages are served from controller state): it
-                # is the idempotency record that lets a repeated final
-                # chunk be re-acked instead of re-executing the op
-            elif self.tracer.enabled:
+            if done and not tr.posted and rnd == sess.round:
+                # current round: the logical op executes NOW. A future-
+                # round transfer stays buffered (posted=False,
+                # asm.complete=True) until advance_round delivers it —
+                # the uploader still sees complete=True below: its
+                # upload obligation is met either way.
+                self._deliver_transfer(sess, tr)
+            elif self.tracer.enabled and not done:
                 self.tracer.record("chunk", now, self.now(),
                                    session=sess.sid, op=op, owner=owner,
                                    xfer=xfer, seq=seq)
             sess.cond.notify_all()
         return {"seq": seq, "received": len(tr.asm.chunks), "total": total,
-                "complete": tr.posted}
+                "complete": tr.posted or tr.asm.complete}
+
+    def _deliver_transfer(self, sess: _Session, tr: _Transfer) -> None:
+        """Execute a completed transfer's logical op (holds
+        ``sess.cond``) — the only point MessageStats moves for a chunked
+        upload. Called from ``_post_chunk`` on a current-round final
+        chunk, and from ``advance_round`` for transfers that completed
+        while their round was still parked."""
+        tr.posted = True
+        # the buffer leaves the backlog accounting the moment the
+        # logical op executes (it stays in the table only as the §6
+        # idempotency record)
+        sess.pending_bytes -= tr.nbytes
+        sess.transfers_completed += 1
+        self._m_transfers.inc()
+        if self.tracer.enabled:
+            self.tracer.record("transfer", tr.created_at, self.now(),
+                               session=sess.sid, op=tr.op, owner=tr.owner,
+                               xfer=tr.xfer, chunks=tr.asm.total)
+        call_kw = dict(tr.kwargs, now=self.now())
+        field = "payload" if tr.op == "post_aggregate" else "average"
+        call_kw[field] = tr.asm.assemble()
+        sess.ctrl.call(tr.op, **call_kw)
+        if tr.op == "post_average":
+            self._note_post_average(sess)
+        # the posted buffer stays (for post_average too, even though
+        # averages are served from controller state): it is the
+        # idempotency record that lets a repeated final chunk be
+        # re-acked instead of re-executing the op
 
     async def _get_chunk(self, sess: _Session, kwargs: dict):
         """Long-poll for one chunk of an inbound array.
@@ -917,6 +1059,7 @@ class SafeBroker:
             raise wire.WireError(f"get_chunk cannot serve {kind!r}")
         group = int(kwargs.get("group", 0))
         node = kwargs.get("node")
+        round_kw = kwargs.get("round")
         seq = int(kwargs["seq"])
         words = int(kwargs.get("words", wire.DEFAULT_CHUNK_WORDS))
         if words < 1:
@@ -941,8 +1084,16 @@ class SafeBroker:
         # restart assembly — mixing chunks of two transfers would hand
         # the state machine a corrupt ciphertext.
         def probe():
+            # §11 round routing: a reader tagged for a round within the
+            # window streams straight out of that round's live buffer —
+            # this is the cross-round relay (round r+1 chunks flow hop
+            # to hop while round r is still open). Controller-state
+            # fallbacks (stored postings, the published average) only
+            # exist for the CURRENT round, so future-round readers park
+            # on the buffer alone until advance_round catches up.
+            rnd = sess.round if round_kw is None else int(round_kw)
             if kind == "get_aggregate":
-                tr = sess.transfers.get(("agg", group, node))
+                tr = sess.transfers.get(("agg", rnd, group, node))
                 if tr is not None and seq in tr.asm.chunks:
                     if tr.chunk_words != words:
                         raise wire.WireError(
@@ -960,21 +1111,30 @@ class SafeBroker:
                         # for the logical read that follows — on EVERY
                         # post-completion chunk, because out-of-order
                         # refetches mean the client's final received
-                        # chunk need not be seq total-1
+                        # chunk need not be seq total-1. `posted` (the
+                        # §5.3 contributor count) rides along so the
+                        # streaming unmask can start publishing average
+                        # slices before the final consume.
                         peek = sess.ctrl.probe("get_aggregate", node=node,
                                                group=group)
                         if peek is not None:
                             out["time"] = float(peek["time"])
+                            out["posted"] = int(peek["posted"])
                     return out
+                if rnd != sess.round:
+                    return None  # future round: only the buffer serves
                 peek = sess.ctrl.probe("get_aggregate", node=node,
                                        group=group)
                 if peek is not None:
                     return slice_of(peek["aggregate"],
                                     {"from_node": peek["from_node"],
                                      "time": float(peek["time"]),
+                                     "posted": int(peek["posted"]),
                                      "xfer": ("t", float(peek["time"]),
                                               peek["from_node"])})
                 return None
+            if rnd != sess.round:
+                return None  # the average of a parked round: not yet
             peek = sess.ctrl.try_get_average()
             if peek is None:
                 return None
@@ -1028,7 +1188,10 @@ class SafeBroker:
                             sess.ctrl.order_repost(group, poster, failed)
                             # the dead target's chunk buffer dies with
                             # its posting — the repost streams afresh
-                            sess.forget_transfer(("agg", group, failed))
+                            # (current round only: the monitor can only
+                            # see current-round postings)
+                            sess.forget_transfer(
+                                ("agg", sess.round, group, failed))
                             sess.monitor_reposts += 1
                             self._m_reposts.inc()
                             sess.cond.notify_all()

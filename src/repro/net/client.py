@@ -10,6 +10,12 @@ SafeBroker`, mapping each yield onto awaits:
   ("wait", kind, kwargs, nbytes, timeout)
                                 -> long-poll RPC; the broker parks the
                                    request until data or timeout
+  ("stream", ...), ("unmask", ...)
+                                -> fused chunk-granular hops: receive+
+                                   combine+post (non-initiator) and
+                                   receive+unmask+publish (initiator),
+                                   overlapped chunk-by-chunk; both lower
+                                   to the plain wait when unchunked
 
 Because the machines, the ``Controller`` and the round construction
 (:func:`~repro.core.machines.build_round_machines`) are shared with the
@@ -90,8 +96,10 @@ def backoff_delay(attempt: int, *, base: float, cap: float = 0.5,
     return min(cap, base * (1 << min(attempt, 16))) * (0.5 + h / 2**33)
 
 
-def auto_chunk_words(payload_words: int) -> int:
-    """Derive a chunk size from the payload size (ISSUE 7 satellite).
+def auto_chunk_words(payload_words: int,
+                     cost: Optional[CostModel] = None) -> int:
+    """Derive a chunk size from the payload size (ISSUE 7 satellite),
+    optionally floored by the link's bandwidth-delay product (ISSUE 9).
 
     Targets :data:`AUTO_CHUNK_TARGET` chunks per payload, clamped to a
     multiple of ``wire.MIN_STREAM_WORDS`` (so the streaming combine's
@@ -100,23 +108,39 @@ def auto_chunk_words(payload_words: int) -> int:
     limit). Payloads at or below one ``MIN_STREAM_WORDS`` quantum come
     back larger than the payload — i.e. unchunked, which is faster for
     small vectors (BENCH_streaming.json's small-n ablation).
+
+    With a fitted :class:`~repro.core.costs.CostModel`, the target is
+    additionally floored at the link's bandwidth-delay product —
+    ``t_msg`` is the per-message round trip and ``1/t_byte`` the
+    bandwidth, so ``t_msg/t_byte`` bytes (÷8 for the 8-byte fixed-point
+    words) is the smallest chunk that keeps the pipe full: any smaller
+    and each chunk's ack round-trip outweighs its transfer time, which
+    is exactly the regime the 50 ms WAN profile's fixed-8192 ablation
+    sits in (BENCH_streaming.json's WAN row). On the stock EDGE model
+    the BDP floor (~1.7k words) sits below one ``MIN_STREAM_WORDS``
+    quantum, so LAN-scale sizing is unchanged.
     """
     target = -(-int(payload_words) // AUTO_CHUNK_TARGET)  # ceil div
+    if cost is not None:
+        bdp_words = cost.t_msg / cost.t_byte / 8.0
+        target = max(target, int(bdp_words))
     quanta = max(1, round(target / wire.MIN_STREAM_WORDS))
     return min(quanta * wire.MIN_STREAM_WORDS, wire.DEFAULT_CHUNK_WORDS)
 
 
-def _resolve_chunk_words(chunk_words, payload_words: int):
+def _resolve_chunk_words(chunk_words, payload_words: int,
+                         cost: Optional[CostModel] = None):
     """The shared chunk-size defaulting rule: ``"auto"`` derives from
-    the payload; ``None`` stays unchunked until the payload clears
-    ``AUTO_CHUNK_WORDS`` and then derives the same way (which at that
-    scale is exactly ``wire.DEFAULT_CHUNK_WORDS`` — the legacy fixed
-    default, so existing byte-level expectations hold); an int is
-    taken as-is."""
+    the payload and the link's cost model (RTT-aware — see
+    :func:`auto_chunk_words`); ``None`` stays unchunked until the
+    payload clears ``AUTO_CHUNK_WORDS`` and then derives the same way
+    (which at that scale is exactly ``wire.DEFAULT_CHUNK_WORDS`` — the
+    legacy fixed default, so existing byte-level expectations hold); an
+    int is taken as-is."""
     if chunk_words == "auto":
-        return auto_chunk_words(payload_words)
+        return auto_chunk_words(payload_words, cost)
     if chunk_words is None and payload_words > AUTO_CHUNK_WORDS:
-        return auto_chunk_words(payload_words)
+        return auto_chunk_words(payload_words, cost)
     return chunk_words
 
 
@@ -349,7 +373,8 @@ class WireClient:
 
     async def _chunk_stream(self, kind: str, kwargs: dict, session: int,
                             chunk_words: int, deadline: Optional[float],
-                            depth: int, on_chunk=None, on_restart=None):
+                            depth: int, on_chunk=None, on_restart=None,
+                            on_meta=None):
         """Shared inbound chunk pump: pull one logical array chunk-by-
         chunk with up to ``depth`` get_chunk requests in flight ahead of
         the chunk being processed (requests for the lowest missing seqs;
@@ -360,7 +385,10 @@ class WireClient:
         streaming combine's hook. An identity change mid-stream (the
         array was reposted / re-elected away) restarts assembly and
         fires ``on_restart()`` so a partially-combined buffer is
-        abandoned, never mixed across identities.
+        abandoned, never mixed across identities. ``on_meta(res)`` fires
+        (sync) with each raw chunk response of the current identity —
+        the streaming unmask reads the broker's post-completion
+        ``posted`` count off it.
 
         Returns ``(assembler, consume_guard_time)`` on completion or a
         ``{"status": "timeout"}`` dict when the deadline lapses."""
@@ -409,6 +437,8 @@ class WireClient:
                 cursor = 0
                 if restarted and on_restart is not None:
                     on_restart()
+            if on_meta is not None:
+                on_meta(res)
             if res.get("time") is not None:
                 tid = res["time"]
             seq = int(res["seq"])
@@ -466,7 +496,8 @@ class WireClient:
 
     async def stream_combine(self, skwargs: dict, session: int,
                              chunk_words: int, deadline: Optional[float],
-                             depth: int = wire.DEFAULT_PREFETCH_DEPTH) -> Any:
+                             depth: int = wire.DEFAULT_PREFETCH_DEPTH,
+                             round_tag: Optional[int] = None) -> Any:
         """The fused §5.1.2 hop: pull the inbound aggregate chunk-by-
         chunk and, per chunk, run the machine's combine closure
         (seekable-pad decrypt + add + re-encrypt) and ship the result
@@ -490,6 +521,7 @@ class WireClient:
         up = await self.aux()
         loop = asyncio.get_running_loop()
 
+        rkw = {} if round_tag is None else {"round": round_tag}
         st = {"xfer": next(_xfer_ids), "dead": False, "complete": False,
               "sent": 0}
         acks: collections.deque = collections.deque()  # xfer per sent frame
@@ -516,7 +548,7 @@ class WireClient:
             if st["dead"]:
                 return
             await up._send("post_chunk", dict(
-                session=session, op="post_aggregate", xfer=st["xfer"],
+                rkw, session=session, op="post_aggregate", xfer=st["xfer"],
                 seq=seq, total=total, chunk_words=chunk_words,
                 from_node=node, to_node=to_node, group=group,
                 payload=out))
@@ -534,7 +566,7 @@ class WireClient:
                       sent=0)
 
         got = await self._chunk_stream(
-            "get_aggregate", dict(node=node, group=group), session,
+            "get_aggregate", dict(rkw, node=node, group=group), session,
             chunk_words, deadline, depth, on_chunk=on_chunk,
             on_restart=on_restart)
         while acks:
@@ -547,8 +579,8 @@ class WireClient:
         # the counted consume of the inbound posting, expect_time-guarded
         # exactly like the buffered path
         final = await self.request("get_aggregate", dict(
-            node=node, group=group, session=session, elide_payload=True,
-            expect_time=tid,
+            rkw, node=node, group=group, session=session,
+            elide_payload=True, expect_time=tid,
             timeout=None if deadline is None else deadline - loop.time()))
         if final.get("status") == "timeout":
             return final
@@ -557,6 +589,118 @@ class WireClient:
         combined = np.concatenate([combs[s] for s in range(asm.total)])
         return dict(final, status="streamed", combined=combined,
                     uploaded=uploaded)
+
+    async def unmask_stream(self, ukwargs: dict, session: int,
+                            chunk_words: int, deadline: Optional[float],
+                            depth: int = wire.DEFAULT_PREFETCH_DEPTH,
+                            round_tag: Optional[int] = None) -> Any:
+        """The fused §5.1.1 initiator tail: pull the final hop's
+        aggregate chunk-by-chunk and, per chunk, run the machine's
+        unmask closure (hop decrypt + subtract the R slice + decode) —
+        then, the moment the posting's contributor count is known
+        (``posted`` rides the broker's post-completion chunk
+        responses), publish the decoded average chunk-by-chunk via
+        ``post_chunk`` on the aux connection. Chunk k's unmask and
+        publish overlap chunk k+1's last hop, so the round's published
+        average starts shipping while the tail of the aggregate is
+        still on the wire — the §8 pipeline extended through the
+        initiator's own endpoint.
+
+        Resolves the machine's ``("unmask", ...)`` yield with
+        ``{"status": "unmasked", "decoded": <plaintext>, "posted": k,
+        "published": bool, ...consume fields...}``. Each published
+        average chunk is ``decoded_chunk / posted`` — elementwise, so
+        the assembled average is bit-identical to the machine's own
+        whole-vector ``dec / posted``. A superseded or refused
+        publication (or a ``posted`` count that only arrives with the
+        consume — e.g. a round still parked behind the §11 window)
+        degrades to ``published=False`` and the machine posts the whole
+        average itself; an upstream identity change restarts the decode
+        under a fresh upload xfer. Timeouts match the plain long-poll
+        contract (the machine's §5.4 election path)."""
+        node = ukwargs["node"]
+        group = ukwargs["group"]
+        unmask = ukwargs["unmask"]
+        up = await self.aux()
+        loop = asyncio.get_running_loop()
+
+        rkw = {} if round_tag is None else {"round": round_tag}
+        st = {"xfer": next(_xfer_ids), "dead": False, "complete": False,
+              "sent": 0, "posted": None, "total": None}
+        acks: collections.deque = collections.deque()  # xfer per sent frame
+        decs: Dict[int, np.ndarray] = {}
+        shipped: set = set()
+
+        async def drain_ack() -> None:
+            ack = await up._recv("post_chunk")
+            up.chunk_frames += 1
+            xf = acks.popleft()
+            if xf != st["xfer"]:
+                return  # ack of an abandoned stream
+            if ack.get("superseded") or ack.get("status") == "busy":
+                st["dead"] = True
+            elif ack.get("complete"):
+                st["complete"] = True
+
+        async def ship(seq: int) -> None:
+            await up._send("post_chunk", dict(
+                rkw, session=session, op="post_average", xfer=st["xfer"],
+                seq=seq, total=st["total"], chunk_words=chunk_words,
+                node=node, group=group, weight_avg=None,
+                payload=decs[seq] / st["posted"]))
+            acks.append(st["xfer"])
+            st["sent"] += 1
+            shipped.add(seq)
+            while len(acks) > depth:
+                await drain_ack()
+
+        def on_meta(res: dict) -> None:
+            if res.get("posted") is not None:
+                st["posted"] = int(res["posted"])
+
+        async def on_chunk(seq, payload, src, total) -> None:
+            st["total"] = total
+            decs[seq] = unmask(seq * chunk_words, payload, src)
+            if st["dead"] or st["posted"] is None:
+                # the upstream upload hasn't completed (its logical post
+                # hasn't executed), so the contributor count isn't known
+                # yet — decode now, ship the backlog when it is
+                return
+            for s in sorted(decs):
+                if s not in shipped and not st["dead"]:
+                    await ship(s)
+
+        def on_restart() -> None:
+            decs.clear()
+            shipped.clear()
+            st.update(xfer=next(_xfer_ids), dead=False, complete=False,
+                      sent=0, posted=None, total=None)
+
+        got = await self._chunk_stream(
+            "get_aggregate", dict(rkw, node=node, group=group), session,
+            chunk_words, deadline, depth, on_chunk=on_chunk,
+            on_restart=on_restart, on_meta=on_meta)
+        while acks:
+            await drain_ack()
+        if isinstance(got, dict):
+            return got  # timeout (a partial publication goes stale)
+        asm, tid = got
+        # the counted consume of the inbound posting, expect_time-guarded
+        # exactly like the buffered path
+        final = await self.request("get_aggregate", dict(
+            rkw, node=node, group=group, session=session,
+            elide_payload=True, expect_time=tid,
+            timeout=None if deadline is None else deadline - loop.time()))
+        if final.get("status") == "timeout":
+            return final
+        posted = st["posted"]
+        if posted is None:
+            posted = int(final["posted"])
+        published = (st["complete"] and not st["dead"]
+                     and st["sent"] == asm.total)
+        decoded = np.concatenate([decs[s] for s in range(asm.total)])
+        return dict(final, status="unmasked", decoded=decoded,
+                    posted=posted, published=published)
 
     # -- engine plane over the chunk ops (oversized payloads) -------------
     async def submit_session_chunked(self, kwargs: dict,
@@ -630,7 +774,8 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
                         chunk_words: Optional[int] = None,
                         payload_words: Optional[int] = None,
                         prefetch_depth: Optional[int] = None,
-                        stream: Optional[bool] = None) -> Any:
+                        stream: Optional[bool] = None,
+                        round_tag: Optional[int] = None) -> Any:
     """Run one state machine to completion over the wire.
 
     ``timeout`` mapping for ``wait`` yields: ``"aggregation"`` becomes
@@ -649,19 +794,40 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
     ``None`` (default) streams only when the payload clears
     ``wire.MIN_STREAM_WORDS`` — below that the per-chunk overhead loses
     to the buffered path (the small-n regression in
-    BENCH_streaming.json) and the yield lowers to reassemble-then-
-    combine; ``True`` forces streaming, ``False`` disables it (the
+    BENCH_streaming.json) and the whole chunk plane is bypassed (the
+    payload rides one frame anyway); ``True`` forces streaming,
+    ``False`` disables it but keeps the buffered chunk plane (the
     ablation baseline of ``benchmarks/streaming.py``). Either path is
     bit- and count-identical.
+
+    ``round_tag`` stamps every logical op and chunk frame with a §11
+    round number: the broker parks ops tagged for a future round until
+    ``advance_round`` opens it, while tagged chunk frames buffer (and
+    relay) within the in-flight window — the cross-round pipelining
+    used by :meth:`PersistentNetSession.run_rounds_pipelined`.
     """
     chunked = (chunk_words is not None and payload_words is not None
                and payload_words > chunk_words)
+    stream_auto = stream is None
     if stream is None:
         stream = (payload_words is not None
                   and payload_words >= wire.MIN_STREAM_WORDS)
+    if (chunked and stream_auto and not stream
+            and payload_words * 8 + 65536 <= wire.MAX_FRAME):
+        # small-payload fast path (ISSUE 9 satellite): below the
+        # streaming threshold the chunk plane only adds per-chunk
+        # get_chunk/consume handshakes (the x0.81 small-n row in
+        # BENCH_streaming.json), and a payload this size rides one
+        # frame with room to spare — skip chunking wholesale. An
+        # explicit ``stream=False`` keeps the buffered chunk plane (the
+        # ablation baseline and the chunk-plane unit tests).
+        chunked = False
     depth = (wire.DEFAULT_PREFETCH_DEPTH if prefetch_depth is None
              else max(1, int(prefetch_depth)))
     loop = asyncio.get_running_loop()
+
+    def tag(kw: dict) -> dict:
+        return kw if round_tag is None else dict(kw, round=round_tag)
 
     def wall_timeout(timeout) -> Optional[float]:
         if timeout == "aggregation":
@@ -688,22 +854,24 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
             arr = kwargs.get(payload_field) if payload_field else None
             if (chunked and isinstance(arr, np.ndarray)
                     and arr.size > chunk_words):
-                await client.post_chunked(op, kwargs, payload_field,
+                await client.post_chunked(op, tag(kwargs), payload_field,
                                           session, chunk_words)
                 send_value = None
             else:
                 send_value = await client.request(
-                    op, dict(kwargs, session=session))
+                    op, dict(tag(kwargs), session=session))
         elif kind == "wait":
             _, wkind, kwargs, _nbytes, timeout = item
             wall = wall_timeout(timeout)
             if chunked and wkind in ("get_aggregate", "get_average"):
                 deadline = None if wall is None else loop.time() + wall
                 send_value = await client.get_chunked(
-                    wkind, kwargs, session, chunk_words, deadline, depth)
+                    wkind, tag(kwargs), session, chunk_words, deadline,
+                    depth)
             else:
                 send_value = await client.request(
-                    wkind, dict(kwargs, session=session, timeout=wall))
+                    wkind, dict(tag(kwargs), session=session,
+                                timeout=wall))
         elif kind == "stream":
             # the fused receive+combine+post hop: stream when the
             # payload is chunked, otherwise resolve as the plain
@@ -711,11 +879,38 @@ async def drive_learner(gen: LearnerGen, client: WireClient, session: int,
             # whole-vector combine — identical bits and counts)
             _, skwargs, _nbytes, timeout = item
             wall = wall_timeout(timeout)
-            wait_kw = dict(node=skwargs["node"], group=skwargs["group"])
+            wait_kw = tag(dict(node=skwargs["node"],
+                               group=skwargs["group"]))
             if chunked and stream:
                 deadline = None if wall is None else loop.time() + wall
                 send_value = await client.stream_combine(
-                    skwargs, session, chunk_words, deadline, depth)
+                    skwargs, session, chunk_words, deadline, depth,
+                    round_tag=round_tag)
+            elif chunked:
+                deadline = None if wall is None else loop.time() + wall
+                send_value = await client.get_chunked(
+                    "get_aggregate", wait_kw, session, chunk_words,
+                    deadline, depth)
+            else:
+                send_value = await client.request(
+                    "get_aggregate",
+                    dict(wait_kw, session=session, timeout=wall))
+        elif kind == "unmask":
+            # the fused receive+unmask+publish initiator tail: stream
+            # when the payload is chunked and unweighted (the weighted
+            # average needs the decoded vector's trailing weight word
+            # before any element divides), otherwise resolve as the
+            # plain get_aggregate wait — the machine falls back to the
+            # whole-vector unmask, identical bits and counts either way
+            _, ukwargs, _nbytes, timeout = item
+            wall = wall_timeout(timeout)
+            wait_kw = tag(dict(node=ukwargs["node"],
+                               group=ukwargs["group"]))
+            if chunked and stream and not ukwargs.get("weighted"):
+                deadline = None if wall is None else loop.time() + wall
+                send_value = await client.unmask_stream(
+                    ukwargs, session, chunk_words, deadline, depth,
+                    round_tag=round_tag)
             elif chunked:
                 deadline = None if wall is None else loop.time() + wall
                 send_value = await client.get_chunked(
@@ -736,7 +931,8 @@ async def _drive_round_machines(machines: Dict[int, LearnerGen], acquire,
                                 chunk_words: Optional[int],
                                 payload_words: int,
                                 prefetch_depth: Optional[int],
-                                stream: Optional[bool]):
+                                stream: Optional[bool],
+                                round_tag: Optional[int] = None):
     """Drive one round's machines to completion, one task per live
     learner — the round core shared by :func:`run_safe_round_net` and
     :class:`PersistentNetSession`. ``acquire(node)`` supplies the node's
@@ -757,7 +953,8 @@ async def _drive_round_machines(machines: Dict[int, LearnerGen], acquire,
                 aggregation_timeout=aggregation_timeout,
                 timeout_scale=timeout_scale, compute_scale=compute_scale,
                 chunk_words=chunk_words, payload_words=payload_words,
-                prefetch_depth=prefetch_depth, stream=stream)
+                prefetch_depth=prefetch_depth, stream=stream,
+                round_tag=round_tag)
         except LearnerCrashed:
             node_crashed = True
             crashed.append(node)  # mid-round churn: learner just stops
@@ -855,7 +1052,7 @@ async def run_safe_round_net(
     values = np.asarray(values, np.float32)
     n, V = values.shape
     payload_words = V + 1 if weights is not None else V
-    chunk_words = _resolve_chunk_words(chunk_words, payload_words)
+    chunk_words = _resolve_chunk_words(chunk_words, payload_words, cost)
     topo = RingTopology(n, subgroups)
     topo.validate_privacy()
     groups = topo.group_chains(node_base=1)
@@ -1110,6 +1307,18 @@ class PersistentNetSession:
         self._prev_bytes = 0
         self._closed_bytes = 0  # bytes of connections dropped mid-session
         self._learner_addr: Addr = addr  # owning shard's addr after open()
+        # §11 cross-round pipelining state: in-flight round tasks
+        # (ordered — rounds collect oldest-first), the broker's round
+        # counter as last reported by advance_round, one connection set
+        # per pipeline slot (two concurrent rounds must never share a
+        # connection: its request/response pairing is sequential, and a
+        # future-round op PARKS), and whether a plain run_round left a
+        # published round that the next pipelined round must close out
+        self._pipe: collections.deque = collections.deque()
+        self._pipe_clients: Dict[Tuple[int, int], WireClient] = {}
+        self._pipe_window: Optional[int] = None
+        self._broker_round = 0
+        self._plain_pending = False
 
     async def open(self) -> "PersistentNetSession":
         self._admin = await WireClient(*self.addr).connect()
@@ -1144,6 +1353,177 @@ class PersistentNetSession:
             await c.close()
             self._closed_bytes += c.bytes_sent
 
+    def _total_bytes(self) -> int:
+        return (self._admin.bytes_sent + self._closed_bytes
+                + sum(c.total_bytes_sent for c in self._clients.values())
+                + sum(c.total_bytes_sent
+                      for c in self._pipe_clients.values()))
+
+    # -- §11 cross-round pipelining ---------------------------------------
+    @property
+    def pipeline_depth(self) -> int:
+        """Rounds launched but not yet collected."""
+        return len(self._pipe)
+
+    async def _pipe_client(self, node: int, slot: int) -> WireClient:
+        key = (node, slot)
+        c = self._pipe_clients.get(key)
+        if c is None:
+            c = await WireClient(*self._learner_addr, node=node,
+                                 interceptor=self.interceptor).connect()
+            self._pipe_clients[key] = c
+        return c
+
+    async def start_round_pipelined(self, values: np.ndarray, *,
+                                    weights: Optional[np.ndarray] = None,
+                                    failed_nodes: Iterable[int] = (),
+                                    initiator_fails: bool = False,
+                                    window: int = 2) -> None:
+        """Launch one aggregation round WITHOUT waiting for the previous
+        round to finish — the §11 cross-round pipeline. Every op and
+        chunk frame is tagged with the round's broker round number: the
+        broker buffers (and relays) the new round's chunk streams while
+        the previous round's tail drains, parking only the logical ops
+        until :meth:`collect_round_pipelined` advances the boundary.
+        The counter base still comes from the session's
+        :class:`~repro.core.session.RoundCursor` — pad streams never
+        collide across overlapped rounds.
+
+        At most ``window`` rounds may be in flight (the broker sheds
+        frames beyond its own ``inflight_rounds`` window anyway); each
+        in-flight round drives its learners over a dedicated connection
+        set, because a future-round op PARKS and would head-of-line
+        block the previous round on a shared connection."""
+        if self._pipe_window is None:
+            self._pipe_window = max(1, int(window))
+        if len(self._pipe) >= self._pipe_window:
+            raise RuntimeError(
+                "pipeline window full — collect_round_pipelined first")
+        values = np.asarray(values, np.float32)
+        if values.shape[0] != self.n:
+            raise ValueError(
+                f"values has {values.shape[0]} rows for n={self.n}")
+        V = values.shape[1]
+        payload_words = V + 1 if weights is not None else V
+        if self._cursor is None:
+            self._cursor = RoundCursor(
+                self._words_per_round or payload_words, self._counter0)
+        if payload_words > self._cursor.words_per_round:
+            raise ValueError(
+                f"payload of {payload_words} words exceeds this "
+                f"session's {self._cursor.words_per_round} words/round "
+                f"counter stride — size words_per_round for the widest "
+                f"round up front")
+        counter = self._cursor.next_round()
+        chunk_words = _resolve_chunk_words(self.chunk_words, payload_words,
+                                           self.cost)
+        if self._plain_pending:
+            # a plain run_round left its round published on the broker:
+            # close it out non-destructively so this round's tag lands
+            # on a fresh controller round
+            resp = await self._admin.request("advance_round",
+                                             {"session": self.sid})
+            self._broker_round = int(resp["round"])
+            self._plain_pending = False
+
+        rnd = self._broker_round + len(self._pipe)
+        slot = rnd % self._pipe_window
+        failed = set(failed_nodes)
+        machines = build_round_machines(
+            values, self.topo, self.groups, self.initiators,
+            mode=self.mode, weights=weights, cost=self.cost,
+            symmetric_only=self.symmetric_only, scale_bits=self.scale_bits,
+            provisioning_seed=self.provisioning_seed,
+            learner_master=self.learner_master, counter=counter,
+            subgroups=self.subgroups, failed=failed,
+            initiator_fails=initiator_fails,
+            crypto_cache=self._crypto_cache)
+
+        async def acquire(node: int) -> WireClient:
+            return await self._pipe_client(node, slot)
+
+        async def release(node: int, _client: WireClient, crashed: bool):
+            if crashed:
+                c = self._pipe_clients.pop((node, slot), None)
+                if c is not None:
+                    await c.close()
+                    self._closed_bytes += c.bytes_sent
+
+        task = asyncio.ensure_future(_drive_round_machines(
+            machines, acquire, release, self.sid,
+            aggregation_timeout=self._wall_agg,
+            timeout_scale=self.timeout_scale,
+            compute_scale=self.compute_scale, chunk_words=chunk_words,
+            payload_words=payload_words,
+            prefetch_depth=self.prefetch_depth, stream=self.stream,
+            round_tag=rnd))
+        self._pipe.append(task)
+
+    async def collect_round_pipelined(self) -> NetResult:
+        """Wait for the OLDEST in-flight round, read its results, then
+        ``advance_round`` — which delivers any already-buffered next-
+        round transfers and un-parks its ops. Collected strictly in
+        launch order, so the per-round MessageStats delta taken here
+        contains exactly the finished round's ops (later rounds' ops
+        are still parked) and the §5 closed forms hold round-by-round
+        even while the chunk plane overlaps rounds on the wire."""
+        if not self._pipe:
+            raise RuntimeError("no pipelined round in flight")
+        task = self._pipe.popleft()
+        wall, crashed, streamed = await task
+        raw = await self._admin.request("get_stats", {"session": self.sid})
+        stats = {k: (raw[k] - self._prev_stats.get(k, 0)
+                     if isinstance(raw.get(k), int) else raw[k])
+                 for k in raw}
+        self._prev_stats = {k: v for k, v in raw.items()
+                            if isinstance(v, int)}
+        final = await self._admin.request("peek_average",
+                                          {"session": self.sid})
+        resp = await self._admin.request("advance_round",
+                                         {"session": self.sid})
+        self._broker_round = int(resp["round"])
+        self.rounds_done += 1
+        self._plain_pending = False
+        bytes_now = self._total_bytes() - self._prev_bytes
+        self._prev_bytes += bytes_now
+        return NetResult(
+            average=None if final is None else final["average"],
+            weight_avg=None if final is None else final.get("weight_avg"),
+            wall_time=wall,
+            stats=stats,
+            bytes_sent=bytes_now,
+            monitor_reposts=stats["monitor_reposts"],
+            initiator_elections=stats["initiator_elections"],
+            crashed_nodes=crashed,
+            streamed_combines=streamed,
+        )
+
+    async def run_rounds_pipelined(self, rounds_values, *,
+                                   window: int = 2,
+                                   weights: Optional[np.ndarray] = None,
+                                   failed_by_round: Optional[
+                                       Mapping[int, Iterable[int]]] = None
+                                   ) -> list:
+        """R rounds with up to ``window`` overlapped on the wire —
+        round r+1's uploads start while round r's tail drains. Returns
+        one :class:`NetResult` per round, in round order; per-round
+        stats deltas, bit-identity and counter bases are exactly those
+        of the sequential :meth:`run_round` loop (asserted in
+        tests/test_conformance.py's ``pipelined`` column)."""
+        failed_by_round = dict(failed_by_round or {})
+        results: list = []
+        for r, values in enumerate(rounds_values):
+            while len(self._pipe) >= max(1, int(
+                    self._pipe_window or window)):
+                results.append(await self.collect_round_pipelined())
+            await self.start_round_pipelined(
+                values, weights=weights,
+                failed_nodes=set(failed_by_round.get(r, ())),
+                window=window)
+        while self._pipe:
+            results.append(await self.collect_round_pipelined())
+        return results
+
     async def run_round(self, values: np.ndarray, *,
                         weights: Optional[np.ndarray] = None,
                         failed_nodes: Iterable[int] = (),
@@ -1175,7 +1555,12 @@ class PersistentNetSession:
                 f"round up front")
         if counter is None:
             counter = self._cursor.next_round()
-        chunk_words = _resolve_chunk_words(self.chunk_words, payload_words)
+        chunk_words = _resolve_chunk_words(self.chunk_words, payload_words,
+                                           self.cost)
+        if self._pipe:
+            raise RuntimeError(
+                "run_round while pipelined rounds are in flight — "
+                "collect_round_pipelined them first")
 
         failed = set(failed_nodes)
         machines = build_round_machines(
@@ -1216,11 +1601,9 @@ class PersistentNetSession:
         final = await self._admin.request("peek_average",
                                           {"session": self.sid})
         self.rounds_done += 1
-        total_bytes = (self._admin.bytes_sent + self._closed_bytes
-                       + sum(c.total_bytes_sent
-                             for c in self._clients.values()))
-        bytes_now = total_bytes - self._prev_bytes
-        self._prev_bytes = total_bytes
+        self._plain_pending = True
+        bytes_now = self._total_bytes() - self._prev_bytes
+        self._prev_bytes += bytes_now
         return NetResult(
             average=None if final is None else final["average"],
             weight_avg=None if final is None else final.get("weight_avg"),
@@ -1234,6 +1617,17 @@ class PersistentNetSession:
         )
 
     async def close(self) -> None:
+        while self._pipe:  # abandoned in-flight rounds die with us
+            task = self._pipe.popleft()
+            task.cancel()
+            try:
+                await task
+            except (asyncio.CancelledError, Exception):  # noqa: BLE001
+                pass
+        for key in list(self._pipe_clients):
+            c = self._pipe_clients.pop(key)
+            await c.close()
+            self._closed_bytes += c.bytes_sent
         for node in list(self._clients):
             await self._drop_client(node)
         if self._admin is not None:
@@ -1328,6 +1722,8 @@ async def run_federated_rounds_net(
     counter0: int = 0,
     words_per_round: Optional[int] = None,
     failed_by_round: Optional[Mapping[int, Iterable[int]]] = None,
+    pipeline: bool = False,
+    window: int = 2,
     **session_kw,
 ) -> Tuple[Any, list]:
     """R federated rounds on ONE persistent broker session — the full
@@ -1350,6 +1746,17 @@ async def run_federated_rounds_net(
     :class:`PersistentNetSession` (``chunk_words``, ``prefetch_depth``,
     ``stream``, ``aggregation_timeout``, ...).
 
+    ``pipeline=True`` overlaps up to ``window`` rounds on the wire
+    (§11): round r+1's local updates compute — and its deltas upload —
+    while round r's aggregation is still in flight. That makes the FL
+    loop *staleness-1*: with the default ``window=2``, round r+1's
+    deltas are computed from the state through round r−1 (round r has
+    not been collected when they launch). Each round's published
+    average is still the exact SAFE mean of the deltas that round
+    actually shipped — the staleness is an FL-optimizer property
+    (standard one-step asynchronous/pipelined SGD), not an aggregation
+    approximation.
+
     Returns ``(final_state, [NetResult per round])``.
     """
     nodes = sorted(local_fns)
@@ -1361,18 +1768,34 @@ async def run_federated_rounds_net(
         addr, len(nodes), counter0=counter0,
         words_per_round=words_per_round, **session_kw)
     await sess.open()
+
+    def fold(res: NetResult, state: Any) -> Any:
+        results.append(res)
+        return (state if res.average is None
+                else apply_fn(state, res.average))
+
     try:
         for r in range(rounds):
             failed = set(failed_by_round.get(r, ()))
             if not set(nodes) - failed:
                 raise ValueError(
                     f"round {r}: every node is in failed_by_round")
-            values = await _collect_deltas(state, local_fns, failed, nodes)
-            res = await sess.run_round(values, weights=weights,
-                                       failed_nodes=failed)
-            results.append(res)
-            if res.average is not None:
-                state = apply_fn(state, res.average)
+            if pipeline:
+                while sess.pipeline_depth >= max(1, int(window)):
+                    state = fold(await sess.collect_round_pipelined(),
+                                 state)
+                values = await _collect_deltas(state, local_fns, failed,
+                                               nodes)
+                await sess.start_round_pipelined(
+                    values, weights=weights, failed_nodes=failed,
+                    window=window)
+            else:
+                values = await _collect_deltas(state, local_fns, failed,
+                                               nodes)
+                state = fold(await sess.run_round(
+                    values, weights=weights, failed_nodes=failed), state)
+        while sess.pipeline_depth:
+            state = fold(await sess.collect_round_pipelined(), state)
     finally:
         await sess.close()
     return state, results

@@ -142,6 +142,7 @@ class SLOReport:
     slo_backlog_bytes: int
     passed: bool
     error: Optional[str] = None
+    wan_profile: str = "none"
 
     def row(self) -> dict:
         return {k: getattr(self, k) for k in (
@@ -149,7 +150,7 @@ class SLOReport:
             "rounds_per_s", "p50_s", "p99_s", "dropped_sessions",
             "busy_rejections", "shed_tenants", "backlog_peak_bytes",
             "metrics_samples", "broker_rounds_completed", "slo_p99_s",
-            "slo_backlog_bytes", "passed")}
+            "slo_backlog_bytes", "passed", "wan_profile")}
 
 
 async def run_slo_load(
@@ -174,6 +175,9 @@ async def run_slo_load(
     progress_timeout: float = 2.0,
     monitor_interval: float = 0.5,
     aggregation_timeout: float = 120.0,
+    wan_profile: Optional[str] = None,
+    wan_seed: int = 0,
+    timeout_scale: float = 1.0,
 ) -> SLOReport:
     """Heavy-tailed multi-tenant load with asserted SLOs (ISSUE 7).
 
@@ -212,9 +216,21 @@ async def run_slo_load(
     busy'd at least once and still
     finished all its rounds counts into ``shed_tenants`` — the
     shed-and-recovered signal CI gates on.
+
+    ``wan_profile`` (a ``repro.net.faults.WAN_PROFILES`` name) runs
+    every tenant behind that WAN emulation — each tenant gets its own
+    interceptor seeded ``wan_seed + tenant`` so fault draws are
+    reproducible per tenant, not interleaved in scheduler order. This
+    is the SLO *calibration* path (ISSUE 9): a declared p99 under a 50
+    ms-RTT profile is only honest if the harness can actually hold it,
+    so ``benchmarks/slo.py`` carries a ``wan_continental`` row whose
+    ``slo_p99_s`` is derived from RTT × the §5 chain depth. Pair with
+    ``timeout_scale``/``progress_timeout`` generous enough that a slow
+    WAN hop does not read as a dead node.
     """
     from repro.core.protocol import run_safe_round
     from repro.net.broker import DEFAULT_CHUNK_BUDGET_BYTES
+    from repro.net.faults import make_wan_interceptor
 
     if profile not in ("steady", "heavy_tail", "busy_shed"):
         raise ValueError(f"unknown SLO profile {profile!r}")
@@ -288,13 +304,22 @@ async def run_slo_load(
         sg = heavy_subgroups if t in heavy else 1
         lats: List[float] = []
         busy = 0
+        icpt = (make_wan_interceptor(wan_profile, seed=wan_seed + t)
+                if wan_profile else None)
         for r in range(rounds_per_tenant):
             t0 = time.perf_counter()
+            # stream=False pins chunked tenants to the buffered chunk
+            # plane: these profiles exist to put admission control
+            # under chunk-frame pressure, and the ISSUE 9 small-payload
+            # fast path (auto stream=None) would otherwise skip the
+            # chunk plane wholesale for frame-sized payloads
             res = await run_safe_round_net(
                 vals, addr, subgroups=sg,
                 provisioning_seed=0xC0FFEE + t,
                 learner_master=0x5EED + 17 * t, counter=r * (tV + 1),
-                chunk_words=cw)
+                chunk_words=cw,
+                stream=False if cw is not None else None,
+                interceptor=icpt, timeout_scale=timeout_scale)
             lats.append(time.perf_counter() - t0)
             busy += int(res.stats.get("busy_rejections", 0))
             got = res.stats["aggregation_total"]
@@ -375,7 +400,8 @@ async def run_slo_load(
         metrics_samples=peak["samples"],
         broker_rounds_completed=broker_rounds,
         slo_p99_s=slo_p99_s, slo_backlog_bytes=int(slo_backlog_bytes),
-        passed=bool(passed), error=error)
+        passed=bool(passed), error=error,
+        wan_profile=wan_profile or "none")
 
 
 async def run_engine_load(addr: Addr, *, tenants: int = 8,

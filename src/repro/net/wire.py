@@ -127,6 +127,12 @@ OPS: Tuple[str, ...] = (
     "bon_get_share",
     "bon_get_roster",
     "bon_get_average",
+    # cross-round pipelining (docs/PROTOCOL.md §11): non-destructive
+    # round boundary for persistent sessions — completes the current
+    # round and opens the next without dropping round r+1 transfer
+    # buffers already in flight. Admin-class: never counted, never
+    # timed. Appended per the §9 additive-opcode policy — no bump.
+    "advance_round",
 )
 OPCODE = {name: i + 1 for i, name in enumerate(OPS)}
 OPNAME = {i + 1: name for i, name in enumerate(OPS)}

@@ -324,7 +324,10 @@ class TestChunkedTransfer:
         """V=103 over 16-word chunks (7 per transfer, ragged tail)."""
         vals = _vals(6, 103, seed=21)
         sim = run_safe_round(vals)
-        net = _wire_round(vals, chunk_words=16)
+        # stream=False pins the buffered chunk plane: with the default
+        # auto policy a payload this small skips chunking wholesale
+        # (ISSUE 9 small-n fast path, TestAutoStreamThreshold)
+        net = _wire_round(vals, chunk_words=16, stream=False)
         assert np.array_equal(sim.average, net.average)
         assert net.stats["aggregation_total"] == 4 * 6
         assert net.stats["transfers_completed"] == 7  # 6 hops + average
@@ -334,7 +337,7 @@ class TestChunkedTransfer:
         """V an exact multiple of chunk_words: no empty trailing chunk."""
         vals = _vals(4, 64, seed=22)
         sim = run_safe_round(vals)
-        net = _wire_round(vals, chunk_words=16)
+        net = _wire_round(vals, chunk_words=16, stream=False)
         assert np.array_equal(sim.average, net.average)
         assert net.stats["chunk_frames_in"] == 5 * 4  # exactly 64/16 each
 
@@ -354,7 +357,8 @@ class TestChunkedTransfer:
         vals = _vals(8, 48, seed=24)
         w = np.arange(1, 9, dtype=np.float32) * 100
         sim = run_safe_round(vals, failed_nodes=[3], weights=w)
-        net = _wire_round(vals, failed_nodes=[3], weights=w, chunk_words=16)
+        net = _wire_round(vals, failed_nodes=[3], weights=w, chunk_words=16,
+                          stream=False)
         assert np.array_equal(sim.average, net.average)
         assert float(sim.weight_avg) == float(net.weight_avg)
         assert net.stats["aggregation_total"] == 4 * 7 + 2
@@ -366,8 +370,9 @@ class TestChunkedTransfer:
         vals = _vals(8, 48, seed=25)
         sim = run_safe_round(vals)
         drop = DropInterceptor(p=0.1, seed=9)
-        net = _wire_round(vals, chunk_words=16, interceptor=Chain(
-            LatencyInterceptor(mean=0.001, seed=9), drop))
+        net = _wire_round(vals, chunk_words=16, stream=False,
+                          interceptor=Chain(
+                              LatencyInterceptor(mean=0.001, seed=9), drop))
         assert np.array_equal(sim.average, net.average)
         assert net.stats["aggregation_total"] == 4 * 8
         assert drop.dropped > 0
@@ -519,7 +524,8 @@ class TestStreamingCombine:
         vals = _vals(8, 48, seed=32)
         w = np.arange(1, 9, dtype=np.float32) * 100
         sim = run_safe_round(vals, failed_nodes=[3], weights=w)
-        net = _wire_round(vals, failed_nodes=[3], weights=w, chunk_words=16)
+        net = _wire_round(vals, failed_nodes=[3], weights=w, chunk_words=16,
+                          stream=True)
         assert np.array_equal(sim.average, net.average)
         assert float(sim.weight_avg) == float(net.weight_avg)
         assert net.stats["aggregation_total"] == 4 * 7 + 2
@@ -531,8 +537,10 @@ class TestStreamingCombine:
         vals = _vals(8, 48, seed=33)
         sim = run_safe_round(vals)
         drop = DropInterceptor(p=0.08, seed=11)
-        net = _wire_round(vals, chunk_words=16, interceptor=Chain(
-            LatencyInterceptor(mean=0.001, seed=11), drop))
+        net = _wire_round(vals, chunk_words=16, stream=True,
+                          interceptor=Chain(
+                              LatencyInterceptor(mean=0.001, seed=11),
+                              drop))
         assert np.array_equal(sim.average, net.average)
         assert net.stats["aggregation_total"] == 4 * 8
         assert drop.dropped > 0
@@ -795,13 +803,219 @@ class TestPersistentSessions:
         assert d_multi == d_single + 2
 
 
-class TestAutoStreamThreshold:
-    """ISSUE 6 small-n regression fix: ``stream=None`` (the default)
-    lowers the streamed combine to the buffered path below
-    ``wire.MIN_STREAM_WORDS``, where chunk round-trips dominate and
-    there is nothing to overlap. Either path is bit-identical."""
+class TestCrossRoundPipelining:
+    """§11 cross-round pipelining (ISSUE 9 tentpole): transfers and
+    chunk relay namespaced by (session, round). The broker accepts —
+    and relays — round r+1's chunk streams while round r's tail drains,
+    parks round-tagged logical ops until ``advance_round`` opens the
+    round, and delivers deferred transfers at the boundary, so the
+    per-round MessageStats deltas keep the §5 closed forms and every
+    round stays bit-identical to its sim twin."""
 
-    def test_small_payload_auto_buffers(self):
+    def test_future_round_chunks_accepted_before_current_publishes(self):
+        """THE §11 acceptance property, raw frames: a round-1 chunk is
+        accepted and downloadable while round 0 is still incomplete
+        (nothing published, nothing posted), with the logical op
+        deferred to advance_round; stale-round stragglers are shed, and
+        frames past the in-flight window get the busy backoff."""
+        from repro.net import WireClient
+
+        arr = np.arange(48, dtype=np.uint32)
+        cw = 16  # 3 chunks
+
+        def frame(seq, rnd):
+            return {"session": 0, "op": "post_aggregate", "xfer": 5,
+                    "seq": seq, "total": 3, "chunk_words": cw,
+                    "from_node": 1, "to_node": 2, "group": 0,
+                    "round": rnd, "payload": arr[seq * cw:(seq + 1) * cw]}
+
+        async def go():
+            broker = SafeBroker()
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()
+                await c.request("create_session", {"groups": {0: [1, 2]}})
+                # round 0 is open and has seen NOTHING — post a chunk
+                # addressed to round 1
+                r = await c.request("post_chunk", frame(0, rnd=1))
+                assert r["received"] == 1 and not r.get("superseded")
+                assert r.get("status") != "busy"
+                # the round-1 chunk is downloadable NOW: store-and-
+                # forward relay across the round boundary
+                got = await c.request("get_chunk", {
+                    "session": 0, "kind": "get_aggregate", "node": 2,
+                    "group": 0, "round": 1, "seq": 0, "words": cw,
+                    "timeout": 5.0})
+                assert np.array_equal(got["payload"], arr[:cw])
+                # ...while round 0 remains untouched: no logical op, no
+                # average, round counter still 0
+                st = await c.request("get_stats", {"session": 0})
+                assert st["round"] == 0
+                assert st["post_aggregate"] == 0
+                assert st["chunk_frames_future"] == 1
+                assert (await c.request("peek_average",
+                                        {"session": 0})) is None
+                # completing the round-1 transfer STILL defers the op
+                await c.request("post_chunk", frame(1, rnd=1))
+                r = await c.request("post_chunk", frame(2, rnd=1))
+                assert r["complete"]
+                st = await c.request("get_stats", {"session": 0})
+                assert st["post_aggregate"] == 0
+                # advance_round opens round 1 and delivers the transfer
+                adv = await c.request("advance_round", {"session": 0})
+                assert adv["round"] == 1
+                st = await c.request("get_stats", {"session": 0})
+                assert st["round"] == 1
+                assert st["post_aggregate"] == 1
+                got = await c.request("get_aggregate", {
+                    "session": 0, "node": 2, "group": 0, "round": 1,
+                    "timeout": 5.0})
+                assert np.array_equal(got["aggregate"], arr)
+                # a straggler frame for the CLOSED round 0 is shed
+                r = await c.request("post_chunk", frame(0, rnd=0))
+                assert r.get("superseded") and r.get("stale_round")
+                # a frame past the window (rounds {1, 2} in flight) is
+                # refused with the §13 busy backoff, never buffered —
+                # raw send/recv because WireClient.request would honour
+                # the backoff and retry forever
+                await c._send("post_chunk", frame(0, rnd=3))
+                r = await c._recv("post_chunk")
+                assert r.get("status") == "busy"
+                st = await c.request("get_stats", {"session": 0})
+                assert st["busy_rejections"] == 1
+                await c.close()
+            finally:
+                await broker.stop()
+
+        asyncio.run(go())
+
+    def test_pipelined_rounds_bit_identical_closed_forms(self):
+        """R rounds with window 2 on one session, streaming combine on:
+        every round bit-identical to its independent sim twin, per-round
+        4n closed form exact, and — the point — chunk frames of round
+        r+1 observed on the broker while round r was still current."""
+        from repro.net import PersistentNetSession
+
+        n, V, R = 4, 103, 4
+        rng = np.random.RandomState(90)
+        rounds = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
+                  for _ in range(R)]
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=30.0)
+            addr = await broker.start()
+            try:
+                sess = PersistentNetSession(addr, n, chunk_words=16,
+                                            stream=True)
+                await sess.open()
+                try:
+                    out = await sess.run_rounds_pipelined(rounds)
+                    raw = await sess._admin.request(
+                        "get_stats", {"session": sess.sid})
+                finally:
+                    await sess.close()
+                return out, raw
+            finally:
+                await broker.stop()
+
+        out, raw = asyncio.run(go())
+        assert len(out) == R
+        for r, res in enumerate(out):
+            sim = run_safe_round(rounds[r], counter=r * V)
+            assert np.array_equal(sim.average, res.average), f"round {r}"
+            assert res.stats["aggregation_total"] == 4 * n, (r, res.stats)
+            assert res.initiator_elections == 0
+            assert res.monitor_reposts == 0
+        # cross-round overlap actually happened on the wire: the broker
+        # accepted round r+1 chunk frames while round r was current
+        assert raw["chunk_frames_future"] > 0
+        assert raw["round"] == R
+
+    def test_pipelined_unchunked_parks_and_stays_exact(self):
+        """No chunk plane at all (V below every threshold): round r+1's
+        ops simply park at the broker until the boundary — zero overlap,
+        identical correctness. The degenerate end of §11."""
+        from repro.net import PersistentNetSession
+
+        n, V, R = 4, 16, 3
+        rng = np.random.RandomState(91)
+        rounds = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
+                  for _ in range(R)]
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=30.0)
+            addr = await broker.start()
+            try:
+                async with PersistentNetSession(addr, n) as sess:
+                    return await sess.run_rounds_pipelined(rounds)
+            finally:
+                await broker.stop()
+
+        out = asyncio.run(go())
+        for r, res in enumerate(out):
+            sim = run_safe_round(rounds[r], counter=r * V)
+            assert np.array_equal(sim.average, res.average), f"round {r}"
+            assert res.stats["aggregation_total"] == 4 * n, (r, res.stats)
+
+    def test_federated_pipeline_staleness_one(self):
+        """run_federated_rounds_net(pipeline=True): with window 2,
+        round r's deltas are computed from the state through round r−2
+        (staleness-1 pipelined FL). The whole evolution is recomputed in
+        the clear and must match — including the exact fold of the
+        published (bit-exact) averages into the final state."""
+        from repro.net import run_federated_rounds_net
+
+        n, P, R = 4, 103, 4
+        rng = np.random.RandomState(43)
+        grads = {node: rng.uniform(-1, 1, P).astype(np.float32)
+                 for node in range(1, n + 1)}
+        local_fns = {node: (lambda s, g=grads[node]: g - 0.1 * s)
+                     for node in range(1, n + 1)}
+
+        def apply_fn(state, avg):
+            return state + avg
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=30.0)
+            addr = await broker.start()
+            try:
+                return await run_federated_rounds_net(
+                    np.zeros(P, np.float32), local_fns, apply_fn, addr,
+                    rounds=R, chunk_words=16, pipeline=True)
+            finally:
+                await broker.stop()
+
+        state, results = asyncio.run(go())
+        assert len(results) == R
+        # the launch/collect schedule of window 2: rounds 0 and 1 launch
+        # from the initial state; round r>=2 launches after round r-2
+        # folded — so round r's deltas use the state through round r-2
+        folded = np.zeros(P, np.float32)
+        exp_states = [np.zeros(P, np.float32)]
+        for r in range(R):
+            used = exp_states[max(0, r - 1)]
+            deltas = np.stack([grads[nd] - 0.1 * used
+                               for nd in range(1, n + 1)])
+            avg = np.asarray(results[r].average)
+            np.testing.assert_allclose(avg, deltas.mean(0), atol=2e-3)
+            folded = folded + avg  # the PUBLISHED average, bit-exact
+            exp_states.append(folded.copy())
+        np.testing.assert_array_equal(state, folded)
+        for r, res in enumerate(results):
+            assert res.stats["aggregation_total"] == 4 * n, (r, res.stats)
+
+
+class TestAutoStreamThreshold:
+    """ISSUE 6/9 small-n regression fix: ``stream=None`` (the default)
+    skips the chunk plane wholesale below ``wire.MIN_STREAM_WORDS``,
+    where per-chunk round-trips and the get_chunk/consume handshake
+    dominate and there is nothing to overlap — a payload that small
+    rides one frame anyway. Either path is bit-identical."""
+
+    def test_small_payload_auto_skips_chunk_plane(self):
         from repro.net import wire
 
         V = 103
@@ -809,6 +1023,10 @@ class TestAutoStreamThreshold:
         vals = _vals(4, V, seed=60)
         net = _wire_round(vals, chunk_words=16)  # stream unspecified
         assert net.streamed_combines == 0
+        # not just buffered: zero chunk frames — the payload took the
+        # single-frame plain ops (the ISSUE 9 small-n fast path)
+        assert net.stats["chunk_frames_in"] == 0
+        assert net.stats["chunk_frames_out"] == 0
         assert np.array_equal(run_safe_round(vals).average, net.average)
 
     def test_threshold_payload_auto_streams(self):
@@ -1364,7 +1582,7 @@ class TestObservability:
         vals = _vals(n, V, seed=72)
         sim = run_safe_round(vals, subgroups=2)
         net = _wire_round(
-            vals, subgroups=2, chunk_words=chunk,
+            vals, subgroups=2, chunk_words=chunk, stream=False,
             broker_kw=dict(chunk_budget_bytes=chunk * 4,
                            progress_timeout=2.0, monitor_interval=0.5))
         assert np.array_equal(sim.average, net.average)
@@ -1375,7 +1593,7 @@ class TestObservability:
         """The default budget never sheds a well-behaved tenant — the
         steady-profile SLO baseline in miniature."""
         vals = _vals(6, 2048, seed=73)
-        net = _wire_round(vals, subgroups=2, chunk_words=128)
+        net = _wire_round(vals, subgroups=2, chunk_words=128, stream=False)
         assert net.stats["aggregation_total"] == 4 * 6 + 2
         assert net.stats["busy_rejections"] == 0
 
