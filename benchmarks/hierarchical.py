@@ -1,21 +1,60 @@
-"""§5.10 hierarchical federation: child controllers post anonymized group
-averages to a parent.
+"""§5.10 hierarchical federation: child orgs post anonymized group
+averages to a parent — sim cost model AND the real wire plane.
 
-Compares one flat 24-learner chain against 2 child controllers × 12
-learners with a parent averaging the two (already anonymized) results —
-the paper's answer once subgrouping saturates a single coordinator.
+Two layers:
+
+  * cost-model comparison — one flat 24-learner chain vs. 2 child
+    federations × 12 with a parent averaging the two (already
+    anonymized) results: the paper's answer once subgrouping saturates
+    a single coordinator.
+  * wire rows — :func:`repro.net.loadgen.run_hierarchical_scale` runs
+    the chain-of-chains over real TCP (parent broker + child broker,
+    per-org sessions with upstream uplinks, docs/PROTOCOL.md §15) and
+    asserts BOTH levels' closed forms in-harness: per surviving org
+    ``4(n_g − f_g) + 2 f_g + 1``, parent ``hierarchy_total == 2(c − f)``,
+    plus bit-identity of the parent average against
+    ``run_hierarchical_round_sim`` (and, clean, the flat
+    ``run_safe_round(subgroups=orgs)``).
+
+Default rows run the paper-shaped n=36 as 3 orgs × 12 — clean, one
+dead learner inside an org, and a whole org crashed (elided by the
+parent like a dead learner) — plus a clean n=128 as 4 orgs × 32.
+``SAFE_SMOKE=1`` swaps in CI-sized n=8 rows (2 orgs × 4, clean + one
+org elided) so the smoke gate still exercises the elision path.
+
+Measured numbers live in EXPERIMENTS.md §Hierarchical. A standalone
+run (``python -m benchmarks.hierarchical``) writes
+``BENCH_hierarchical.json`` (schema ``safe-bench/v1``).
 """
 from __future__ import annotations
 
+import asyncio
+import os
+
 import numpy as np
 
-from benchmarks.common import emit, save_json
-from repro.core.controller import Controller, HierarchicalController
+from benchmarks.common import emit, save_json, standalone_bench
 from repro.core.costs import EDGE
 from repro.core.protocol import run_safe_round
 
+SMOKE = bool(os.environ.get("SAFE_SMOKE"))
+
+
+def _emit_wire(key: str, row: dict) -> None:
+    org_msgs = ",".join(f"{g}:{m}" for g, m in
+                        sorted(row["org_messages"].items()))
+    elided = (f" elided={row['elided_orgs']}" if row["elided_orgs"]
+              else "")
+    emit(f"hierarchical/{key}", row["wall_s"] * 1e6,
+         f"orgs={row['orgs']} org_msgs=[{org_msgs}] "
+         f"hier={row['hierarchy_messages']}"
+         f"/{row['expected_hierarchy_messages']}{elided} "
+         f"bit_identical={row['bit_identical']}")
+
 
 def run() -> dict:
+    from repro.net.loadgen import run_hierarchical_scale
+
     n, V = 24, 64
     vals = np.random.RandomState(0).uniform(-1, 1, (n, V)).astype(np.float32)
 
@@ -43,6 +82,28 @@ def run() -> dict:
          f"msgs={flat.stats.aggregation_total}")
     emit("hierarchical/2x12", hier_time * 1e6,
          f"msgs={hier_msgs} speedup={out['speedup']:.2f}x err={err_hier:.1e}")
+
+    # ---- wire plane (real TCP, closed forms asserted in-harness) ------
+    if SMOKE:
+        out["wire_2x4"] = asyncio.run(
+            run_hierarchical_scale(n=8, orgs=2, V=64))
+        out["wire_2x4_org_crash"] = asyncio.run(
+            run_hierarchical_scale(n=8, orgs=2, V=64, failed_orgs=(1,)))
+        wire_keys = ("wire_2x4", "wire_2x4_org_crash")
+    else:
+        out["wire_3x12"] = asyncio.run(
+            run_hierarchical_scale(n=36, orgs=3, V=256))
+        out["wire_3x12_f1"] = asyncio.run(
+            run_hierarchical_scale(n=36, orgs=3, V=256, failed_nodes=(5,)))
+        out["wire_3x12_org_crash"] = asyncio.run(
+            run_hierarchical_scale(n=36, orgs=3, V=256, failed_orgs=(2,)))
+        out["wire_4x32"] = asyncio.run(
+            run_hierarchical_scale(n=128, orgs=4, V=256))
+        wire_keys = ("wire_3x12", "wire_3x12_f1", "wire_3x12_org_crash",
+                     "wire_4x32")
+    for key in wire_keys:
+        _emit_wire(key, out[key])
+
     save_json("hierarchical", out)
     return out
 
@@ -52,4 +113,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    standalone_bench("hierarchical", run)

@@ -36,6 +36,15 @@ CALL_OPS = frozenset({
 TIMED_OPS = frozenset({"post_aggregate", "post_average", "should_initiate"})
 WAIT_KINDS = frozenset({"get_aggregate", "check_aggregate", "get_average"})
 
+#: §5.10 hierarchical (parent-broker) ops: a child org posts its
+#: already-anonymized group average upward and fetches the cross-org
+#: global back down. Counted in :class:`HierStats` (the parent level's
+#: own closed form — 2·(c−f) for c child orgs, f crashed), never in
+#: :class:`MessageStats`, so the per-chain §5 forms are unperturbed.
+#: ``post_org_average`` takes the parent broker's clock (elision timing).
+HIER_OPS = frozenset({"post_org_average", "get_org_average"})
+HIER_TIMED_OPS = frozenset({"post_org_average"})
+
 
 @dataclasses.dataclass
 class MessageStats:
@@ -66,6 +75,23 @@ class MessageStats:
     @property
     def key_exchange_total(self) -> int:
         return self.register_key + self.get_key
+
+
+@dataclasses.dataclass
+class HierStats:
+    """Parent-level request counters (§5.10), by operation.
+
+    Deliberately separate from :class:`MessageStats`: the parent hop is
+    its own level with its own closed form — c surviving child orgs
+    each post one group average up and fetch one global back down, so
+    ``hierarchy_total == 2 * (c - f)`` with f whole-org crashes."""
+
+    post_org_average: int = 0
+    get_org_average: int = 0
+
+    @property
+    def hierarchy_total(self) -> int:
+        return self.post_org_average + self.get_org_average
 
 
 @dataclasses.dataclass
@@ -100,6 +126,16 @@ class Controller:
         # "initiator is informed how many nodes posted")
         self._posted: Dict[int, int] = {g: 0 for g in groups}
         self._skipped: Dict[int, set] = {g: set() for g in groups}
+        # group -> nodes that consumed a posting this round. A learner
+        # consumes exactly once per chain pass, so a consumed node can
+        # never be a viable repost target (§5.3 × §5.4 interaction): it
+        # will not issue another get_aggregate until the round resets.
+        self._consumed: Dict[int, set] = {g: set() for g in groups}
+        # group -> to_node keys of postings the monitor declared stalled
+        # (no viable repost target): left in place for the §5.4 election
+        # to sweep up, and skipped by stuck_posting so the monitor does
+        # not spin on them.
+        self._stalled: Dict[int, set] = {g: set() for g in groups}
         self._initiator: Dict[int, Optional[int]] = {g: None for g in groups}
         self._round_start: Dict[int, float] = {g: 0.0 for g in groups}
         self._keys: Dict[int, Any] = {}
@@ -153,6 +189,7 @@ class Controller:
             self._initiator[group] = from_node
             self._round_start[group] = now
         self._aggregates[group][to_node] = _Posting(payload, from_node, now)
+        self._stalled[group].discard(to_node)  # fresh posting supersedes a stall
         self._posted[group] += 1
         # Poster will long-poll check_aggregate; target will long-poll
         # get_aggregate — mark the poster's check as pending.
@@ -180,6 +217,7 @@ class Controller:
         result = self.try_get_aggregate(node, group)
         assert result is not None, "kernel resolved a wait without data"
         posting = self._aggregates[group].pop(node)
+        self._consumed[group].add(node)
         # Poster's check_aggregate resolves to consumed.
         self._repost[group][posting.from_node] = {"status": "consumed"}
         return result
@@ -206,29 +244,67 @@ class Controller:
         """Return (poster, failed_target) if a posting has been waiting
         longer than ``timeout``, else None."""
         for to_node, posting in self._aggregates[group].items():
+            if to_node in self._stalled[group]:
+                continue  # already declared unrecoverable until the round resets
             if now - posting.time > timeout:
                 return posting.from_node, to_node
         return None
 
-    def order_repost(self, group: int, poster: int, failed: int) -> int:
+    def order_repost(self, group: int, poster: int,
+                     failed: int) -> Optional[int]:
         """Instruct ``poster`` (via its pending check_aggregate) to
-        re-encrypt for the node after ``failed`` on the chain."""
+        re-encrypt for the next *viable* node after ``failed`` on the
+        chain.
+
+        Viable means not already skipped and not already consumed this
+        round: a learner that performed its get_aggregate has moved past
+        its receive slot and will never issue another one this round, so
+        retargeting it strands the posting forever (the §5.3 × §5.4
+        silently-wrong-average bug — the monitor used to walk a stuck
+        posting around live-but-finished nodes until the wrap produced a
+        spurious "self" verdict that dropped the survivor's contribution).
+
+        Returns the new target, ``poster`` for the degenerate
+        all-others-dead "self" verdict, or ``None`` when no viable target
+        exists (chain finished but its consumer died): the posting is
+        left in place, marked stalled, and the §5.4 aggregation-timeout
+        election recovers the round.
+        """
         chain = self.groups[group]
         idx = chain.index(failed)
-        new_target = chain[(idx + 1) % len(chain)]
+        new_target = None
+        for step in range(1, len(chain)):
+            cand = chain[(idx + step) % len(chain)]
+            if cand == poster:
+                break
+            if cand in self._skipped[group] or cand in self._consumed[group]:
+                continue
+            new_target = cand
+            break
+        if new_target is None:
+            others = [x for x in chain if x != poster]
+            if all(x == failed or x in self._skipped[group] for x in others):
+                # Every other group member is dead (§5.3 degenerate
+                # case). The poster's own aggregate IS the final one —
+                # signal that instead of bouncing the posting through
+                # dead nodes forever.
+                self._skipped[group].add(failed)
+                self._aggregates[group].pop(failed, None)
+                # net _posted unchanged: the poster remains a contributor
+                self._repost[group][poster] = {"status": "self",
+                                               "posted": self._posted[group]}
+                return poster
+            # Remaining members are alive but already consumed: the chain
+            # is complete except for its dead consumer. Stall — leave the
+            # posting (and _posted/_skipped) untouched so the poster's
+            # check_aggregate times out and the §5.4 election restarts
+            # the round with nothing stranded.
+            self._stalled[group].add(failed)
+            return None
         self._skipped[group].add(failed)
         # Remove the unconsumed posting and flag the poster.
         self._aggregates[group].pop(failed, None)
         self._posted[group] -= 1
-        if new_target == poster:
-            # The repost target wrapped all the way around: every other
-            # group member is dead (§5.3 degenerate case). The poster's
-            # own aggregate IS the final one — signal that instead of
-            # bouncing the posting through dead nodes forever.
-            self._posted[group] += 1  # the poster remains a contributor
-            self._repost[group][poster] = {"status": "self",
-                                           "posted": self._posted[group]}
-            return poster
         self._repost[group][poster] = {"status": "repost", "to_node": new_target}
         return new_target
 
@@ -291,6 +367,8 @@ class Controller:
         }
         self._posted[group] = 0
         self._skipped[group] = set()
+        self._consumed[group] = set()
+        self._stalled[group] = set()
         self._initiator[group] = node
         self._round_start[group] = now
         return True
@@ -303,6 +381,8 @@ class Controller:
             self._average[g] = None
             self._posted[g] = 0
             self._skipped[g] = set()
+            self._consumed[g] = set()
+            self._stalled[g] = set()
             self._initiator[g] = None
         self._global_average = None
 
@@ -323,6 +403,21 @@ class Controller:
         return published
 
 
+def combine_org_averages(avgs: list, wavgs: Optional[list] = None) -> dict:
+    """The §5.10 parent verdict: average the already-anonymized group
+    averages (the only arithmetic a parent ever does — same fold as the
+    §5.5 cross-group publish, so sim and wire hierarchies are
+    bit-identical by construction). Shared by
+    :class:`HierarchicalController` (sim) and :class:`ParentController`
+    (wire parent broker)."""
+    out = {"average": np.mean(np.stack(avgs), axis=0)}
+    gw = None
+    if wavgs and all(w is not None for w in wavgs):
+        gw = float(np.mean(wavgs))
+    out["weight_avg"] = gw
+    return out
+
+
 class HierarchicalController:
     """§5.10: child controllers post anonymized group averages upward.
 
@@ -333,12 +428,119 @@ class HierarchicalController:
     def __init__(self, children: list[Controller]):
         self.children = children
         self.up_messages = 0
+        self.elided: tuple = ()
 
-    def collect(self) -> dict:
-        avgs = []
-        for child in self.children:
+    def collect(self, elide_incomplete: bool = False) -> dict:
+        """Average the children's published averages.
+
+        ``elide_incomplete=True`` is the §5.10 whole-org-crash verdict:
+        a child whose aggregation never published is dropped from the
+        parent average exactly like a dead learner is dropped from a
+        chain — the surviving orgs' fold is unchanged. The elided child
+        indices land in ``self.elided`` (and the result dict)."""
+        avgs, wavgs, elided = [], [], []
+        for idx, child in enumerate(self.children):
             res = child.try_get_average()
-            assert res is not None, "child aggregation incomplete"
+            if res is None:
+                if elide_incomplete:
+                    elided.append(idx)
+                    continue
+                raise AssertionError("child aggregation incomplete")
             self.up_messages += 1  # child -> parent post
             avgs.append(res["average"])
-        return {"average": np.mean(np.stack(avgs), axis=0)}
+            wavgs.append(res.get("weight_avg"))
+        assert avgs, "every child org crashed — nothing to publish"
+        self.elided = tuple(elided)
+        out = combine_org_averages(avgs, wavgs)
+        out["elided"] = self.elided
+        return out
+
+
+class ParentController:
+    """§5.10 parent-broker state: the wire-plane twin of
+    :class:`HierarchicalController`.
+
+    Tracks which child orgs posted their group average this round and
+    publishes the cross-org global once all expected orgs posted — or,
+    after the parent's aggregation timeout, with the missing orgs
+    *elided* exactly like dead learners (the whole-org-crash failover).
+    Never sees an individual contribution: the upward posts are already
+    averages over >= 3 learners (RingTopology.validate_privacy), which
+    is the paper's anonymization argument for the org boundary.
+
+    Pure synchronous state like :class:`Controller` — the wire broker
+    wraps it in its own locking/long-poll machinery. The fold is
+    :func:`combine_org_averages`, shared with the sim, so parent
+    averages are bit-identical across planes by construction.
+    """
+
+    def __init__(self, orgs: list[int], aggregation_timeout: float = 30.0):
+        assert orgs, "a parent session needs at least one child org"
+        self.orgs = list(orgs)
+        self.aggregation_timeout = aggregation_timeout
+        self.stats = HierStats()
+        self._averages: Dict[int, dict] = {}  # org -> posted payload
+        self._published: Optional[dict] = None
+        self._round_start = 0.0
+        self._started = False
+        self.crashed_orgs: tuple = ()
+
+    def post_org_average(self, org: int, average: np.ndarray,
+                         weight_avg: Optional[float] = None,
+                         now: float = 0.0) -> None:
+        if org not in self.orgs:
+            raise ValueError(f"unknown org {org!r}")
+        self.stats.post_org_average += 1
+        if not self._started:
+            self._started = True
+            self._round_start = now
+        self._averages[org] = {
+            "average": average, "weight_avg": weight_avg, "time": now,
+        }
+        if all(o in self._averages for o in self.orgs):
+            self._publish(())
+
+    def _publish(self, crashed: tuple) -> None:
+        # org-id order, present orgs only — the same fold order the sim
+        # twin uses over its surviving children
+        present = [o for o in self.orgs if o in self._averages]
+        out = combine_org_averages(
+            [self._averages[o]["average"] for o in present],
+            [self._averages[o]["weight_avg"] for o in present])
+        out["time"] = max(self._averages[o]["time"] for o in present)
+        out["orgs"] = present
+        out["crashed_orgs"] = list(crashed)
+        self.crashed_orgs = crashed
+        self._published = out
+
+    def maybe_elide(self, now: float) -> bool:
+        """Progress-monitor hook (the parent-level §5.3/§5.4 analogue):
+        once the aggregation timeout passes with at least one org
+        posted, publish without the stragglers. Returns True when a
+        publish happened (the caller wakes parked waiters)."""
+        if self._published is not None or not self._averages:
+            return False
+        if now - self._round_start <= self.aggregation_timeout:
+            return False
+        crashed = tuple(o for o in self.orgs if o not in self._averages)
+        self._publish(crashed)
+        return True
+
+    def try_get_org_average(self) -> Optional[dict]:
+        return self._published
+
+    def get_org_average(self) -> dict:
+        self.stats.get_org_average += 1
+        assert self._published is not None
+        return self._published
+
+    def peek_org(self, org: int) -> Optional[dict]:
+        """Uncounted (admin-class) view of one org's posted average."""
+        return self._averages.get(org)
+
+    def reset_round(self) -> None:
+        self._averages.clear()
+        self._published = None
+        self._started = False
+        self._round_start = 0.0
+        self.crashed_orgs = ()

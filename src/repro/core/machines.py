@@ -419,8 +419,22 @@ def safe_learner(
                 st = yield from _post_and_confirm(agg)
             if st["status"] == "reset":
                 continue  # round restarted — rejoin the new chain
-            # 'timeout' falls through to get_average, whose own timeout
-            # handles an aborted round.
+            if st["status"] == "timeout":
+                # §5.4: the posting was never consumed within the
+                # aggregation timeout (its target died with the chain
+                # otherwise complete). Enter the election path right
+                # away — same as the initiator's handling above. Waiting
+                # on get_average here instead loses the race against the
+                # round reset: the new chain would run (and publish)
+                # without this survivor's contribution.
+                verdict = yield from _election()
+                if verdict == "done":
+                    return
+                initiator_now = verdict == "initiator"
+                continue
+            # 'self' falls through to get_average: the poster's own
+            # aggregate was declared final, the (re-elected) round will
+            # publish without further input from this node.
 
             res = yield ("wait", "get_average", dict(), nbytes, "aggregation")
             if res.get("status") == "timeout":

@@ -25,7 +25,12 @@ from typing import Any, Dict, Iterable, Optional
 
 import numpy as np
 
-from repro.core.controller import CALL_OPS, TIMED_OPS, Controller
+from repro.core.controller import (
+    CALL_OPS,
+    TIMED_OPS,
+    Controller,
+    HierarchicalController,
+)
 from repro.core.costs import CostModel, EDGE
 
 # Re-exported for backwards compatibility: the state machines moved to
@@ -231,7 +236,8 @@ class ProtocolSimulation:
                 poster, failed = stuck
                 if self.tasks.get(poster) is None or self.tasks[poster].done:
                     continue  # poster itself gone — aggregation timeout path
-                self.ctrl.order_repost(group, poster, failed)
+                if self.ctrl.order_repost(group, poster, failed) is None:
+                    continue  # stalled: §5.4 election will recover, no repost
                 self.monitor_reposts += 1
         # aggregation-timeout waits are handled in run() via deadlines; the
         # tick just advanced the clock so those deadlines can fire.
@@ -351,6 +357,94 @@ def run_safe_round(
         _drive_insec(ctrl, sim, groups, failed, weights)
         return sim.run()
     return sim.run()
+
+
+@dataclasses.dataclass
+class HierSimResult:
+    """One §5.10 chain-of-chains round: per-org SAFE rounds + parent fold."""
+
+    average: Optional[np.ndarray]   # parent (cross-org) average
+    weight_avg: Optional[float]
+    org_results: Dict[int, SimResult]  # per child org, surviving orgs only
+    org_averages: Dict[int, np.ndarray]
+    elided_orgs: tuple              # whole-org crashes (parent-level §5.3)
+    up_messages: int                # child -> parent posts (HierarchicalController)
+
+
+def run_hierarchical_round_sim(
+    values: np.ndarray,
+    orgs: int = 3,
+    failed_orgs: Iterable[int] = (),
+    failed_nodes: Iterable[int] = (),
+    initiator_fails: bool = False,
+    weights: Optional[np.ndarray] = None,
+    cost: CostModel = EDGE,
+    aggregation_timeout: float = 8.0,
+    progress_timeout: float = 1.0,
+    monitor_interval: float = 0.25,
+    symmetric_only: bool = False,
+    scale_bits: int = 16,
+    provisioning_seed: int = 0xC0FFEE,
+    learner_master: int = 0x5EED,
+    counter: int = 0,
+) -> HierSimResult:
+    """Simulate one §5.10 hierarchical round: the n learners split into
+    ``orgs`` contiguous child orgs, each org runs its own full SAFE
+    chain (failover included) against its OWN controller, and
+    :class:`HierarchicalController` folds the surviving orgs' averages.
+
+    The per-org machines are built from the SAME global topology and
+    crypto seeds as the flat ``run_safe_round(values, subgroups=orgs)``
+    run, so each surviving org's published average — and, with no org
+    crashed, the parent average itself — is bit-identical to the flat
+    sim's. This is the sim twin the wire plane's hierarchical rounds
+    are asserted against.
+
+    ``failed_orgs``: 0-based org indices crashed whole (never run — the
+    parent elides them). ``failed_nodes`` / ``initiator_fails`` follow
+    the flat API (``initiator_fails`` crashes group 0's initiator after
+    its first post, Fig. 5 — inside child org 0 here).
+    """
+    n, V = values.shape
+    topo = RingTopology(n, orgs)
+    topo.validate_privacy()
+    groups = topo.group_chains(node_base=1)
+    initiators = {r + 1 for r in topo.elect_initiators()}
+    failed = set(failed_nodes)
+    dead_orgs = set(failed_orgs)
+    machines = build_round_machines(
+        values, topo, groups, initiators, mode="safe", weights=weights,
+        cost=cost, symmetric_only=symmetric_only, scale_bits=scale_bits,
+        provisioning_seed=provisioning_seed, learner_master=learner_master,
+        counter=counter, subgroups=orgs, failed=failed,
+        initiator_fails=initiator_fails)
+
+    children: list[Controller] = []
+    org_results: Dict[int, SimResult] = {}
+    org_averages: Dict[int, np.ndarray] = {}
+    for g, chain in groups.items():
+        ctrl = Controller({g: chain}, aggregation_timeout=aggregation_timeout)
+        children.append(ctrl)
+        if g in dead_orgs:
+            continue  # whole org offline: its controller never publishes
+        sim = ProtocolSimulation(ctrl, cost, progress_timeout=progress_timeout,
+                                 monitor_interval=monitor_interval)
+        for node in chain:
+            if node in machines:  # dead-before-round nodes are never built
+                sim.spawn(node, machines[node])
+        org_results[g] = sim.run()
+        org_averages[g] = org_results[g].average
+
+    parent = HierarchicalController(children)
+    out = parent.collect(elide_incomplete=bool(dead_orgs))
+    return HierSimResult(
+        average=out["average"],
+        weight_avg=out.get("weight_avg"),
+        org_results=org_results,
+        org_averages=org_averages,
+        elided_orgs=out.get("elided", ()),
+        up_messages=parent.up_messages,
+    )
 
 
 def _drive_insec(ctrl: Controller, sim: ProtocolSimulation, groups, failed, weights):

@@ -18,8 +18,10 @@ constructed ``serve.AggregationEngine`` by injection.
 from repro.net.broker import DEFAULT_CHUNK_BUDGET_BYTES, SafeBroker
 from repro.net.client import (
     BonNetResult,
+    HierNetResult,
     NetResult,
     PersistentNetSession,
+    ShardDeadError,
     WireClient,
     auto_chunk_words,
     backoff_delay,
@@ -27,6 +29,7 @@ from repro.net.client import (
     run_bon_round_net,
     run_federated_round_net,
     run_federated_rounds_net,
+    run_hierarchical_round_net,
     run_safe_round_net,
 )
 from repro.net.faults import (
@@ -48,8 +51,10 @@ from repro.net.loadgen import (
     SLOReport,
     run_bon_scale,
     run_engine_load,
+    run_hierarchical_scale,
     run_paper_scale,
     run_protocol_load,
+    run_shard_failover_load,
     run_slo_load,
 )
 
@@ -64,10 +69,13 @@ __all__ = [
     "WireClient",
     "NetResult",
     "BonNetResult",
+    "HierNetResult",
+    "ShardDeadError",
     "PersistentNetSession",
     "drive_learner",
     "run_safe_round_net",
     "run_bon_round_net",
+    "run_hierarchical_round_net",
     "run_federated_round_net",
     "run_federated_rounds_net",
     "Interceptor",
@@ -87,5 +95,7 @@ __all__ = [
     "run_protocol_load",
     "run_paper_scale",
     "run_bon_scale",
+    "run_hierarchical_scale",
+    "run_shard_failover_load",
     "run_slo_load",
 ]

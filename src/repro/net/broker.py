@@ -38,13 +38,16 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import itertools
+import secrets
+import ssl as _ssl
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.bon_controller import BON_CALL_OPS, BON_TIMED_OPS, \
     BON_WAIT_KINDS, BonController
-from repro.core.controller import CALL_OPS, TIMED_OPS, WAIT_KINDS, Controller
+from repro.core.controller import CALL_OPS, TIMED_OPS, WAIT_KINDS, \
+    Controller, ParentController
 from repro.net import wire
 from repro.obs import MetricsRegistry, Tracer
 
@@ -56,6 +59,34 @@ from repro.obs import MetricsRegistry, Tracer
 #: flooding tenant — many concurrent un-posted uploads — is shed, and
 #: only sheds *itself* (the budget is per session). ``None`` disables.
 DEFAULT_CHUNK_BUDGET_BYTES = 4 * wire.MAX_FRAME
+
+#: Session ops whose kwargs name the acting learner (PROTOCOL.md §15):
+#: a node-scoped token must match this field, so node A cannot post,
+#: consume or elect as node B. ``get_key(node=...)`` names the key's
+#: OWNER, not the caller (any chain neighbour fetches it) — absent here
+#: by design. Chunk frames check the field of the logical op they carry.
+IDENTITY_FIELDS = {
+    "post_aggregate": "from_node",
+    "post_average": "node",
+    "check_aggregate": "node",
+    "get_aggregate": "node",
+    "should_initiate": "node",
+    "register_key": "node",
+}
+
+#: Session ops only the session-scoped (admin) token may invoke:
+#: destructive round/lifecycle control a single learner must not hold.
+ADMIN_ONLY_OPS = frozenset({
+    "reset_round", "advance_round", "delete_session",
+})
+
+
+def _auth_failed(op: str, reason: str) -> dict:
+    """The counted-neutral rejection (PROTOCOL.md §15): an OK-framed
+    response no Controller ever sees — uncounted, untimed, exactly like
+    the admin-class ops, so the §5 closed forms cannot observe a denied
+    request."""
+    return {"status": "auth_failed", "op": op, "reason": reason}
 
 
 class _Transfer:
@@ -107,15 +138,42 @@ class _Session:
                  "round", "chunk_frames_future",
                  # observability plane (ISSUE 7) — observes, never alters
                  "round_t0", "round_published", "rounds_completed",
-                 "pending_bytes", "busy_rejections")
+                 "pending_bytes", "busy_rejections",
+                 # transport hardening (PROTOCOL.md §15)
+                 "token", "node_tokens", "token_nodes", "auth_failures",
+                 # hierarchical chain-of-chains (PROTOCOL.md §15, §5.10)
+                 "parent", "upstream", "org_average", "parent_global",
+                 "uplink_errors")
 
     def __init__(self, sid: int, ctrl: Controller, now: float = 0.0,
-                 bon: Optional[BonController] = None):
+                 bon: Optional[BonController] = None,
+                 parent: Optional[ParentController] = None,
+                 upstream: Optional[dict] = None):
         self.sid = sid
         self.ctrl = ctrl
         # BON tenant (PROTOCOL.md §14): the session speaks the baseline
         # protocol instead; SAFE ops still see a (quiescent) Controller
         self.bon = bon
+        # hierarchical roles (PROTOCOL.md §15): a PARENT session folds
+        # anonymized org averages (ParentController); a CHILD session
+        # posts its own global (= org average) UP to `upstream` on
+        # publication and withholds learners' get_average until the
+        # parent's fold comes back down
+        self.parent = parent
+        self.upstream = upstream
+        self.org_average: Optional[dict] = None   # child: own fold snapshot
+        self.parent_global: Optional[dict] = None  # child: installed fold
+        self.uplink_errors = 0
+        # transport hardening (PROTOCOL.md §15): a session-scoped admin
+        # token plus one token per enrolled node, minted at creation,
+        # rotated wholesale by reset_round (stale rounds cannot replay)
+        self.token = secrets.token_hex(16)
+        self.node_tokens: Dict[int, str] = {
+            n: secrets.token_hex(16)
+            for chain in ctrl.groups.values() for n in chain}
+        self.token_nodes: Dict[str, int] = {
+            t: n for n, t in self.node_tokens.items()}
+        self.auth_failures = 0
         self.cond = asyncio.Condition()
         self.closed = False
         self.monitor_reposts = 0
@@ -141,6 +199,17 @@ class _Session:
         # admission control: buffered-but-un-posted transfer bytes
         self.pending_bytes = 0
         self.busy_rejections = 0
+
+    def rotate_tokens(self) -> dict:
+        """Mint a fresh admin token and fresh per-node tokens (the
+        reset_round rotation, PROTOCOL.md §15): every credential of the
+        aborted round is dead, so a captured token cannot replay into
+        the restarted round. Returns the wire-shaped grant."""
+        self.token = secrets.token_hex(16)
+        self.node_tokens = {n: secrets.token_hex(16)
+                            for n in self.node_tokens}
+        self.token_nodes = {t: n for n, t in self.node_tokens.items()}
+        return {"token": self.token, "node_tokens": dict(self.node_tokens)}
 
     def forget_transfer(self, key: tuple) -> Optional[_Transfer]:
         """The single transfer-removal path: un-posted buffers leave the
@@ -227,7 +296,14 @@ class SafeBroker:
                  busy_retry_after: float = 0.05,
                  inflight_rounds: int = 2,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 ssl_certfile: Optional[str] = None,
+                 ssl_keyfile: Optional[str] = None):
+        # optional TLS (PROTOCOL.md §15): kept as PATHS, not a built
+        # SSLContext, so a sharded deployment can pickle them across the
+        # worker-process spawn; the context is built in start()
+        self.ssl_certfile = ssl_certfile
+        self.ssl_keyfile = ssl_keyfile
         self.aggregation_timeout = aggregation_timeout
         self.progress_timeout = progress_timeout
         self.monitor_interval = monitor_interval
@@ -315,7 +391,8 @@ class SafeBroker:
         loop = asyncio.get_running_loop()
         self._t0 = loop.time()
         self._server = await asyncio.start_server(
-            self._handle, host, port, reuse_port=reuse_port or None)
+            self._handle, host, port, reuse_port=reuse_port or None,
+            ssl=self._server_ssl())
         self._tasks.append(asyncio.ensure_future(self._monitor_loop()))
         if self.engine is not None:
             self._tasks.append(asyncio.ensure_future(self._engine_loop()))
@@ -329,10 +406,21 @@ class SafeBroker:
         worker answers on its direct per-shard port AND the shared
         ``SO_REUSEPORT`` port. Closed with the broker on ``stop()``."""
         server = await asyncio.start_server(
-            self._handle, host, port, reuse_port=reuse_port or None)
+            self._handle, host, port, reuse_port=reuse_port or None,
+            ssl=self._server_ssl())
         self._extra_servers.append(server)
         addr = server.sockets[0].getsockname()
         return addr[0], addr[1]
+
+    def _server_ssl(self) -> Optional[_ssl.SSLContext]:
+        """Server-side TLS context from the configured cert/key paths —
+        built lazily per listener (contexts are not picklable; the
+        sharded workers each build their own)."""
+        if self.ssl_certfile is None:
+            return None
+        ctx = _ssl.SSLContext(_ssl.PROTOCOL_TLS_SERVER)
+        ctx.load_cert_chain(self.ssl_certfile, self.ssl_keyfile)
+        return ctx
 
     async def stop(self) -> None:
         # stop accepting FIRST so no handler can slip in behind the
@@ -435,6 +523,54 @@ class SafeBroker:
         if sess is None:
             raise wire.WireError(f"unknown session {sid!r}")
         return sess
+
+    def _check_auth(self, sess: _Session, op: str,
+                    kwargs: dict) -> Optional[dict]:
+        """Token gate for every session-addressed op (PROTOCOL.md §15).
+
+        Returns None when the request may proceed, or the
+        counted-neutral ``auth_failed`` response. Three rules:
+
+        * every op must present the session's admin token or one of its
+          per-node tokens (minted at create_session, rotated wholesale
+          by reset_round — a stale round's credential never replays);
+        * a node token must match the op's identity field
+          (``IDENTITY_FIELDS``) — node A cannot post, consume or elect
+          as node B. Chunk frames are checked against the logical op
+          they carry;
+        * round/lifecycle control (``ADMIN_ONLY_OPS``) takes the admin
+          token only.
+
+        The check runs before any Controller interaction and the denial
+        is an ordinary OK-framed response: uncounted, untimed, invisible
+        to MessageStats and the §5 closed forms.
+        """
+        token = kwargs.pop("token", None)
+        if token is None:
+            sess.auth_failures += 1
+            return _auth_failed(op, "missing token")
+        if token == sess.token:
+            return None  # session-scoped (admin) token: any op
+        node = sess.token_nodes.get(token)
+        if node is None:
+            sess.auth_failures += 1
+            return _auth_failed(op, "unknown token")
+        if op in ADMIN_ONLY_OPS:
+            sess.auth_failures += 1
+            return _auth_failed(op, f"{op} needs the session token")
+        # chunk frames authenticate as the logical op they carry
+        field = IDENTITY_FIELDS.get(op)
+        if op == "post_chunk":
+            field = IDENTITY_FIELDS.get(kwargs.get("op"))
+        elif op == "get_chunk":
+            field = IDENTITY_FIELDS.get(kwargs.get("kind"))
+        if field is not None and field in kwargs \
+                and int(kwargs[field]) != node:
+            sess.auth_failures += 1
+            return _auth_failed(
+                op, f"token of node {node} cannot act as "
+                    f"{field}={kwargs[field]}")
+        return None
 
     def _shard_map(self) -> dict:
         """Shard topology for shard-aware clients (PROTOCOL.md §12).
@@ -569,6 +705,13 @@ class SafeBroker:
             return await self._get_engine_chunk(kwargs)
 
         sess = self._session(kwargs)
+        denied = self._check_auth(sess, op, kwargs)
+        if denied is not None:
+            return denied
+        if op == "post_org_average":
+            return await self._post_org_average(sess, kwargs)
+        if op == "get_org_average":
+            return await self._get_org_average(sess, kwargs)
         if op == "post_chunk":
             return await self._post_chunk(sess, kwargs)
         if op == "get_chunk":
@@ -636,6 +779,13 @@ class SafeBroker:
                 sess.cond.notify_all()
             return res
         if op == "peek_average":
+            if sess.parent is not None:
+                # parent session: uncounted admin view — one org's
+                # posted average with org=g, the cross-org fold without
+                # (HierStats only moves on the counted hier ops)
+                if kwargs.get("org") is not None:
+                    return sess.parent.peek_org(int(kwargs["org"]))
+                return sess.parent.try_get_org_average()
             if sess.bon is not None:
                 avg = sess.bon.average
                 return None if avg is None else {"average": avg}
@@ -654,6 +804,16 @@ class SafeBroker:
             stats["transfers_completed"] = sess.transfers_completed
             stats["busy_rejections"] = sess.busy_rejections
             stats["round"] = sess.round
+            stats["auth_failures"] = sess.auth_failures
+            if sess.parent is not None:
+                # parent level (§5.10): HierStats, never MessageStats —
+                # the 2(c−f) closed form reads off these two counters
+                stats["post_org_average"] = sess.parent.stats.post_org_average
+                stats["get_org_average"] = sess.parent.stats.get_org_average
+                stats["hierarchy_total"] = sess.parent.stats.hierarchy_total
+                stats["crashed_orgs"] = list(sess.parent.crashed_orgs)
+            if sess.upstream is not None:
+                stats["uplink_errors"] = sess.uplink_errors
             return stats
         if op == "reset_round":
             # destructive restart of the SAME logical round: every
@@ -662,11 +822,20 @@ class SafeBroker:
             async with sess.cond:
                 sess.ctrl.reset_round()
                 sess.clear_transfers()
+                if sess.parent is not None:
+                    sess.parent.reset_round()
+                sess.org_average = None
+                sess.parent_global = None
                 # next round's latency clock starts at the reset
                 sess.round_published = False
                 sess.round_t0 = self.now()
+                # §15: the aborted round's credentials die with it — a
+                # replayed stale token cannot touch the new round. The
+                # fresh grant rides the response; only the resetting
+                # admin sees it and redistributes.
+                grant = sess.rotate_tokens()
                 sess.cond.notify_all()
-            return None
+            return grant
         if op == "advance_round":
             # non-destructive round boundary (§11): complete the current
             # round, open the next, keep round r+1's buffers — then
@@ -681,6 +850,10 @@ class SafeBroker:
                 sess.round += 1
                 for key in [k for k in sess.transfers if k[1] < sess.round]:
                     sess.forget_transfer(key)
+                if sess.parent is not None:
+                    sess.parent.reset_round()
+                sess.org_average = None
+                sess.parent_global = None
                 sess.round_published = False
                 sess.round_t0 = self.now()
                 for key in sorted(k for k in sess.transfers
@@ -735,6 +908,109 @@ class SafeBroker:
             self.tracer.record("round", sess.round_t0, now,
                                session=sess.sid,
                                round=sess.rounds_completed - 1)
+        if sess.upstream is not None:
+            # child role (§5.10): this session's global IS the org
+            # average — snapshot it and ship it upward; learners'
+            # get_average stays parked until the parent fold lands
+            sess.org_average = dict(sess.ctrl.try_get_average())
+            self._tasks.append(asyncio.ensure_future(self._uplink(sess)))
+
+    # ------------------------------------------------------------------
+    # hierarchical plane (docs/PROTOCOL.md §15, paper §5.10)
+    # ------------------------------------------------------------------
+    async def _post_org_average(self, sess: _Session, kwargs: dict):
+        """Parent-side up-post: one child org's anonymized average lands
+        in the ParentController (counted + timed in HierStats, never
+        MessageStats). The fold publishes once every enrolled org posted
+        — or earlier via the monitor's ``maybe_elide`` when whole orgs
+        crashed."""
+        if sess.parent is None:
+            raise wire.WireError(
+                f"session {sess.sid} is not a parent session")
+        wavg = kwargs.get("weight_avg")
+        async with sess.cond:
+            sess.parent.post_org_average(
+                int(kwargs.get("org", 0)),
+                np.asarray(kwargs.get("average")),
+                None if wavg is None else float(wavg),
+                now=self.now())
+            sess.cond.notify_all()
+        return {"status": "ok"}
+
+    async def _get_org_average(self, sess: _Session, kwargs: dict):
+        """Parent-side down-fetch: long-poll the cross-org fold (counted
+        in HierStats on consumption; a lapsed deadline counts nothing —
+        the same park/probe/consume discipline as the §5 waits)."""
+        if sess.parent is None:
+            raise wire.WireError(
+                f"session {sess.sid} is not a parent session")
+        timeout = kwargs.pop("timeout", None)
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + float(timeout)
+
+        def probe():
+            if sess.closed:
+                raise wire.WireError(f"session {sess.sid} deleted")
+            if sess.parent.try_get_org_average() is None:
+                return None
+            res = sess.parent.get_org_average()
+            sess.cond.notify_all()
+            return res
+
+        res = await _park(sess.cond, probe, deadline)
+        return res if res is not None else {"status": "timeout"}
+
+    async def _uplink(self, sess: _Session) -> None:
+        """Child role (§5.10): ship the just-published org average UP to
+        the parent session, long-poll the fold back DOWN, install it as
+        what this broker's learners receive from ``get_average``. One
+        anonymized vector crosses the org trust boundary per round —
+        never an individual learner's aggregate."""
+        up = sess.upstream
+        org_avg = dict(sess.org_average)
+        try:
+            reader, writer = await asyncio.open_connection(
+                up["host"], int(up["port"]))
+        except OSError:
+            sess.uplink_errors += 1
+            return
+        try:
+            async def rpc(op: str, kw: dict):
+                writer.write(wire.encode_frame(wire.encode_request(op, kw)))
+                await writer.drain()
+                body = await wire.read_frame(reader)
+                if body is None:
+                    raise wire.WireError("parent closed the uplink")
+                return wire.decode_response(body)
+
+            base = {"session": up["session"], "token": up["token"]}
+            res = await rpc("post_org_average", dict(
+                base, org=int(up["org"]), average=org_avg["average"],
+                weight_avg=org_avg.get("weight_avg")))
+            if isinstance(res, dict) and res.get("status") == "auth_failed":
+                raise wire.WireError(
+                    f"uplink rejected: {res.get('reason')}")
+            glob = await rpc("get_org_average", dict(
+                base, timeout=up.get("timeout")))
+            if not isinstance(glob, dict) or "average" not in glob:
+                raise wire.WireError(f"no parent fold: {glob!r}")
+            async with sess.cond:
+                sess.parent_global = {
+                    "average": np.asarray(glob["average"]),
+                    "weight_avg": glob.get("weight_avg"),
+                    "time": float(glob.get("time", 0.0)),
+                    "orgs": list(glob.get("orgs", [])),
+                    "crashed_orgs": list(glob.get("crashed_orgs", [])),
+                }
+                sess.cond.notify_all()
+        except (wire.WireError, OSError, asyncio.IncompleteReadError):
+            sess.uplink_errors += 1
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:  # noqa: BLE001
+                pass
 
     # ------------------------------------------------------------------
     # protocol plane
@@ -767,13 +1043,39 @@ class SafeBroker:
                 scale_bits=int(kwargs.get("scale_bits", 16)))
         elif protocol != "safe":
             raise wire.WireError(f"unknown protocol {protocol!r}")
+        # hierarchical roles (additive kwargs, PROTOCOL.md §15). orgs=[..]
+        # makes a PARENT session: it folds anonymized org averages with
+        # the same arithmetic as §5.5 and elides whole crashed orgs on
+        # its aggregation timeout (the SAFE ops still see a quiescent
+        # Controller, mirroring the BON tenant shape).
+        parent = None
+        if kwargs.get("orgs") is not None:
+            orgs = [int(o) for o in kwargs["orgs"]]
+            if not orgs:
+                raise wire.WireError("parent session needs a non-empty orgs list")
+            parent = ParentController(
+                orgs, aggregation_timeout=float(timeout))
+        # upstream={host,port,session,org,token} makes a CHILD session:
+        # on publishing its own global (= the org average) it posts that
+        # one anonymized vector up and serves the parent's fold to its
+        # learners once it arrives.
+        upstream = kwargs.get("upstream")
+        if upstream is not None:
+            need = {"host", "port", "session", "org", "token"}
+            if not isinstance(upstream, dict) or not need <= set(upstream):
+                raise wire.WireError(
+                    f"upstream needs the keys {sorted(need)}")
+            upstream = dict(upstream)
         sid = next(self._sids)
-        self._sessions[sid] = _Session(
+        sess = _Session(
             sid, Controller(groups, aggregation_timeout=float(timeout)),
-            now=self.now(), bon=bon)
+            now=self.now(), bon=bon, parent=parent, upstream=upstream)
+        self._sessions[sid] = sess
         self._m_sessions_created.inc()
         self._m_active.set(len(self._sessions))
-        return {"session": sid, "aggregation_timeout": float(timeout)}
+        return {"session": sid, "aggregation_timeout": float(timeout),
+                "token": sess.token,
+                "node_tokens": dict(sess.node_tokens)}
 
     async def _long_poll(self, sess: _Session, kind: str, kwargs: dict):
         """Park until the probe is satisfiable, then consume (counted),
@@ -816,6 +1118,11 @@ class SafeBroker:
             if rnd is not None and sess.round != int(rnd):
                 return None
             probed = sess.ctrl.probe(kind, **kwargs)
+            if kind == "get_average" and sess.upstream is not None \
+                    and sess.parent_global is None:
+                # child session (§15/§5.10): the org's own fold never
+                # reaches learners — distribution waits for the parent
+                probed = None
             if probed is not None and expect_time is not None \
                     and float(probed.get("time", 0.0)) != float(expect_time):
                 probed = None  # not the entry the client streamed
@@ -830,14 +1137,35 @@ class SafeBroker:
                      kwargs.get("node")))
                 if elide:
                     res = dict(res, aggregate=None, chunked=True)
-            elif kind == "get_average" and elide:
-                res = dict(res, average=None, chunked=True)
+            elif kind == "get_average":
+                if sess.upstream is not None:
+                    # serve the parent fold (still ONE counted
+                    # get_average per learner — the §5 per-org closed
+                    # forms are untouched). Served inline: the chunked
+                    # distribution path streams the org-level buffer,
+                    # so elide is ignored on child sessions.
+                    res = dict(res, **sess.parent_global)
+                elif elide:
+                    res = dict(res, average=None, chunked=True)
             # consuming get_aggregate resolves the poster's pending
             # check_aggregate — wake its waiter
             sess.cond.notify_all()
             return res
 
         res = await _park(sess.cond, probe, deadline)
+        while (res is None and kind == "get_average"
+               and sess.upstream is not None
+               and sess.org_average is not None
+               and sess.uplink_errors == 0):
+            # child session whose OWN round already published: the only
+            # thing pending is the parent fold (§15), and an uplink in
+            # flight must not read as a stalled aggregation — answering
+            # "timeout" here would push a finished org's learners into
+            # a spurious §5.4 re-election. Re-park on the caller's own
+            # cadence until the fold lands or the uplink dies.
+            res = await _park(sess.cond, probe,
+                              None if timeout is None
+                              else loop.time() + float(timeout))
         return res if res is not None else {"status": "timeout"}
 
     # ------------------------------------------------------------------
@@ -1178,6 +1506,13 @@ class SafeBroker:
                             if sess.bon.maybe_close_roster(now):
                                 sess.cond.notify_all()
                         continue
+                    if sess.parent is not None:
+                        # parent level (§5.10): a whole child org that
+                        # never posts is elided on the aggregation
+                        # timeout, exactly like a dead learner
+                        async with sess.cond:
+                            if sess.parent.maybe_elide(now):
+                                sess.cond.notify_all()
                     async with sess.cond:
                         for group in sess.ctrl.groups:
                             stuck = sess.ctrl.stuck_posting(
@@ -1185,7 +1520,12 @@ class SafeBroker:
                             if stuck is None:
                                 continue
                             poster, failed = stuck
-                            sess.ctrl.order_repost(group, poster, failed)
+                            if sess.ctrl.order_repost(
+                                    group, poster, failed) is None:
+                                # stalled: the chain finished but its
+                                # consumer died — the §5.4 election
+                                # recovers; no repost was ordered
+                                continue
                             # the dead target's chunk buffer dies with
                             # its posting — the repost streams afresh
                             # (current round only: the monitor can only

@@ -79,6 +79,18 @@ AUTO_CHUNK_TARGET = 8
 _xfer_ids = itertools.count(1)
 
 
+class ShardDeadError(wire.WireError):
+    """The session's owning shard worker is gone (PROTOCOL.md §12):
+    the dispatcher refused the session as unavailable, a redirect dialed
+    a dead worker's port, or the worker's socket closed under a live
+    request. Sessions never migrate (no rebalancing), so the one
+    deterministic recovery is to create a FRESH session — which a
+    surviving shard will own — and re-run the round (tested end-to-end
+    in tests/test_shard.py; repro.net.loadgen tenants do exactly this).
+    Subclasses :class:`~repro.net.wire.WireError`, so callers that treat
+    shard death as any other broker failure keep working."""
+
+
 def backoff_delay(attempt: int, *, base: float, cap: float = 0.5,
                   seed: int = 0) -> float:
     """Capped exponential backoff with deterministic jitter.
@@ -152,12 +164,24 @@ class WireClient:
 
     def __init__(self, host: str, port: int, node: int = 0,
                  interceptor: Optional[Interceptor] = None,
-                 retry_backoff: float = 0.02):
+                 retry_backoff: float = 0.02,
+                 token: Optional[str] = None, ssl=None):
         self.host = host
         self.port = port
         self.node = node
         self.interceptor = interceptor
         self.retry_backoff = retry_backoff
+        # transport hardening (PROTOCOL.md §15): the bearer token stamped
+        # onto every session-addressed request. Learned automatically
+        # from create_session / reset_round responses on this connection,
+        # or set explicitly (a learner client carries its own node token)
+        self.token = token
+        #: per-node token grant from the last create_session/reset_round
+        #: this client performed (the admin redistributes these)
+        self.node_tokens: Optional[dict] = None
+        # optional TLS: an ssl.SSLContext (or True for default verify)
+        # handed to open_connection
+        self._ssl = ssl
         self.bytes_sent = 0
         self.bytes_received = 0
         self.requests = 0
@@ -169,8 +193,16 @@ class WireClient:
 
     async def connect(self) -> "WireClient":
         self._reader, self._writer = await asyncio.open_connection(
-            self.host, self.port)
+            self.host, self.port, ssl=self._ssl)
         return self
+
+    def set_token(self, token: Optional[str]) -> None:
+        """Adopt a (possibly rotated) bearer token — aux channel
+        included, so a streaming combine started after a reset_round
+        rotation authenticates on both connections."""
+        self.token = token
+        if self._aux is not None:
+            self._aux.token = token
 
     @property
     def total_bytes_sent(self) -> int:
@@ -190,7 +222,8 @@ class WireClient:
             self._aux = await WireClient(
                 self.host, self.port, node=self.node,
                 interceptor=self.interceptor,
-                retry_backoff=self.retry_backoff).connect()
+                retry_backoff=self.retry_backoff,
+                token=self.token, ssl=self._ssl).connect()
         return self._aux
 
     async def close(self) -> None:
@@ -216,6 +249,11 @@ class WireClient:
         the frame never left, so resending is at-most-once). Sent as a
         scatter-gather parts list (PROTOCOL.md §12): bulk array payloads
         go to the socket from where they already live, uncopied."""
+        if self.token is not None and "session" in kwargs \
+                and "token" not in kwargs:
+            # §15: stamp the bearer token onto every session-addressed
+            # request (a copy — the caller's kwargs stay replayable)
+            kwargs = dict(kwargs, token=self.token)
         framed = wire.encode_frame_parts(
             wire.encode_request_parts(op, kwargs))
         nbytes = wire.parts_nbytes(framed)
@@ -240,13 +278,27 @@ class WireClient:
             return
 
     async def _recv(self, op: str) -> Any:
-        resp = await wire.read_frame(self._reader)
+        try:
+            resp = await wire.read_frame(self._reader)
+        except (ConnectionResetError, asyncio.IncompleteReadError) as exc:
+            # the worker died mid-request — deterministic surface
+            # instead of a raw OSError escaping the learner task
+            raise ShardDeadError(
+                f"connection lost mid-{op} (worker dead?): {exc}") from exc
         if resp is None:
-            raise wire.WireError("broker closed the connection")
+            raise ShardDeadError(
+                f"broker closed the connection mid-{op}")
         self.bytes_received += len(resp) + 4
         if self.interceptor is not None:
             await self.interceptor.on_response(self.node, op, len(resp) + 4)
-        return wire.decode_response(resp)
+        try:
+            return wire.decode_response(resp)
+        except wire.WireError as exc:
+            # the §12 dispatcher names a dead owner in its error — map
+            # it onto the typed surface the recovery path switches on
+            if "is dead" in str(exc):
+                raise ShardDeadError(str(exc)) from exc
+            raise
 
     async def redirect(self, port: int) -> None:
         """Move this client (and any aux channel) to another broker
@@ -272,7 +324,7 @@ class WireClient:
             # a dead shard worker's port refuses/RSTs — surface a clear
             # error instead of letting the raw OSError (or a hang on a
             # half-open socket) escape to the learner task
-            raise wire.WireError(
+            raise ShardDeadError(
                 f"redirect to port {port} failed — shard worker "
                 f"unreachable (dead?): {exc}") from exc
 
@@ -313,6 +365,14 @@ class WireClient:
                 break
             await self._send(op, kwargs)
             res = await self._recv(op)
+        if op in ("create_session", "reset_round") \
+                and isinstance(res, dict) and res.get("token") is not None:
+            # §15: adopt the (possibly rotated) session token and hold
+            # the per-node grant for the caller to redistribute
+            self.token = res["token"]
+            self.node_tokens = res.get("node_tokens")
+            if self._aux is not None:
+                self._aux.token = self.token
         return res
 
     # -- chunked transfer plane (docs/PROTOCOL.md §6) ---------------------
@@ -1017,6 +1077,7 @@ async def run_safe_round_net(
     chunk_words: Optional[int] = None,
     prefetch_depth: Optional[int] = None,
     stream: Optional[bool] = None,
+    ssl=None,
 ) -> NetResult:
     """One full aggregation round over the wire — the transport twin of
     :func:`repro.core.protocol.run_safe_round` (same signature spirit,
@@ -1066,7 +1127,7 @@ async def run_safe_round_net(
         counter=counter, subgroups=subgroups, failed=failed,
         initiator_fails=initiator_fails)
 
-    admin = await WireClient(*addr).connect()
+    admin = await WireClient(*addr, ssl=ssl).connect()
     sid = None
     try:
         created = await admin.request("create_session", {
@@ -1079,8 +1140,13 @@ async def run_safe_round_net(
                         if created.get("port") else addr)
 
         async def acquire(node: int) -> WireClient:
+            # §15: each learner authenticates as ITSELF — its node token
+            # from the create_session grant (the broker refuses a post
+            # or consume under any other node's identity)
+            tok = (admin.node_tokens or {}).get(node, admin.token)
             return await WireClient(*learner_addr, node=node,
-                                    interceptor=interceptor).connect()
+                                    interceptor=interceptor,
+                                    token=tok, ssl=ssl).connect()
 
         async def release(node: int, client: WireClient, _crashed: bool):
             await client.close()  # folds the aux channel's counters in
@@ -1116,6 +1182,182 @@ async def run_safe_round_net(
         initiator_elections=stats["initiator_elections"],
         crashed_nodes=crashed,
         streamed_combines=streamed,
+    )
+
+
+@dataclasses.dataclass
+class HierNetResult:
+    """One §5.10 chain-of-chains round over real brokers — the wire twin
+    of :class:`repro.core.protocol.HierSimResult`. ``average`` is the
+    parent's cross-org fold; ``org_results`` holds each surviving org's
+    own :class:`NetResult` (whose ``average`` is the org-level fold, the
+    one anonymized vector that crossed the trust boundary upward);
+    ``parent_stats`` is the parent session's ``get_stats`` dict, whose
+    ``hierarchy_total`` satisfies the parent-level closed form
+    ``2(c - f)`` — one up-post plus one down-fetch per surviving org."""
+
+    average: Optional[np.ndarray]
+    weight_avg: Optional[float]
+    wall_time: float
+    org_results: Dict[int, NetResult]
+    org_averages: Dict[int, np.ndarray]
+    elided_orgs: tuple
+    parent_stats: Dict[str, Any]
+
+
+async def run_hierarchical_round_net(
+    values: np.ndarray,
+    parent_addr: Addr,
+    child_addrs: Mapping[int, Addr],
+    *,
+    failed_orgs: Iterable[int] = (),
+    failed_nodes: Iterable[int] = (),
+    initiator_fails: bool = False,
+    weights: Optional[np.ndarray] = None,
+    cost: CostModel = EDGE,
+    aggregation_timeout: Optional[float] = None,
+    parent_timeout: Optional[float] = None,
+    symmetric_only: bool = False,
+    scale_bits: int = 16,
+    provisioning_seed: int = 0xC0FFEE,
+    learner_master: int = 0x5EED,
+    counter: int = 0,
+    timeout_scale: float = 1.0,
+    compute_scale: float = 0.0,
+    chunk_words: Optional[int] = None,
+) -> HierNetResult:
+    """One hierarchical round on the wire (paper §5.10, PROTOCOL.md
+    §15): each child org runs its own FULL SAFE chain — failover
+    included — on its own broker, whose session posts the org's
+    anonymized average UP to the parent session at ``parent_addr`` and
+    serves the parent's fold back to its learners. A whole org in
+    ``failed_orgs`` never runs: the parent elides it after its
+    aggregation timeout, exactly like a dead learner inside a chain.
+
+    ``child_addrs`` maps org id (0-based, one per topology subgroup) to
+    that org's broker address; several orgs may share one broker (they
+    get separate sessions). The topology, seeds and machine construction
+    are the GLOBAL ones of ``run_safe_round(values, subgroups=len
+    (child_addrs))`` — so every org average, and the parent fold, is
+    bit-identical to the flat sim/wire planes (asserted in
+    tests/test_conformance.py)."""
+    values = np.asarray(values, np.float32)
+    n, V = values.shape
+    orgs = sorted(int(g) for g in child_addrs)
+    payload_words = V + 1 if weights is not None else V
+    topo = RingTopology(n, len(orgs))
+    topo.validate_privacy()
+    groups = topo.group_chains(node_base=1)
+    initiators = {r + 1 for r in topo.elect_initiators()}
+    failed = set(failed_nodes)
+    dead_orgs = {int(g) for g in failed_orgs}
+
+    machines = build_round_machines(
+        values, topo, groups, initiators, mode="safe", weights=weights,
+        cost=cost, symmetric_only=symmetric_only, scale_bits=scale_bits,
+        provisioning_seed=provisioning_seed, learner_master=learner_master,
+        counter=counter, subgroups=len(orgs), failed=failed,
+        initiator_fails=initiator_fails)
+
+    parent = await WireClient(*parent_addr).connect()
+    children: Dict[int, WireClient] = {}
+    psid = None
+    child_sids: Dict[int, int] = {}
+    try:
+        created = await parent.request("create_session", {
+            # the placeholder chain keeps the call shape; the parent's
+            # protocol state lives in its ParentController
+            "groups": {0: [0]}, "orgs": orgs,
+            "aggregation_timeout": parent_timeout})
+        psid = created["session"]
+        wall_parent = created["aggregation_timeout"]
+
+        async def run_org(g: int) -> Tuple[int, NetResult]:
+            chain = groups[g]
+            admin = await WireClient(*child_addrs[g]).connect()
+            children[g] = admin
+            made = await admin.request("create_session", {
+                "groups": {g: chain},
+                "aggregation_timeout": aggregation_timeout,
+                "upstream": {
+                    "host": parent_addr[0], "port": parent_addr[1],
+                    "session": psid, "org": g, "token": parent.token,
+                    # the child's down-fetch must outlast the parent's
+                    # whole-org elision window
+                    "timeout": wall_parent + 5.0,
+                }})
+            sid = made["session"]
+            child_sids[g] = sid
+            wall_agg = made["aggregation_timeout"]
+            learner_addr = ((child_addrs[g][0], int(made["port"]))
+                            if made.get("port") else child_addrs[g])
+            org_machines = {node: machines[node] for node in chain
+                            if node in machines}
+
+            async def acquire(node: int) -> WireClient:
+                tok = (admin.node_tokens or {}).get(node, admin.token)
+                return await WireClient(*learner_addr, node=node,
+                                        token=tok).connect()
+
+            async def release(node: int, client: WireClient, _c: bool):
+                await client.close()
+                admin.bytes_sent += client.bytes_sent
+
+            wall, crashed, streamed = await _drive_round_machines(
+                org_machines, acquire, release, sid,
+                aggregation_timeout=wall_agg, timeout_scale=timeout_scale,
+                compute_scale=compute_scale, chunk_words=chunk_words,
+                payload_words=payload_words, prefetch_depth=None,
+                stream=None)
+            stats = await admin.request("get_stats", {"session": sid})
+            # the child's peek is the ORG average — the learners got the
+            # parent fold, but the org-level bits are what went upward
+            org_avg = await admin.request("peek_average", {"session": sid})
+            return g, NetResult(
+                average=None if org_avg is None else org_avg["average"],
+                weight_avg=(None if org_avg is None
+                            else org_avg.get("weight_avg")),
+                wall_time=wall, stats=stats, bytes_sent=admin.bytes_sent,
+                monitor_reposts=stats["monitor_reposts"],
+                initiator_elections=stats["initiator_elections"],
+                crashed_nodes=crashed, streamed_combines=streamed)
+
+        live = [g for g in orgs if g not in dead_orgs]
+        if not live:
+            raise ValueError("every child org is in failed_orgs")
+        t0 = time.perf_counter()
+        settled = await asyncio.gather(*(run_org(g) for g in live))
+        wall = time.perf_counter() - t0
+        org_results = {g: r for g, r in settled}
+
+        # every surviving org's learners finished, which means the fold
+        # was published and distributed — the peek cannot race it
+        fold = await parent.request("peek_average", {"session": psid})
+        pstats = await parent.request("get_stats", {"session": psid})
+    finally:
+        for g, admin in children.items():
+            try:
+                if g in child_sids:
+                    await admin.request("delete_session",
+                                        {"session": child_sids[g]})
+            except Exception:  # noqa: BLE001
+                pass
+            await admin.close()
+        if psid is not None:
+            try:
+                await parent.request("delete_session", {"session": psid})
+            except Exception:  # noqa: BLE001
+                pass
+        await parent.close()
+
+    return HierNetResult(
+        average=None if fold is None else fold["average"],
+        weight_avg=None if fold is None else fold.get("weight_avg"),
+        wall_time=wall,
+        org_results=org_results,
+        org_averages={g: r.average for g, r in org_results.items()},
+        elided_orgs=tuple(pstats.get("crashed_orgs", ())),
+        parent_stats=pstats,
     )
 
 
@@ -1191,8 +1433,10 @@ async def run_bon_round_net(
                         if created.get("port") else addr)
 
         async def acquire(node: int) -> WireClient:
+            tok = (admin.node_tokens or {}).get(node, admin.token)
             return await WireClient(*learner_addr, node=node,
-                                    interceptor=interceptor).connect()
+                                    interceptor=interceptor,
+                                    token=tok).connect()
 
         async def release(node: int, client: WireClient, _crashed: bool):
             await client.close()
@@ -1339,11 +1583,21 @@ class PersistentNetSession:
     async def __aexit__(self, *exc) -> None:
         await self.close()
 
+    def _node_token(self, node: int) -> Optional[str]:
+        """The node's CURRENT credential (§15): its entry in the admin's
+        latest grant (create_session or the last reset_round rotation),
+        falling back to the session token."""
+        if self._admin is None:
+            return None
+        grant = self._admin.node_tokens or {}
+        return grant.get(node, self._admin.token)
+
     async def _client(self, node: int) -> WireClient:
         c = self._clients.get(node)
         if c is None:
             c = await WireClient(*self._learner_addr, node=node,
-                                 interceptor=self.interceptor).connect()
+                                 interceptor=self.interceptor,
+                                 token=self._node_token(node)).connect()
             self._clients[node] = c
         return c
 
@@ -1370,7 +1624,8 @@ class PersistentNetSession:
         c = self._pipe_clients.get(key)
         if c is None:
             c = await WireClient(*self._learner_addr, node=node,
-                                 interceptor=self.interceptor).connect()
+                                 interceptor=self.interceptor,
+                                 token=self._node_token(node)).connect()
             self._pipe_clients[key] = c
         return c
 
@@ -1575,8 +1830,15 @@ class PersistentNetSession:
 
         if self.rounds_done > 0:
             # new FL iteration on the same tenant: clear round state and
-            # stale chunk buffers, keep keys/counters/connections warm
+            # stale chunk buffers, keep keys/counters/connections warm.
+            # The reset ROTATES every token (§15) — the admin client
+            # adopts its own from the response; redistribute the fresh
+            # per-node grant to the live learner connections
             await self._admin.request("reset_round", {"session": self.sid})
+            for node, c in self._clients.items():
+                c.set_token(self._node_token(node))
+            for (node, _slot), c in self._pipe_clients.items():
+                c.set_token(self._node_token(node))
 
         async def release(node: int, _client: WireClient, crashed: bool):
             if crashed:

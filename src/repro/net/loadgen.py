@@ -876,3 +876,282 @@ async def run_bon_scale(
         "shares_reconstructed": res.stats.get("shares_reconstructed", 0),
         "bit_identical": bool(bit_identical),
     }
+
+
+async def run_hierarchical_scale(
+    *,
+    n: int = 36,
+    orgs: int = 3,
+    V: int = 256,
+    failed_orgs: Iterable[int] = (),
+    failed_nodes: Iterable[int] = (),
+    initiator_fails: bool = False,
+    seed: int = 0,
+    bit_identical: bool = True,
+    progress_timeout: float = 1.0,
+    monitor_interval: float = 0.2,
+    aggregation_timeout: float = 60.0,
+    parent_timeout: Optional[float] = None,
+) -> dict:
+    """One §5.10 chain-of-chains round over real TCP, both levels'
+    closed forms checked (docs/PROTOCOL.md §15).
+
+    Starts a parent broker and a child broker (all ``orgs`` child
+    sessions on the latter — one broker per org is the deployment
+    picture, one broker hosting them all is the same wire path), runs
+    :func:`~repro.net.client.run_hierarchical_round_net`, and asserts:
+
+      * per surviving org ``g`` with ``f_g`` dead learners:
+        ``MessageStats == 4(n_g − f_g) + 2 f_g + 1`` (the §5 form for a
+        single-group session from a ``subgroups=orgs`` build, ``+1`` for
+        the org's one global publish) and one monitor repost per dead
+        learner;
+      * parent level: ``hierarchy_total == 2(c − f)`` for ``c = orgs``
+        and ``f`` whole-org crashes — one ``post_org_average`` up and
+        one ``get_org_average`` down per surviving org, nothing per
+        crashed org (elided like a dead learner);
+      * crashed orgs come back in ``crashed_orgs`` exactly as planned;
+      * (``bit_identical``) the parent average is ``np.array_equal`` to
+        ``run_hierarchical_round_sim``'s for the same inputs — and, on
+        a fully clean round, to the flat ``run_safe_round(subgroups=
+        orgs)``'s, the §5.10 anonymization-changes-nothing claim.
+
+    The default monitor cadence is gentler than ``run_paper_scale``'s
+    (1.0 s progress window): ``orgs`` chains long-poll concurrently on
+    one client event loop, and at n=128 a live-but-unscheduled learner
+    must not read as dead or the §5.3 monitor walks its posting onward
+    and the exact per-org form no longer holds.
+
+    Returns a flat row for the bench harness.
+    """
+    from repro.core.protocol import run_hierarchical_round_sim, run_safe_round
+    from repro.net.client import run_hierarchical_round_net
+    from repro.topology import RingTopology
+
+    rng = np.random.RandomState(seed)
+    vals = rng.uniform(-1, 1, (n, V)).astype(np.float32)
+    failed = sorted(set(failed_nodes))
+    dead_orgs = sorted(set(failed_orgs))
+    chains = RingTopology(n, orgs).group_chains(node_base=1)
+    ensure_fd_headroom(4 * n + 128)
+
+    if parent_timeout is None:
+        # with a planned whole-org crash the parent must give up on the
+        # missing org; without one it should never elide
+        parent_timeout = 2.0 if dead_orgs else aggregation_timeout
+    broker_kw = dict(progress_timeout=progress_timeout,
+                     monitor_interval=monitor_interval,
+                     aggregation_timeout=aggregation_timeout)
+    parent = SafeBroker(**broker_kw)
+    child = SafeBroker(**broker_kw)
+    paddr = await parent.start()
+    caddr = await child.start()
+    try:
+        res = await run_hierarchical_round_net(
+            vals, paddr, {g: caddr for g in range(orgs)},
+            failed_orgs=dead_orgs, failed_nodes=failed,
+            initiator_fails=initiator_fails,
+            aggregation_timeout=aggregation_timeout,
+            parent_timeout=parent_timeout)
+    finally:
+        await parent.stop()
+        await child.stop()
+
+    f_orgs = len(dead_orgs)
+    live = [g for g in range(orgs) if g not in dead_orgs]
+    per_org = {}
+    for g in live:
+        n_g = len(chains[g])
+        f_g = sum(1 for node in failed if node in chains[g])
+        expected = 4 * (n_g - f_g) + 2 * f_g + 1
+        got = res.org_results[g].stats["aggregation_total"]
+        if not initiator_fails and got != expected:
+            raise AssertionError(
+                f"org {g} (n_g={n_g}, f_g={f_g}): {got} aggregation "
+                f"messages, §5.10 per-org form says {expected}")
+        if not initiator_fails and res.org_results[g].monitor_reposts != f_g:
+            raise AssertionError(
+                f"org {g}: {res.org_results[g].monitor_reposts} monitor "
+                f"reposts for {f_g} dead learners")
+        per_org[g] = got
+    hier_total = res.parent_stats["hierarchy_total"]
+    if hier_total != 2 * (orgs - f_orgs):
+        raise AssertionError(
+            f"parent level: {hier_total} hierarchy messages, closed "
+            f"form says {2 * (orgs - f_orgs)} for c={orgs} f={f_orgs}")
+    if res.elided_orgs != tuple(dead_orgs):
+        raise AssertionError(
+            f"planned org crashes {dead_orgs} but parent elided "
+            f"{res.elided_orgs}")
+    if bit_identical:
+        sim = run_hierarchical_round_sim(
+            vals, orgs=orgs, failed_orgs=dead_orgs, failed_nodes=failed,
+            initiator_fails=initiator_fails,
+            aggregation_timeout=3.0 if initiator_fails else 8.0)
+        if not np.array_equal(sim.average, res.average):
+            raise AssertionError(
+                f"n={n} orgs={orgs}: hierarchical wire average is not "
+                f"bit-identical to the simulation")
+        if not dead_orgs and not failed and not initiator_fails:
+            flat = run_safe_round(vals, subgroups=orgs)
+            if not np.array_equal(flat.average, res.average):
+                raise AssertionError(
+                    f"n={n} orgs={orgs}: clean hierarchical average is "
+                    f"not bit-identical to the flat subgroup round")
+    return {
+        "protocol": "hierarchical",
+        "n": n,
+        "orgs": orgs,
+        "V": V,
+        "failed_orgs": f_orgs,
+        "failed_nodes": len(failed),
+        "org_messages": {str(g): per_org[g] for g in live},
+        "hierarchy_messages": hier_total,
+        "expected_hierarchy_messages": 2 * (orgs - f_orgs),
+        "elided_orgs": list(res.elided_orgs),
+        "wall_s": res.wall_time,
+        "bit_identical": bool(bit_identical),
+    }
+
+
+async def run_shard_failover_load(
+    *,
+    tenants: int = 3,
+    rounds_per_tenant: int = 2,
+    n: int = 4,
+    V: int = 32,
+    shards: int = 2,
+    kill_shard: int = 0,
+    kill_after_round: int = 0,
+    seed: int = 0,
+    progress_timeout: float = 0.4,
+    monitor_interval: float = 0.1,
+    aggregation_timeout: float = 30.0,
+) -> dict:
+    """Kill a shard worker mid-run; tenants recover onto the survivors.
+
+    Starts a :class:`~repro.net.shard.ShardedBroker` behind its
+    dispatcher (``use_reuseport=False`` — deterministic across
+    platforms). Each tenant opens a
+    :class:`~repro.net.client.PersistentNetSession` (so its session is
+    PINNED to whatever shard the dispatcher's round-robin landed it on)
+    and runs rounds; once every tenant has finished round
+    ``kill_after_round``, worker ``kill_shard`` is terminated. Tenants
+    whose session lives on the dead shard see
+    :class:`~repro.net.client.ShardDeadError` on their next round — the
+    deterministic §12 surface, not a hang — abandon the stranded
+    session, and replay the round as a fresh one-shot session through
+    the shared dispatcher address (which routes ``create_session`` to
+    LIVE shards only) with the SAME seeds and counter base the
+    persistent session would have used (``r * (V+1)``), so the
+    recovered average is bit-identical to the uninterrupted
+    simulation's.
+
+    Asserts every round of every tenant (including each replayed one)
+    matches the §5 closed form and the sim bit-for-bit, and that at
+    least one tenant actually exercised the recovery path (with
+    ``tenants >= shards`` the round-robin guarantees the dead shard
+    owned at least one session). Returns a flat row for the bench/test
+    harness.
+    """
+    from repro.core.protocol import run_safe_round
+    from repro.net.client import ShardDeadError
+
+    rng = np.random.RandomState(seed)
+    tenant_vals = [rng.uniform(-1, 1, (n, V)).astype(np.float32)
+                   for _ in range(tenants)]
+    ensure_fd_headroom(4 * n * tenants + 128)
+
+    broker = ShardedBroker(shards, use_reuseport=False,
+                           progress_timeout=progress_timeout,
+                           monitor_interval=monitor_interval,
+                           aggregation_timeout=aggregation_timeout)
+    addr = await broker.start()
+    killed = asyncio.Event()
+    barrier_done = [asyncio.Event() for _ in range(tenants)]
+    recoveries = [0] * tenants
+
+    async def kill_worker() -> None:
+        for ev in barrier_done:
+            await ev.wait()
+        loop = asyncio.get_running_loop()
+        proc = broker._procs[kill_shard]
+        proc.terminate()
+        await loop.run_in_executor(None, proc.join, 10.0)
+        killed.set()
+
+    def check(t: int, r: int, res, vals) -> None:
+        got = res.stats["aggregation_total"]
+        if got != 4 * n:
+            raise RuntimeError(
+                f"tenant {t} round {r}: {got} aggregation messages, "
+                f"§5 closed form says {4 * n}")
+        sim = run_safe_round(
+            vals, provisioning_seed=0xC0FFEE + t,
+            learner_master=0x5EED + 17 * t, counter=r * (V + 1))
+        if not np.array_equal(sim.average, res.average):
+            raise RuntimeError(
+                f"tenant {t} round {r}: round not bit-identical to "
+                f"the sim")
+
+    async def tenant(t: int) -> None:
+        vals = tenant_vals[t]
+        sess = PersistentNetSession(
+            addr, n, provisioning_seed=0xC0FFEE + t,
+            learner_master=0x5EED + 17 * t, words_per_round=V + 1)
+        await sess.open()
+        stranded = False
+        try:
+            for r in range(rounds_per_tenant):
+                if not stranded:
+                    try:
+                        res = await sess.run_round(vals)
+                    except ShardDeadError:
+                        # session stranded on the killed worker: abandon
+                        # it and replay this round (and the rest) as
+                        # one-shot sessions via the dispatcher, which
+                        # only routes creates to live shards
+                        stranded = True
+                        recoveries[t] += 1
+                if stranded:
+                    res = await run_safe_round_net(
+                        vals, addr,
+                        provisioning_seed=0xC0FFEE + t,
+                        learner_master=0x5EED + 17 * t,
+                        counter=r * (V + 1))
+                check(t, r, res, vals)
+                if r == kill_after_round:
+                    barrier_done[t].set()
+                    await killed.wait()
+        finally:
+            try:
+                await sess.close()
+            except (ShardDeadError, OSError):
+                pass  # the stranded session's shard is gone with it
+
+    try:
+        await asyncio.gather(kill_worker(),
+                             *(tenant(t) for t in range(tenants)))
+        dead = broker.dead_shards()
+    finally:
+        await broker.stop()
+
+    if kill_shard not in dead:
+        raise AssertionError(f"killed shard {kill_shard} not reported "
+                             f"dead (dead set: {sorted(dead)})")
+    total_recoveries = sum(recoveries)
+    if rounds_per_tenant > kill_after_round + 1 and total_recoveries == 0:
+        raise AssertionError(
+            "no tenant hit the dead shard after the kill — the recovery "
+            "path went unexercised (dispatcher routing drifted?)")
+    return {
+        "protocol": "shard_failover",
+        "tenants": tenants,
+        "rounds_per_tenant": rounds_per_tenant,
+        "n": n,
+        "shards": shards,
+        "killed_shard": kill_shard,
+        "recoveries": total_recoveries,
+        "rounds_completed": tenants * rounds_per_tenant,
+        "bit_identical": True,
+    }

@@ -133,6 +133,14 @@ OPS: Tuple[str, ...] = (
     # buffers already in flight. Admin-class: never counted, never
     # timed. Appended per the §9 additive-opcode policy — no bump.
     "advance_round",
+    # hierarchical chain-of-chains (docs/PROTOCOL.md §15, paper §5.10):
+    # a child org's broker posts its anonymized group average UP to a
+    # parent session (post_org_average, counted+timed in HierStats) and
+    # long-polls the folded parent average back DOWN (get_org_average,
+    # counted in HierStats). Never counted in MessageStats — the §5
+    # per-org closed forms stay exact. Appended per §9 — no bump.
+    "post_org_average",
+    "get_org_average",
 )
 OPCODE = {name: i + 1 for i, name in enumerate(OPS)}
 OPNAME = {i + 1: name for i, name in enumerate(OPS)}

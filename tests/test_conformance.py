@@ -300,15 +300,18 @@ class TestSafeMatrix:
         average, and round 2 — initiator back, running on the same
         session — still meets the exact 4n form at its counter base.
 
-        Runs under the broker's DEFAULT §5.3 monitor cadence (progress
-        1.0 s / interval 0.25 s), not the harness's aggressive 0.4/0.1:
-        under the aggressive cadence the monitor walks a live-but-
-        waiting node's posting through repeated reposts during the
-        election stall and its contribution drops out of the published
-        average with crashed_nodes=() — a pre-existing §5.3 × §5.4
-        interaction (reproduced at PR 7 HEAD, sequential persistent
-        rounds, no pipelining), tracked in ROADMAP, not a pipelining
-        regression."""
+        Runs under the harness's AGGRESSIVE §5.3 monitor cadence
+        (progress 0.4 s / interval 0.1 s, the `_with_broker` default) —
+        the regression guard for the §5.3 × §5.4 repost-walk bug: the
+        monitor used to walk the last survivor's stuck posting around
+        live-but-consumed nodes during the election stall until a
+        spurious "self" verdict dropped its contribution from the
+        published average with crashed_nodes=(). Post-fix the recovery
+        is cadence-invariant: the monitor stalls the unconsumable
+        posting (0 reposts), the §5.4 election restarts the round, and
+        the restarted chain orders exactly ONE repost around the dead
+        initiator — so reposts, elections, and average bits must all
+        equal the sim's, at this cadence and the default alike."""
         vals = [_vals(130 + i) for i in range(3)]
 
         async def go(addr):
@@ -323,21 +326,21 @@ class TestSafeMatrix:
                 r2 = await sess.collect_round_pipelined()
                 return r0, r1, r2
 
-        r0, r1, r2 = asyncio.run(_with_broker(
-            go, progress_timeout=1.0, monitor_interval=0.25))
+        r0, r1, r2 = asyncio.run(_with_broker(go))
         assert np.array_equal(run_safe_round(vals[0]).average, r0.average)
         assert r0.stats["aggregation_total"] == 4 * N
         sim1 = run_safe_round(vals[1], initiator_fails=True,
                               aggregation_timeout=3.0, counter=V)
-        assert r1.initiator_elections >= 1
-        # bit-identity to the sim requires the wire's recovery to have
-        # been the sim's: exactly one election, no reposts. A heavily
-        # loaded host can legitimately escalate (a second timeout cycle
-        # before the winner finishes), which changes the fold order —
-        # then only the survivors'-mean convergence is guaranteed
-        if (r1.initiator_elections == sim1.initiator_elections
-                and r1.monitor_reposts == sim1.monitor_reposts):
-            assert np.array_equal(sim1.average, r1.average)
+        # cadence-invariant recovery: exactly one election, exactly one
+        # repost (the restarted chain around the dead initiator), no
+        # survivor stranded, and the average bit-identical to the sim —
+        # regardless of which survivor wins the real-time election race
+        # (the contributor SET is deterministic, so the bits are too)
+        assert sim1.monitor_reposts == 1
+        assert r1.initiator_elections == sim1.initiator_elections == 1
+        assert r1.monitor_reposts == sim1.monitor_reposts == 1
+        assert r1.crashed_nodes == ()
+        assert np.array_equal(sim1.average, r1.average)
         np.testing.assert_allclose(r1.average, vals[1][1:].mean(0),
                                    atol=1e-3)
         sim2 = run_safe_round(vals[2], counter=2 * V)
@@ -402,3 +405,131 @@ class TestBonMatrix:
             assert r.messages == bon_expected_messages(N)
             assert np.array_equal(
                 run_bon_round(vals, seed=seed).average, r.average)
+
+
+class TestHierarchicalMatrix:
+    """§5.10 chain-of-chains column (docs/PROTOCOL.md §15): N=8 as two
+    child orgs of 4, each running its full SAFE chain on a real child
+    broker and posting its group average to a real parent broker.
+
+        fault ∈ {clean, learner_crash (one dead inside a child),
+                 org_crash (a whole child org offline),
+                 aggressive_cadence (child initiator crashes mid-round
+                 under the harness's aggressive §5.3 monitor cadence —
+                 the §5.3×§5.4 regression surface, hierarchical twin)}
+
+    Every cell asserts BOTH levels' closed forms — per surviving org
+    ``4(n_g − f_g) + 2 f_g + 1`` and parent ``hierarchy_total ==
+    2(c − f)`` — and bit-identity of the parent average against
+    ``run_hierarchical_round_sim`` for the same inputs (clean also
+    against the flat ``run_safe_round(subgroups=2)``: anonymizing the
+    org boundary must not change a single bit)."""
+
+    ORGS = 2
+    N_G = N // 2
+
+    def _round(self, vals, *, child_agg=30.0, parent_timeout=30.0, **kw):
+        from repro.net import run_hierarchical_round_net
+
+        async def go():
+            parent = SafeBroker(aggregation_timeout=30.0,
+                                progress_timeout=0.4, monitor_interval=0.1)
+            child = SafeBroker(aggregation_timeout=child_agg,
+                               progress_timeout=0.4, monitor_interval=0.1)
+            paddr = await parent.start()
+            caddr = await child.start()
+            try:
+                return await run_hierarchical_round_net(
+                    vals, paddr, {g: caddr for g in range(self.ORGS)},
+                    aggregation_timeout=child_agg,
+                    parent_timeout=parent_timeout, **kw)
+            finally:
+                await parent.stop()
+                await child.stop()
+
+        return asyncio.run(go())
+
+    def _check_org_forms(self, res, dead_nodes=(), skip_orgs=()):
+        from repro.topology import RingTopology
+
+        chains = RingTopology(N, self.ORGS).group_chains(node_base=1)
+        for g, r in res.org_results.items():
+            if g in skip_orgs:
+                continue
+            f_g = sum(1 for d in dead_nodes if d in chains[g])
+            expected = 4 * (self.N_G - f_g) + 2 * f_g + 1
+            assert r.stats["aggregation_total"] == expected, (g, r.stats)
+            assert r.monitor_reposts == f_g, (g, r.monitor_reposts)
+
+    def test_clean_cell(self):
+        from repro.core.protocol import run_hierarchical_round_sim
+
+        vals = _vals(140)
+        res = self._round(vals)
+        sim = run_hierarchical_round_sim(vals, orgs=self.ORGS)
+        flat = run_safe_round(vals, subgroups=self.ORGS)
+        self._check_org_forms(res)
+        assert res.parent_stats["hierarchy_total"] == 2 * self.ORGS
+        assert res.elided_orgs == ()
+        for g in range(self.ORGS):
+            assert np.array_equal(res.org_averages[g], sim.org_averages[g])
+        assert np.array_equal(res.average, sim.average)
+        assert np.array_equal(res.average, flat.average)
+
+    def test_learner_crash_cell(self):
+        """One dead learner inside org 0: the child chain fails over
+        exactly as a flat §5.3 round would (4(n_g−1)+2+1, one repost),
+        the OTHER org never notices, and the parent still hears from
+        both orgs."""
+        from repro.core.protocol import run_hierarchical_round_sim
+
+        vals = _vals(141)
+        res = self._round(vals, failed_nodes=(3,))
+        sim = run_hierarchical_round_sim(vals, orgs=self.ORGS,
+                                         failed_nodes=(3,))
+        self._check_org_forms(res, dead_nodes=(3,))
+        assert res.parent_stats["hierarchy_total"] == 2 * self.ORGS
+        assert res.elided_orgs == ()
+        assert np.array_equal(res.average, sim.average)
+
+    def test_org_crash_cell(self):
+        """A whole child org offline: the parent elides it like a dead
+        learner — no messages from it, ``hierarchy_total == 2(c−1)``,
+        and the parent average folds the survivors only."""
+        from repro.core.protocol import run_hierarchical_round_sim
+
+        vals = _vals(142)
+        res = self._round(vals, failed_orgs=(1,), parent_timeout=1.5)
+        sim = run_hierarchical_round_sim(vals, orgs=self.ORGS,
+                                         failed_orgs=(1,))
+        self._check_org_forms(res, skip_orgs=(1,))
+        assert res.elided_orgs == sim.elided_orgs == (1,)
+        assert res.parent_stats["crashed_orgs"] == [1]
+        assert res.parent_stats["hierarchy_total"] == 2 * (self.ORGS - 1)
+        assert 1 not in res.org_results
+        assert np.array_equal(res.average, sim.average)
+
+    def test_aggressive_cadence_cell(self):
+        """Child org 0's initiator posts once then crashes (Fig. 5)
+        under the aggressive monitor cadence — the hierarchical twin of
+        ``TestSafeMatrix.test_pipelined_reelection_between_rounds``.
+        Post-fix the recovery is cadence-invariant: ONE §5.4 election,
+        ONE repost, and the org average the child posts upward is
+        bit-identical to the sim's — so the parent average is too. A
+        regression to the §5.3×§5.4 repost-walk bug would silently
+        drop a survivor from the GLOBAL cross-org average here."""
+        from repro.core.protocol import run_hierarchical_round_sim
+
+        vals = _vals(143)
+        res = self._round(vals, initiator_fails=True, child_agg=3.0)
+        sim = run_hierarchical_round_sim(vals, orgs=self.ORGS,
+                                         initiator_fails=True,
+                                         aggregation_timeout=3.0)
+        r0, s0 = res.org_results[0], sim.org_results[0]
+        assert r0.initiator_elections == s0.initiator_elections == 1
+        assert r0.monitor_reposts == s0.monitor_reposts == 1
+        # org 1 is untouched by org 0's re-election
+        self._check_org_forms(res, skip_orgs=(0,))
+        assert res.parent_stats["hierarchy_total"] == 2 * self.ORGS
+        assert np.array_equal(res.org_averages[0], sim.org_averages[0])
+        assert np.array_equal(res.average, sim.average)

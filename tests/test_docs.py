@@ -5,8 +5,10 @@ tests parse its markdown tables and compare them — entry by entry, both
 directions — against the registries in ``repro.net.wire``
 (``OPCODE``/``VALUE_TAGS``/``ARRAY_DTYPES``) and
 ``repro.core.controller`` (``CALL_OPS``/``WAIT_KINDS``/``TIMED_OPS``/
-``MessageStats``) and ``repro.core.bon_controller`` (``BON_OPS``/
-``BON_TIMED_OPS``/``BonStats`` — the §14 baseline plane). Adding an
+``MessageStats`` plus ``HIER_OPS``/``HIER_TIMED_OPS``/``HierStats`` —
+the §15 hierarchical parent plane) and ``repro.core.bon_controller``
+(``BON_OPS``/``BON_TIMED_OPS``/``BonStats`` — the §14 baseline
+plane). Adding an
 opcode without documenting it, or editing the doc without changing the
 code, fails tier-1.
 """
@@ -17,7 +19,10 @@ import re
 import pytest
 
 from repro.core.bon_controller import BON_OPS, BON_TIMED_OPS, BonStats
-from repro.core.controller import CALL_OPS, MessageStats, TIMED_OPS, WAIT_KINDS
+from repro.core.controller import (
+    CALL_OPS, HIER_OPS, HIER_TIMED_OPS, HierStats, MessageStats, TIMED_OPS,
+    WAIT_KINDS,
+)
 from repro.net import wire
 
 DOC = os.path.join(os.path.dirname(__file__), "..", "docs", "PROTOCOL.md")
@@ -90,25 +95,31 @@ class TestOpcodeTable:
         assert by_cls["chunk"] == {"post_chunk", "get_chunk"}
         assert by_cls["engine"] == {"submit_session", "wait_session"}
         assert by_cls["bon"] == set(BON_OPS)
+        assert by_cls["hier"] == set(HIER_OPS)
         assert by_cls["admin"] == (set(wire.OPS) - set(CALL_OPS)
                                    - set(WAIT_KINDS) - set(BON_OPS)
+                                   - set(HIER_OPS)
                                    - by_cls["chunk"] - by_cls["engine"])
 
     def test_counted_column_is_messagestats(self, tables):
         counted = {r["op"] for r in self._rows(tables)
                    if r["counted"] == "yes"}
         # the §5 accounting: counted SAFE ops are exactly the
-        # MessageStats fields (the controller's client ops), and the §14
-        # baseline's counted ops are exactly the BonStats fields — the
-        # two tallies never mix but every counted op lives in one
+        # MessageStats fields (the controller's client ops), the §14
+        # baseline's counted ops are exactly the BonStats fields, and
+        # the §15 parent hop's are exactly the HierStats fields — the
+        # three tallies never mix but every counted op lives in one
         fields = ({f.name for f in dataclasses.fields(MessageStats)}
-                  | {f.name for f in dataclasses.fields(BonStats)})
+                  | {f.name for f in dataclasses.fields(BonStats)}
+                  | {f.name for f in dataclasses.fields(HierStats)})
         assert counted == fields
-        assert counted == set(CALL_OPS) | set(WAIT_KINDS) | set(BON_OPS)
+        assert counted == (set(CALL_OPS) | set(WAIT_KINDS) | set(BON_OPS)
+                           | set(HIER_OPS))
 
     def test_timed_column_matches(self, tables):
         timed = {r["op"] for r in self._rows(tables) if r["timed"] == "yes"}
-        assert timed == set(TIMED_OPS) | set(BON_TIMED_OPS)
+        assert timed == (set(TIMED_OPS) | set(BON_TIMED_OPS)
+                         | set(HIER_TIMED_OPS))
 
 
 class TestValueTagTable:

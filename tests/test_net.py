@@ -1165,7 +1165,8 @@ class TestShardRouting:
 
                     async def drive(node, gen):
                         c = await WireClient(
-                            addr[0], wrong, node=node).connect()
+                            addr[0], wrong, node=node,
+                            token=admin.node_tokens[node]).connect()
                         try:
                             await drive_learner(
                                 gen, c, sid,
@@ -1699,3 +1700,270 @@ class TestObservability:
                 == _w.DEFAULT_CHUNK_WORDS)
         assert _resolve_chunk_words(None, 64) is None
         assert _resolve_chunk_words(256, 1 << 26) == 256
+
+
+class TestAuth:
+    """PROTOCOL.md §15 session tokens: every sessioned op must present
+    the opaque token minted at ``create_session``; denials come back as
+    counted-neutral ``auth_failed`` responses (never in MessageStats,
+    never timed), and ``reset_round`` rotates the whole grant."""
+
+    BROKER_KW = dict(progress_timeout=0.4, monitor_interval=0.1,
+                     aggregation_timeout=30.0)
+
+    def test_tokenless_and_wrong_token_rejected(self):
+        from repro.net import WireClient
+
+        async def go():
+            broker = SafeBroker(**self.BROKER_KW)
+            addr = await broker.start()
+            admin = await WireClient(*addr).connect()
+            anon = await WireClient(*addr).connect()  # never gets a token
+            try:
+                grant = await admin.request(
+                    "create_session", {"groups": {0: [1, 2, 3]}})
+                sid = grant["session"]
+                assert grant["token"]
+                assert set(grant["node_tokens"]) == {1, 2, 3}
+                assert len(set(grant["node_tokens"].values())) == 3
+
+                # token-less op: rejected, with the op echoed back
+                r_missing = await anon.request("get_stats",
+                                               {"session": sid})
+                # made-up token: rejected
+                r_unknown = await anon.request(
+                    "get_stats", {"session": sid, "token": "f" * 32})
+                # node 1's token cannot act as node 2 (identity check)
+                r_imperson = await anon.request(
+                    "post_aggregate",
+                    {"session": sid, "token": grant["node_tokens"][1],
+                     "from_node": 2})
+                # node tokens cannot run admin-only ops
+                r_admin_op = await anon.request(
+                    "reset_round",
+                    {"session": sid, "token": grant["node_tokens"][1]})
+                # ...while its own identity is fine at the auth layer
+                # (short long-poll timeout: nothing is addressed to
+                # node 2, the point is it gets PAST auth)
+                r_self = await anon.request(
+                    "check_aggregate",
+                    {"session": sid, "token": grant["node_tokens"][2],
+                     "node": 2, "timeout": 0.2})
+                stats = await admin.request("get_stats", {"session": sid})
+            finally:
+                await anon.close()
+                await admin.close()
+                await broker.stop()
+            return r_missing, r_unknown, r_imperson, r_admin_op, r_self, stats
+
+        (r_missing, r_unknown, r_imperson, r_admin_op, r_self,
+         stats) = asyncio.run(go())
+        for r, why in ((r_missing, "missing"), (r_unknown, "unknown"),
+                       (r_imperson, "node 1"), (r_admin_op, "admin")):
+            assert r["status"] == "auth_failed", (why, r)
+        assert r_missing["op"] == "get_stats"
+        assert r_self.get("status") != "auth_failed", r_self
+        # counted-neutral: four denials, zero protocol messages
+        assert stats["auth_failures"] == 4
+        assert stats["aggregation_total"] == 0
+
+    def test_reset_round_rotates_tokens(self):
+        """A captured token is worthless after ``reset_round``: the
+        whole grant (admin + per-node) is re-minted, replaying the stale
+        one is an ``auth_failed``, and the fresh grant works."""
+        from repro.net import WireClient
+
+        async def go():
+            broker = SafeBroker(**self.BROKER_KW)
+            addr = await broker.start()
+            admin = await WireClient(*addr).connect()
+            try:
+                grant = await admin.request(
+                    "create_session", {"groups": {0: [1, 2]}})
+                sid = grant["session"]
+                stale = grant["token"]
+                stale_node = grant["node_tokens"][1]
+                # WireClient adopts the rotated grant from the response
+                grant2 = await admin.request("reset_round",
+                                             {"session": sid})
+                assert grant2["token"] != stale
+                assert grant2["node_tokens"][1] != stale_node
+                assert admin.token == grant2["token"]
+                r_stale = await admin.request(
+                    "get_stats", {"session": sid, "token": stale})
+                r_stale_node = await admin.request(
+                    "should_initiate",
+                    {"session": sid, "token": stale_node, "node": 1})
+                r_fresh = await admin.request("get_stats",
+                                              {"session": sid})
+            finally:
+                await admin.close()
+                await broker.stop()
+            return r_stale, r_stale_node, r_fresh
+
+        r_stale, r_stale_node, r_fresh = asyncio.run(go())
+        assert r_stale["status"] == "auth_failed"
+        assert r_stale_node["status"] == "auth_failed"
+        assert r_fresh.get("status") != "auth_failed"
+        assert r_fresh["auth_failures"] == 2
+
+    def test_full_round_under_auth_is_unchanged(self):
+        """The token plumbing is invisible to an honest round: same
+        closed form, same bits as the sim (the §15 counted-neutral
+        rule, asserted end-to-end)."""
+        vals = _vals(4, 16, seed=91)
+        sim = run_safe_round(vals)
+        net = _wire_round(vals)
+        assert np.array_equal(sim.average, net.average)
+        assert net.stats["aggregation_total"] == 4 * 4
+        assert net.stats["auth_failures"] == 0
+
+
+class TestTLS:
+    """Optional TLS on the broker listener (PROTOCOL.md §15): same
+    protocol, same bits, over an encrypted transport."""
+
+    def _certs(self, tmp_path):
+        import shutil
+        import subprocess
+
+        openssl = shutil.which("openssl")
+        if openssl is None:
+            pytest.skip("openssl not available for self-signed certs")
+        cert, key = tmp_path / "cert.pem", tmp_path / "key.pem"
+        subprocess.run(
+            [openssl, "req", "-x509", "-newkey", "rsa:2048",
+             "-keyout", str(key), "-out", str(cert), "-days", "1",
+             "-nodes", "-subj", "/CN=localhost"],
+            check=True, capture_output=True)
+        return str(cert), str(key)
+
+    def test_tls_round_bit_identical(self, tmp_path):
+        import ssl
+
+        cert, key = self._certs(tmp_path)
+        vals = _vals(4, 16, seed=92)
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=30.0,
+                                ssl_certfile=cert, ssl_keyfile=key)
+            addr = await broker.start()
+            ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_CLIENT)
+            ctx.check_hostname = False
+            ctx.verify_mode = ssl.CERT_NONE  # self-signed test cert
+            try:
+                return await run_safe_round_net(vals, addr, ssl=ctx)
+            finally:
+                await broker.stop()
+
+        res = asyncio.run(go())
+        sim = run_safe_round(vals)
+        assert np.array_equal(sim.average, res.average)
+        assert res.stats["aggregation_total"] == 4 * 4
+
+    def test_plaintext_client_cannot_speak_to_tls_broker(self, tmp_path):
+        from repro.net import ShardDeadError, WireClient, wire as _w
+
+        cert, key = self._certs(tmp_path)
+
+        async def go():
+            broker = SafeBroker(progress_timeout=0.4, monitor_interval=0.1,
+                                aggregation_timeout=30.0,
+                                ssl_certfile=cert, ssl_keyfile=key)
+            addr = await broker.start()
+            try:
+                c = await WireClient(*addr).connect()  # no ssl context
+                try:
+                    await asyncio.wait_for(
+                        c.request("get_metrics", {}), timeout=5.0)
+                    return None
+                except (ShardDeadError, _w.WireError, ConnectionError,
+                        OSError, asyncio.TimeoutError, EOFError) as e:
+                    return e
+                finally:
+                    await c.close()
+            finally:
+                await broker.stop()
+
+        assert asyncio.run(go()) is not None
+
+
+class TestHierarchicalWire:
+    """§5.10 chain-of-chains across two real brokers (parent + child
+    host): per-level closed forms and sim↔wire bit-identity. The full
+    fault matrix lives in tests/test_conformance.py."""
+
+    def _round(self, vals, orgs, **kw):
+        from repro.net import run_hierarchical_round_net
+
+        parent_timeout = kw.pop("parent_timeout", 30.0)
+        child_agg = kw.pop("aggregation_timeout", 30.0)
+
+        async def go():
+            parent = SafeBroker(aggregation_timeout=30.0,
+                                progress_timeout=0.4, monitor_interval=0.1)
+            child = SafeBroker(aggregation_timeout=child_agg,
+                               progress_timeout=0.4, monitor_interval=0.1)
+            paddr = await parent.start()
+            caddr = await child.start()
+            try:
+                return await run_hierarchical_round_net(
+                    vals, paddr, {g: caddr for g in range(orgs)},
+                    aggregation_timeout=child_agg,
+                    parent_timeout=parent_timeout, **kw)
+            finally:
+                await parent.stop()
+                await child.stop()
+
+        return asyncio.run(go())
+
+    def test_clean_two_orgs_matches_sim_and_flat(self):
+        from repro.core.protocol import run_hierarchical_round_sim
+
+        vals = _vals(8, 16, seed=93)
+        res = self._round(vals, 2)
+        sim = run_hierarchical_round_sim(vals, orgs=2)
+        flat = run_safe_round(vals, subgroups=2)
+        for g in (0, 1):
+            assert res.org_results[g].stats["aggregation_total"] == 4 * 4 + 1
+            assert np.array_equal(res.org_averages[g],
+                                  sim.org_averages[g])
+        assert res.parent_stats["hierarchy_total"] == 2 * 2
+        assert res.parent_stats["post_org_average"] == 2
+        assert res.parent_stats["get_org_average"] == 2
+        assert res.elided_orgs == ()
+        assert np.array_equal(res.average, sim.average)
+        assert np.array_equal(res.average, flat.average)
+
+    def test_whole_org_elided_like_a_dead_learner(self):
+        from repro.core.protocol import run_hierarchical_round_sim
+
+        vals = _vals(8, 16, seed=94)
+        res = self._round(vals, 2, failed_orgs=(1,), parent_timeout=1.5)
+        sim = run_hierarchical_round_sim(vals, orgs=2, failed_orgs=(1,))
+        assert res.elided_orgs == (1,)
+        assert res.parent_stats["crashed_orgs"] == [1]
+        assert res.parent_stats["hierarchy_total"] == 2 * 1
+        assert np.array_equal(res.average, sim.average)
+        # the surviving org ran its full chain untouched
+        assert res.org_results[0].stats["aggregation_total"] == 4 * 4 + 1
+
+
+class TestShardFailover:
+    """§12 dead-shard recovery end-to-end: kill a worker mid-tenant,
+    the stranded tenant sees a deterministic ``ShardDeadError``, and
+    the replayed round (fresh session on a live shard, same seeds and
+    counter) is bit-identical to the sim. The harness itself asserts
+    the closed forms and bit-identity per round."""
+
+    def test_kill_worker_mid_tenant_recovers_bit_identical(self):
+        from repro.net import run_shard_failover_load
+
+        row = asyncio.run(run_shard_failover_load(
+            tenants=3, rounds_per_tenant=2, n=4, V=32, shards=2))
+        # the dispatcher round-robins 3 sessions over 2 shards, so the
+        # killed shard owned >= 1: the recovery path MUST have fired
+        assert row["recoveries"] >= 1
+        assert row["rounds_completed"] == 6
+        assert row["killed_shard"] == 0
